@@ -1,0 +1,29 @@
+"""Benchmark utilities: min-over-repeats timing (paper §5 methodology)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def bench(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Minimum wall time (seconds) over ``repeats`` runs, after jit warmup.
+
+    The paper takes the minimum over 50 runs; on CPU we default to 5 to keep
+    the suite fast — pass repeats=50 for paper-exact methodology.
+    """
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

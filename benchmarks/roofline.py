@@ -1,0 +1,254 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh), TPU v5e constants:
+
+    compute  T_c = FLOPs_per_device / 197e12        [bf16 MXU peak]
+    memory   T_m = HBM_bytes_per_device / 819e9
+    network  T_n = collective_bytes_per_device / 50e9 [per-link ICI]
+
+FLOPs: the trip-count-corrected HLO dot count from the dry-run
+(``hlo_dot_flops`` — XLA's cost_analysis undercounts while-loop bodies, see
+launch/hlo_analysis.py).  On the CPU dry-run backend XLA promotes bf16 dots to
+f32 but the dot *shapes* (hence FLOPs) are unchanged.
+
+HBM bytes: analytic per-device estimate (documented lower bound):
+  train:   3 gathers of bf16 weights per microbatch (fwd + 2 remat/bwd reads)
+           + 20 B/param optimizer update on the local shard
+           + ~6 residual-sized activation tensors per layer per microbatch
+  prefill: 1 weight gather + activations
+  decode:  bf16 weights + full KV/state cache read + write per token
+
+MODEL_FLOPS: 6·N_active·T for train (2·N for fwd-only) + exact attention
+terms; the MODEL/HLO ratio flags remat/redundancy waste (full remat ⇒ ~0.75
+on train cells).
+
+Collectives: per-device ring-traffic estimates parsed from the partitioned
+HLO (launch/hlo_analysis.py ring formulas).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+GB = 1 << 30
+
+
+def count_params(cfg) -> Dict[str, float]:
+    from repro.models import build_model
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = 0
+    matmul = 0
+    embed = 0
+    for path, leaf in flat:
+        n = math.prod(leaf.shape)
+        total += n
+        name = str(path[-1])
+        if "embed" in str(path) and "table" in name:
+            embed += n
+        elif leaf.ndim >= 2:
+            matmul += n
+    active = matmul
+    if cfg.n_experts:
+        expert = 3 * cfg.d_model * cfg.moe_d_ff
+        active = matmul - (cfg.n_experts - cfg.n_experts_per_tok) * \
+            expert * cfg.n_layers
+    return {"total": total, "matmul": matmul, "active": active,
+            "embed": embed}
+
+
+def attention_flops_fwd(cfg, B, S) -> float:
+    d_attn = cfg.n_heads * cfg.hd if cfg.n_heads else 0
+    if cfg.family == "ssm":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        Q, N = cfg.ssm_chunk, cfg.ssm_state
+        per_layer = 2 * B * S * (Q * N + Q * d_inner + 2 * N * d_inner)
+        return per_layer * cfg.n_layers
+    if cfg.family == "hybrid":
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if cfg.block_pattern[i % len(cfg.block_pattern)] == "attn")
+        W = min(cfg.attn_window or S, S)
+        return 4 * B * S * W * d_attn * n_attn
+    if cfg.family == "encdec":
+        F = cfg.n_audio_frames
+        enc = 4 * B * F * F * d_attn * cfg.n_enc_layers
+        dec = (4 * B * S * S + 4 * B * S * F) * d_attn * cfg.n_layers
+        return enc + dec
+    return 4 * B * S * S * d_attn * cfg.n_layers
+
+
+def model_flops(cfg, shape, counts) -> float:
+    """Useful MODEL_FLOPS (6N·T train / 2N·T fwd + attention)."""
+    B, S = shape.batch, shape.seq
+    T = B * S
+    if shape.kind == "train":
+        return 6 * counts["active"] * T + 3 * attention_flops_fwd(cfg, B, S)
+    if shape.kind == "prefill":
+        return 2 * counts["active"] * T + attention_flops_fwd(cfg, B, S)
+    # decode: one token, full context
+    per_tok = 2 * counts["active"]
+    d_attn = cfg.n_heads * cfg.hd if cfg.n_heads else 0
+    if cfg.family == "ssm":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        attn = 4 * cfg.ssm_state * d_inner * cfg.n_layers
+    elif cfg.family == "hybrid":
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if cfg.block_pattern[i % len(cfg.block_pattern)] == "attn")
+        attn = 4 * min(cfg.attn_window, S) * d_attn * n_attn
+    elif cfg.family == "encdec":
+        attn = (4 * S + 4 * cfg.n_audio_frames) * d_attn * cfg.n_layers
+    else:
+        attn = 4 * S * d_attn * cfg.n_layers
+    return B * (per_tok + attn)
+
+
+def cache_bytes(cfg, shape) -> float:
+    """Global decode-cache bytes (bf16)."""
+    B, S = shape.batch, shape.seq
+    if cfg.family == "ssm":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        st = B * H * cfg.ssm_state * cfg.ssm_head_dim * 4
+        return (st + B * (cfg.ssm_conv - 1) * (d_inner + 2 * cfg.ssm_state) * 4) \
+            * cfg.n_layers
+    per_layer_kv = 2 * B * cfg.n_kv_heads * cfg.hd * 2
+    if cfg.family == "hybrid":
+        total = 0
+        for i in range(cfg.n_layers):
+            kind = cfg.block_pattern[i % len(cfg.block_pattern)]
+            if kind == "attn":
+                total += per_layer_kv * min(cfg.attn_window, S)
+            else:
+                total += B * cfg.lru_width * 4 * 4
+        return total
+    if cfg.family == "encdec":
+        return (per_layer_kv * S + per_layer_kv * cfg.n_audio_frames) \
+            * cfg.n_layers
+    return per_layer_kv * S * cfg.n_layers
+
+
+def hbm_bytes(cfg, shape, counts, n_chips, n_mb, tp=16) -> float:
+    """Per-device HBM traffic estimate (see module docstring)."""
+    B, S = shape.batch, shape.seq
+    P_bf16 = counts["matmul"] * 2
+    if shape.kind == "train":
+        weights = 3 * n_mb * P_bf16 / tp
+        optim = 20 * counts["total"] / n_chips
+        tokens_loc = B * S / n_chips
+        acts = 6 * 2 * tokens_loc * cfg.d_model * max(cfg.n_layers, 1) * n_mb / max(n_mb, 1)
+        return weights + optim + acts
+    if shape.kind == "prefill":
+        tokens_loc = B * S / n_chips
+        return P_bf16 / tp + 6 * 2 * tokens_loc * cfg.d_model * max(cfg.n_layers, 1)
+    return P_bf16 / tp + 2 * cache_bytes(cfg, shape) / n_chips
+
+
+def sig_model_flops(shape, n_chips) -> float:
+    """Analytic FLOPs for the sig-kernel workload cells: one Δ matmul per
+    pair (2·L²·d, the MXU part) + ~10 VPU flops per refined PDE cell; the
+    gradient cell pays ~3x (forward + adjoint + dΔ accumulation)."""
+    B, L, d = shape.batch, shape.seq, 8
+    pairs = float(B) * B
+    per_pair = 2 * L * L * d + 10 * L * L
+    mult = 3.0 if shape.kind == "sig_train" else 1.0
+    return pairs * per_pair * mult
+
+
+def analyze_results(path: str = "dryrun_results.json"):
+    from repro.models import get_config
+    from repro.launch.shapes import SHAPES, SIG_SHAPES
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for r in results:
+        if "skipped" in r or "error" in r:
+            rows.append(r)
+            continue
+        if r["arch"] == "sigkernel-workload":
+            shape = SIG_SHAPES[r["shape"]]
+            n_chips = r["n_chips"]
+            mf = sig_model_flops(shape, n_chips)
+            # dot flops (Δ matmuls) from HLO; PDE VPU flops analytic
+            pde = mf - 2 * shape.batch ** 2 * shape.seq ** 2 * 8 * \
+                (3.0 if shape.kind == "sig_train" else 1.0)
+            t_c = (r["hlo_dot_flops"] + pde / n_chips) / PEAK_FLOPS
+            delta_bytes = shape.batch ** 2 * shape.seq ** 2 * 4 / n_chips
+            t_m = 3 * delta_bytes / HBM_BW      # write Δ + stream it in fwd/solve
+            traffic = sum(c["traffic"] for c in r["collectives"].values())
+            t_n = traffic / ICI_BW
+            bound = max(t_c, t_m, t_n)
+            rows.append(dict(
+                r, model_flops=mf, t_compute=t_c, t_memory=t_m, t_network=t_n,
+                bottleneck=max((t_c, "compute"), (t_m, "memory"),
+                               (t_n, "collective"))[1],
+                roofline_fraction=(t_c / bound if bound else 0.0),
+                model_over_hlo=1.0, params_total=0, params_active=0))
+            continue
+        cfg = get_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+        n_chips = r["n_chips"]
+        counts = count_params(cfg)
+        n_mb = r.get("num_microbatches", 1)
+        mf = model_flops(cfg, shape, counts)
+        hlo_f = r["hlo_dot_flops"]               # per-device (SPMD module)
+        t_c = hlo_f / PEAK_FLOPS
+        t_m = hbm_bytes(cfg, shape, counts, n_chips, n_mb) / HBM_BW
+        traffic = sum(c["traffic"] for c in r["collectives"].values())
+        t_n = traffic / ICI_BW
+        dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))[1]
+        bound = max(t_c, t_m, t_n)
+        rows.append(dict(
+            r, model_flops=mf, t_compute=t_c, t_memory=t_m, t_network=t_n,
+            bottleneck=dom,
+            roofline_fraction=(t_c / bound if bound else 0.0),
+            model_over_hlo=(mf / (hlo_f * n_chips) if hlo_f else 0.0),
+            params_total=counts["total"], params_active=counts["active"],
+        ))
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | Tc (ms) | Tm (ms) | Tn (ms) | bound | "
+           "roofline frac | model/HLO flops | peak GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | SKIP | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | ERROR | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']*1e3:.2f} | {r['t_memory']*1e3:.2f} "
+            f"| {r['t_network']*1e3:.2f} | {r['bottleneck']} "
+            f"| {r['roofline_fraction']:.2f} | {r['model_over_hlo']:.2f} "
+            f"| {r['peak_bytes_per_device']/GB:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    import sys
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    rows = analyze_results(path)
+    print(markdown_table(rows))
+    out = path.replace(".json", "_roofline.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--repeats N]
+
+--full uses the paper's exact (B, L, d, N) cells (slow on CPU); the default
+quick mode scales them down but keeps the comparisons intact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--repeats", type=int, default=3)
+    args, _ = ap.parse_known_args()
+
+    from . import (table1_signatures, table2_sigkernels, fig1_truncation_sweep,
+                   fig2_length_sweep, grad_accuracy)
+
+    print("name,us_per_call,derived")
+    for mod in (table1_signatures, table2_sigkernels, fig1_truncation_sweep,
+                fig2_length_sweep, grad_accuracy):
+        for line in mod.run(quick=not args.full, repeats=args.repeats):
+            print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Distributed signature-kernel Gram matrices — the paper's workload at pod
+scale.
+
+The B×B Gram of PDE solves is tiled over a 2-D mesh: row-block over the
+``data`` axis, column-block over ``model``.  Each device solves its tile of
+Goursat problems locally (Pallas kernel on TPU); only the MMD reduction
+crosses devices.  Run with fake devices to see the sharded lowering:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/gram_matrix_distributed.py
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.sigkernel import sigkernel_gram
+from repro.data.synthetic import gbm_paths
+
+n_dev = len(jax.devices())
+mesh_shape = {1: (1, 1), 2: (2, 1), 4: (2, 2), 8: (4, 2),
+              512: (16, 16)}.get(n_dev, (n_dev, 1))
+mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+print(f"devices: {n_dev}, mesh: {dict(mesh.shape)}")
+
+B, L, d = 32, 64, 4
+X = gbm_paths(jax.random.PRNGKey(0), B, L, d)
+Y = gbm_paths(jax.random.PRNGKey(1), B, L, d)
+
+gram = jax.jit(
+    lambda x, y: sigkernel_gram(x, y, lam1=1, lam2=1),
+    in_shardings=(NamedSharding(mesh, P("data")),
+                  NamedSharding(mesh, P("model"))),
+    out_shardings=NamedSharding(mesh, P("data", "model")))
+
+with mesh:
+    K = gram(X, Y)
+    jax.block_until_ready(K)
+
+print("gram:", K.shape, "sharding:", K.sharding)
+print("K[:2,:2]:\n", K[:2, :2])
+
+# MMD from sharded Gram blocks — one scalar all-reduce
+mmd = float(K.mean())
+print("E[k(X,Y)] =", mmd)

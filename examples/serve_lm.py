@@ -1,0 +1,55 @@
+"""Serve a small LM: batched prefill + greedy decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b --tokens 32
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_config, build_model
+from repro.serve.step import make_prefill_step, make_decode_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.tokens
+    prefill = jax.jit(make_prefill_step(model, max_len=max_len))
+    decode = jax.jit(make_decode_step(model))
+
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0, cfg.vocab)
+    batch = {"tokens": prompt}
+    if cfg.family == "encdec":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (args.batch, cfg.n_audio_frames, cfg.d_model))
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    out = [nxt]
+    for t in range(args.prompt_len, max_len - 1):
+        nxt, _, caches = decode(params, caches, nxt,
+                                jnp.asarray(t, jnp.int32))
+        out.append(nxt)
+    toks = jnp.concatenate(out, axis=1)
+    jax.block_until_ready(toks)
+    dt = time.time() - t0
+    print(f"arch={args.arch} generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.tokens / dt:.0f} tok/s incl. compile)")
+    print("sample:", toks[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""End-to-end driver: train a sequence generator against a signature-kernel
+MMD score — the workload pySigLib exists to accelerate (neural-SDE-style
+market generation [16, 21, 24]).
+
+A transformer backbone (reduced deepseek-7b family by default; --full-100m
+builds a ~100M-parameter generator) maps noise paths to generated paths; the
+loss is the unbiased sig-kernel MMD against GBM target paths, differentiated
+through the exact one-pass backward (paper §3.4).
+
+    PYTHONPATH=src python examples/train_sigkernel_gan.py --steps 200
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses
+from repro.data.synthetic import gbm_paths
+from repro.models import get_config
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.optim.adamw import AdamW, cosine_schedule
+
+
+def build_generator(cfg, path_dim: int, noise_dim: int):
+    """Noise path (B, L, noise_dim) -> generated path (B, L, path_dim)."""
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        return {
+            "in_proj": L.dense_init(ks[0], noise_dim, cfg.d_model),
+            "layers": T.stack_init(ks[1], cfg),
+            "norm": L.rmsnorm_init(cfg.d_model),
+            "out_proj": L.dense_init(ks[2], cfg.d_model, path_dim, scale=0.02),
+        }
+
+    def apply(params, noise):
+        x = noise @ params["in_proj"]
+        positions = jnp.arange(x.shape[1])
+        x, _ = T.stack_apply(params["layers"], x, positions, cfg)
+        x = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+        inc = x @ params["out_proj"]
+        path = jnp.cumsum(inc, axis=1)           # increments -> path
+        return path - path[:, :1]                # pin at 0
+
+    return init, apply
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--length", type=int, default=24)
+    ap.add_argument("--dim", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full-100m", action="store_true",
+                    help="~100M-param generator instead of the CPU-tiny one")
+    ap.add_argument("--dyadic", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=20)
+    args = ap.parse_args()
+
+    base = get_config("deepseek-7b")
+    if args.full_100m:
+        cfg = base.replace(n_layers=12, d_model=768, n_heads=12,
+                           n_kv_heads=12, d_ff=3072, head_dim=64,
+                           vocab=256, scan_layers=True, remat=True,
+                           compute_dtype="float32")
+    else:
+        cfg = base.reduced().replace(n_layers=2)
+    noise_dim = 8
+
+    init, apply = build_generator(cfg, args.dim, noise_dim)
+    params = init(jax.random.PRNGKey(0))
+    n_params = sum(np.prod(p.shape) for p in jax.tree.leaves(params))
+    print(f"generator params: {n_params/1e6:.1f}M")
+
+    opt = AdamW(lr=cosine_schedule(args.lr, 20, args.steps),
+                weight_decay=0.0)
+    opt_state = opt.init(params)
+
+    def loss_fn(params, key, step):
+        noise = jax.random.normal(key, (args.batch, args.length, noise_dim))
+        fake = apply(params, noise)
+        real = gbm_paths(jax.random.fold_in(jax.random.PRNGKey(1), step),
+                         args.batch, args.length, args.dim)
+        return losses.mmd2(fake, real, lam1=args.dyadic, lam2=args.dyadic,
+                           unbiased=False, time_aug=True)
+
+    @jax.jit
+    def train_step(params, opt_state, key, step):
+        loss, grads = jax.value_and_grad(loss_fn)(params, key, step)
+        params, opt_state, m = opt.update(grads, opt_state, params)
+        return params, opt_state, loss, m["grad_norm"]
+
+    # fixed held-out evaluation set (large batch, fixed seeds)
+    eval_noise = jax.random.normal(jax.random.PRNGKey(100),
+                                   (64, args.length, noise_dim))
+    eval_real = gbm_paths(jax.random.PRNGKey(101), 64, args.length, args.dim)
+
+    @jax.jit
+    def eval_mmd(params):
+        return losses.mmd2(apply(params, eval_noise), eval_real,
+                           lam1=args.dyadic, lam2=args.dyadic, unbiased=False,
+                           time_aug=True)
+
+    first = float(eval_mmd(params))
+    print(f"initial eval sig-MMD^2: {first:.5f}")
+    t0 = time.time()
+    for step in range(args.steps):
+        key = jax.random.fold_in(jax.random.PRNGKey(2), step)
+        params, opt_state, loss, gnorm = train_step(params, opt_state, key,
+                                                    step)
+        if (step + 1) % args.log_every == 0:
+            print(f"step {step+1:4d}  train MMD^2 {float(loss):.5f}  "
+                  f"eval MMD^2 {float(eval_mmd(params)):.5f}  "
+                  f"gnorm {float(gnorm):.3f}  "
+                  f"({(time.time()-t0)/(step+1)*1e3:.0f} ms/step)", flush=True)
+    final = float(eval_mmd(params))
+    print(f"eval MMD^2: {first:.5f} -> {final:.5f} "
+          f"({'improved' if final < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — multi-pod JAX framework reproducing pySigLib (signatures + signature kernels)."""
+
+__version__ = "0.1.0"

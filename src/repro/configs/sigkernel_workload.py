@@ -1,0 +1,9 @@
+"""The paper's own workload: large-batch signature-kernel Gram computation
+(pySigLib Table 2 scaled to pod size).  Not an LM; used for the sig-specific
+dry-run and roofline rows."""
+from repro.models.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="sigkernel-workload", family="sigkernel",
+    n_layers=0, d_model=0, n_heads=0, n_kv_heads=0, d_ff=0, vocab=0,
+))

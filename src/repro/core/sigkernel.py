@@ -1,0 +1,389 @@
+"""Signature kernels via the Goursat PDE (pySigLib §3) in pure JAX.
+
+Forward (§3.1–§3.3): the 2nd-order discretisation (paper eq. (1))
+
+    k̂_{i+1,j+1} = (k̂_{i+1,j} + k̂_{i,j+1})·A(Δ_{ij}) − k̂_{i,j}·B(Δ_{ij}),
+    A(p) = 1 + p/2 + p²/12,   B(p) = 1 − p²/12,
+
+over a dyadically refined grid of independent orders (λ1, λ2) — paper design
+choice (1).  Δ is precomputed with ONE batched matmul (choice (2); on TPU this
+is the MXU-bound part for large d) and the dyadic refinement is applied
+ON-THE-FLY by index arithmetic (choice (3)); the refined path and refined Δ
+are never materialised.
+
+Backward (§3.4, Alg 4): pySigLib's novel *exact* gradient — differentiate the
+solver itself.  One reverse wavefront pass computes
+
+    ∂F/∂k̂_{i,j} = ∂F/∂k̂_{i+1,j}·A(Δ_{i,j−1}) + ∂F/∂k̂_{i,j+1}·A(Δ_{i−1,j})
+                  − ∂F/∂k̂_{i+1,j+1}·B(Δ_{i,j})
+    ∂F/∂Δ_{i,j} = ∂F/∂k̂_{i+1,j+1}·[(k̂_{i+1,j}+k̂_{i,j+1})·A'(Δ_{i,j})
+                  − k̂_{i,j}·B'(Δ_{i,j})]
+
+with A'(p) = 1/2 + p/6, B'(p) = −p/6, accumulated over refined cells onto the
+unrefined Δ, then pulled back through the Δ-matmul to the paths.  This is
+wired as ``jax.custom_vjp`` so ``jax.grad`` of any loss through
+``sigkernel`` uses the exact one-pass scheme.
+
+The reference solver here is a row-major double scan (oracle-grade, O(Lx·Ly)
+serial).  The production wavefront solver lives in
+``repro.kernels.sigkernel_pde`` (Pallas, anti-diagonal vectorisation with a
+rotating 3-buffer in VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .signature import path_increments
+from . import transforms as tf
+
+
+# ---------------------------------------------------------------------------
+# Δ precomputation (one batched matmul — paper design choice (2))
+# ---------------------------------------------------------------------------
+
+def delta_matrix(x: jax.Array, y: jax.Array, *, time_aug: bool = False,
+                 lead_lag: bool = False) -> jax.Array:
+    """Δ[i,j] = ⟨x_{i+1}−x_i, y_{j+1}−y_j⟩ as a batched matmul (..., Lx-1, Ly-1).
+
+    Transforms are applied to the *increments* (lead-lag / time-aug never
+    materialise the transformed path).
+    """
+    dx = tf.transform_increments(path_increments(x), time_aug, lead_lag)
+    dy = tf.transform_increments(path_increments(y), time_aug, lead_lag)
+    # the hot matmul — MXU on TPU, one bmm as in the paper
+    return jnp.einsum("...id,...jd->...ij", dx, dy)
+
+
+# ---------------------------------------------------------------------------
+# scheme coefficients
+# ---------------------------------------------------------------------------
+
+def _A(p):
+    return 1.0 + 0.5 * p + (1.0 / 12.0) * p * p
+
+
+def _B(p):
+    return 1.0 - (1.0 / 12.0) * p * p
+
+
+def _dA(p):
+    return 0.5 + p / 6.0
+
+
+def _dB(p):
+    return -p / 6.0
+
+
+# ---------------------------------------------------------------------------
+# forward solver (row-major reference; full-grid + final-value variants)
+# ---------------------------------------------------------------------------
+
+def _solve_rows(delta: jax.Array, lam1: int, lam2: int,
+                return_grid: bool) -> jax.Array:
+    """Solve the Goursat scheme for one Δ matrix (Lx, Ly) -> scalar or grid.
+
+    Dyadic refinement on-the-fly: refined cell (s,t) reads
+    p = Δ[s >> λ1, t >> λ2] · 2^{−(λ1+λ2)}.
+    """
+    Lx, Ly = delta.shape
+    nx, ny = Lx << lam1, Ly << lam2
+    scale = 2.0 ** (-(lam1 + lam2))
+    # refined row of Δ indices along t is static per row: repeat each col 2^λ2
+    def row_delta(s):
+        return jnp.repeat(delta[s >> lam1] * scale, 1 << lam2, axis=0)  # (ny,)
+
+    init_row = jnp.ones((ny + 1,), dtype=delta.dtype)
+
+    def row_body(prev_row, s):
+        p_row = row_delta(s)                              # (ny,)
+        a_row, b_row = _A(p_row), _B(p_row)
+
+        def col_body(left, inputs):
+            up, upleft, a, b = inputs
+            new = (left + up) * a - upleft * b
+            return new, new
+
+        _, rest = jax.lax.scan(
+            col_body, jnp.asarray(1.0, delta.dtype),
+            (prev_row[1:], prev_row[:-1], a_row, b_row))
+        new_row = jnp.concatenate([jnp.ones((1,), delta.dtype), rest])
+        return new_row, new_row if return_grid else None
+
+    last_row, rows = jax.lax.scan(row_body, init_row, jnp.arange(nx))
+    if return_grid:
+        grid = jnp.concatenate([init_row[None], rows], axis=0)  # (nx+1, ny+1)
+        return grid
+    return last_row[-1]
+
+
+def solve_goursat(delta: jax.Array, lam1: int = 0, lam2: int = 0,
+                  return_grid: bool = False) -> jax.Array:
+    """Batched Goursat solve.  delta: (..., Lx, Ly) -> (...,) or (..., nx+1, ny+1)."""
+    fn = functools.partial(_solve_rows, lam1=lam1, lam2=lam2,
+                           return_grid=return_grid)
+    for _ in range(delta.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(delta)
+
+
+def _solve_antidiag_one(delta: jax.Array, lam1: int, lam2: int) -> jax.Array:
+    """Vectorised anti-diagonal solver for one Δ (Lx, Ly) — the fast CPU path.
+
+    SIMD analogue of the paper's GPU wavefront: all cells of an anti-diagonal
+    are updated as one vector op; three rotating diagonal buffers.  Materialises
+    a skewed refined Δ (the Pallas kernel avoids even that).
+    """
+    Lx, Ly = delta.shape
+    nx, ny = Lx << lam1, Ly << lam2
+    scale = 2.0 ** (-(lam1 + lam2))
+    M = jnp.repeat(jnp.repeat(delta, 1 << lam1, axis=0), 1 << lam2, axis=1) * scale
+    if nx > ny:                      # keep the vector lane = shorter axis
+        M = M.T
+        nx, ny = ny, nx
+    # skew: Msk[i, t] = M[i, t - i]  (gather once)
+    t_idx = jnp.arange(nx + ny - 1)[None, :] - jnp.arange(nx)[:, None]
+    Msk = jnp.take_along_axis(M, jnp.clip(t_idx, 0, ny - 1), axis=1)
+    Msk = jnp.where((t_idx >= 0) & (t_idx < ny), Msk, 0.0)
+
+    lanes = jnp.arange(nx)
+
+    def body(carry, pdiag):
+        prev, prev2, t = carry
+        a, b = _A(pdiag), _B(pdiag)
+        up = jnp.concatenate([jnp.ones((1,), delta.dtype), prev[:-1]])
+        upleft = jnp.concatenate([jnp.ones((1,), delta.dtype), prev2[:-1]])
+        left = jnp.where(lanes == t, 1.0, prev)
+        upleft = jnp.where(lanes == t, 1.0, upleft)
+        cur = (left + up) * a - upleft * b
+        active = (lanes <= t) & (lanes > t - ny)
+        cur = jnp.where(active, cur, 0.0)
+        return (cur, prev, t + 1), None
+
+    init = (jnp.zeros((nx,), delta.dtype), jnp.zeros((nx,), delta.dtype),
+            jnp.asarray(0, jnp.int32))
+    (last, _, _), _ = jax.lax.scan(body, init, Msk.T)
+    return last[nx - 1]
+
+
+def solve_goursat_antidiag(delta: jax.Array, lam1: int = 0, lam2: int = 0) -> jax.Array:
+    """Batched vectorised wavefront solve: (..., Lx, Ly) -> (...,)."""
+    fn = functools.partial(_solve_antidiag_one, lam1=lam1, lam2=lam2)
+    for _ in range(delta.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(delta)
+
+
+# ---------------------------------------------------------------------------
+# exact backward (Alg 4) — reference implementation
+# ---------------------------------------------------------------------------
+
+def _backward_rows(delta: jax.Array, grid: jax.Array, gbar: jax.Array,
+                   lam1: int, lam2: int) -> jax.Array:
+    """Alg 4 for one pair: returns ∂F/∂Δ (Lx, Ly) given the forward grid.
+
+    Traverses the refined grid bottom-up, carrying one row of ∂F/∂k̂.
+    """
+    Lx, Ly = delta.shape
+    nx, ny = Lx << lam1, Ly << lam2
+    scale = 2.0 ** (-(lam1 + lam2))
+    dtype = delta.dtype
+
+    def row_delta(s):
+        # p for refined row s (cells (s, t), t = 0..ny-1)
+        return jnp.repeat(delta[s >> lam1] * scale, 1 << lam2, axis=0)
+
+    # g_row[j] = ∂F/∂k̂[s, j] for the row currently being consumed (length ny+1).
+    # Seed row s = nx: g[nx, ny] = ḡ and gradients flow leftward along the row,
+    #   g[nx, t] = g[nx, t+1] · A(Δ[nx-1, t])
+    # (cell (nx-1, t) writes k̂[nx, t+1] reading k̂[nx, t] with coefficient A).
+    p_lastrow = row_delta(nx - 1)
+
+    def seed_body(right, p):
+        g = right * _A(p)
+        return g, g
+
+    _, seed_rest = jax.lax.scan(seed_body, jnp.asarray(gbar, dtype),
+                                p_lastrow, reverse=True)
+    seed = jnp.concatenate([seed_rest, jnp.asarray(gbar, dtype)[None]])
+
+    def row_body(carry, s):
+        g_below = carry                  # ∂F/∂k̂[s+1, ·]
+        p_row = row_delta(s)             # Δ for cells (s, t)
+        # within-row reverse scan: g[s, t] depends on g[s, t+1] (right), and
+        # g[s+1, t] / g[s+1, t+1] (below row), all known.
+        #   g[s,t] = g[s+1,t]·A(p[s,t-1]) + g[s,t+1]·A(p[s-1,t]) − g[s+1,t+1]·B(p[s,t])
+        # NOTE the A coefficients use Δ of *neighbouring* cells (paper eq.).
+        p_left = jnp.concatenate([jnp.zeros((1,), dtype), p_row[:-1]])  # p[s, t-1]
+        p_above = row_delta(jnp.maximum(s - 1, 0))                      # p[s-1, t]
+        p_above = jnp.where(s >= 1, p_above, jnp.zeros_like(p_above))
+
+        # t = ny entry first: g[s, ny] = g[s+1, ny]·A(p[s, ny-1]) (nothing right of it)
+        g_last = g_below[ny] * _A(p_row[ny - 1])
+
+        def col_body(right, inputs):
+            below, belowright, pl, pa, pc = inputs
+            g = below * _A(pl) + right * _A(pa) - belowright * _B(pc)
+            return g, g
+
+        _, rest = jax.lax.scan(
+            col_body, g_last,
+            (g_below[:-1], g_below[1:], p_left, p_above, p_row),
+            reverse=True)
+        g_row = jnp.concatenate([rest, g_last[None]])
+        # seed lands at (nx, ny): when s == nx-1, the "below" row is the seed row
+        # handled by initialising carry with the seed.
+        # ∂F/∂Δ contributions of row s: cells (s,t) use g[s+1,t+1]
+        k_up = grid[s]                    # k̂[s, ·]
+        k_below = grid[s + 1]             # k̂[s+1, ·]
+        contrib = g_below[1:] * ((k_below[:-1] + k_up[1:]) * _dA(p_row)
+                                 - k_up[:-1] * _dB(p_row))     # (ny,)
+        # fold refined t-cells back onto unrefined columns
+        contrib = contrib.reshape(Ly, 1 << lam2).sum(axis=1) * scale
+        return g_row, (contrib, s >> lam1)
+
+    _, (contribs, row_ids) = jax.lax.scan(
+        row_body, seed, jnp.arange(nx - 1, -1, -1))
+    # contribs: (nx, Ly) rows emitted for refined rows nx-1..0; fold onto Lx rows
+    ddelta = jnp.zeros((Lx, Ly), dtype).at[row_ids].add(contribs)
+    return ddelta
+
+
+def solve_goursat_grad(delta: jax.Array, grid: jax.Array, gbar: jax.Array,
+                       lam1: int = 0, lam2: int = 0) -> jax.Array:
+    """Batched exact backward: (..., Lx, Ly), (..., nx+1, ny+1), (...,) -> (..., Lx, Ly)."""
+    fn = functools.partial(_backward_rows, lam1=lam1, lam2=lam2)
+    for _ in range(delta.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(delta, grid, gbar)
+
+
+# ---------------------------------------------------------------------------
+# the PDE-approximation backward of [30] (baseline for the accuracy benchmark)
+# ---------------------------------------------------------------------------
+
+def solve_goursat_grad_pde_approx(delta: jax.Array, grid: jax.Array,
+                                  gbar: jax.Array, lam1: int = 0,
+                                  lam2: int = 0) -> jax.Array:
+    """Approximate ∂F/∂Δ via the continuous adjoint (second Goursat PDE).
+
+    The continuum adjoint g(s,t) solves the same PDE from the far corner, i.e.
+    g = k̂ of the time-reversed pair.  Discretely this is only O(h)-accurate —
+    exactly the inexactness pySigLib §3.4 criticises in existing libraries.
+    """
+    rev = delta[..., ::-1, ::-1]
+    g_grid = solve_goursat(rev, lam1, lam2, return_grid=True)[..., ::-1, ::-1]
+    scale = 2.0 ** (-(lam1 + lam2))
+    p = delta * scale
+    rep = functools.partial(jnp.repeat, axis=-1)
+    # cell (s,t) refined values of k̂ and adjoint
+    Lx, Ly = delta.shape[-2:]
+
+    def per_pair(dmat, kgrid, ggrid, gb):
+        nx, ny = Lx << lam1, Ly << lam2
+        pref = jnp.repeat(jnp.repeat(dmat * scale, 1 << lam1, axis=0),
+                          1 << lam2, axis=1)               # (nx, ny)
+        contrib = ggrid[1:, 1:] * gb * ((kgrid[1:, :-1] + kgrid[:-1, 1:]) * _dA(pref)
+                                        - kgrid[:-1, :-1] * _dB(pref))
+        contrib = contrib.reshape(Lx, 1 << lam1, Ly, 1 << lam2).sum((1, 3))
+        return contrib * scale
+
+    fn = per_pair
+    for _ in range(delta.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(delta, grid, g_grid, gbar)
+
+
+# ---------------------------------------------------------------------------
+# public API with custom VJP (exact gradients, §3.4)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _sigkernel_from_delta(delta: jax.Array, lam1: int, lam2: int,
+                          use_pallas: bool) -> jax.Array:
+    if use_pallas:
+        from repro.kernels.sigkernel_pde import ops as pde_ops
+        return pde_ops.solve(delta, lam1, lam2)
+    return solve_goursat(delta, lam1, lam2)
+
+
+def _sk_fwd(delta, lam1, lam2, use_pallas):
+    if use_pallas:
+        from repro.kernels.sigkernel_pde import ops as pde_ops
+        k, grid = pde_ops.solve_with_grid(delta, lam1, lam2)
+    else:
+        grid = solve_goursat(delta, lam1, lam2, return_grid=True)
+        k = grid[..., -1, -1]
+    return k, (delta, grid)
+
+
+def _sk_bwd(lam1, lam2, use_pallas, res, gbar):
+    delta, grid = res
+    if use_pallas:
+        from repro.kernels.sigkernel_pde import ops as pde_ops
+        ddelta = pde_ops.solve_grad(delta, grid, gbar, lam1, lam2)
+    else:
+        ddelta = solve_goursat_grad(delta, grid, gbar, lam1, lam2)
+    return (ddelta,)
+
+
+_sigkernel_from_delta.defvjp(_sk_fwd, _sk_bwd)
+
+
+def sigkernel(x: jax.Array, y: jax.Array, *, lam1: int = 0, lam2: int = 0,
+              time_aug: bool = False, lead_lag: bool = False,
+              use_pallas: bool = False) -> jax.Array:
+    """Signature kernel k(x, y) = ⟨S(x), S(y)⟩ for batches of paths.
+
+    x: (..., Lx, d), y: (..., Ly, d)  ->  (...,).
+
+    Differentiable w.r.t. x and y with pySigLib's exact one-pass backward.
+    ``lam1``/``lam2`` are the independent dyadic refinement orders.
+    """
+    delta = delta_matrix(x, y, time_aug=time_aug, lead_lag=lead_lag)
+    return _sigkernel_from_delta(delta, lam1, lam2, use_pallas)
+
+
+def sigkernel_gram(X: jax.Array, Y: jax.Array, *, lam1: int = 0, lam2: int = 0,
+                   time_aug: bool = False, lead_lag: bool = False,
+                   use_pallas: bool = False) -> jax.Array:
+    """Gram matrix K[a, b] = k(X_a, Y_b).  X: (Bx, L, d), Y: (By, L', d) -> (Bx, By)."""
+    dX = tf.transform_increments(path_increments(X), time_aug, lead_lag)
+    dY = tf.transform_increments(path_increments(Y), time_aug, lead_lag)
+    # one big matmul for all pairs: (Bx, Lx, By, Ly) — batched per pair after
+    delta = jnp.einsum("aid,bjd->abij", dX, dY)
+    return _sigkernel_from_delta(delta, lam1, lam2, use_pallas)
+
+
+def sigkernel_gram_blocked(X: jax.Array, Y: jax.Array, *, row_block: int = 8,
+                           lam1: int = 0, lam2: int = 0,
+                           time_aug: bool = False, lead_lag: bool = False,
+                           use_pallas: bool = False,
+                           solver: str = "antidiag") -> jax.Array:
+    """Memory-bounded Gram: rows processed in blocks of ``row_block`` so only
+    (row_block × By) Δ matrices are live at once — required when Bx·By·L²
+    would not fit HBM (the pod-scale Gram workload).
+
+    Differentiable (the per-block solve uses autodiff through the selected
+    solver; the exact custom backward handles use_pallas=True).
+    """
+    dX = tf.transform_increments(path_increments(X), time_aug, lead_lag)
+    dY = tf.transform_increments(path_increments(Y), time_aug, lead_lag)
+    Bx = dX.shape[0]
+    assert Bx % row_block == 0, (Bx, row_block)
+    dXb = dX.reshape(Bx // row_block, row_block, *dX.shape[1:])
+
+    def one_block(dxb):
+        delta = jnp.einsum("aid,bjd->abij", dxb, dY)
+        if use_pallas:
+            return _sigkernel_from_delta(delta, lam1, lam2, True)
+        if solver == "antidiag":
+            return solve_goursat_antidiag(delta, lam1, lam2)
+        return solve_goursat(delta, lam1, lam2)
+
+    K = jax.lax.map(one_block, dXb)              # (Bx/rb, rb, By)
+    return K.reshape(Bx, dY.shape[0])

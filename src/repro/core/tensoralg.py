@@ -1,0 +1,144 @@
+"""Flattened truncated tensor algebra over R^d.
+
+The truncated tensor algebra T^N(R^d) = ⊕_{k=0..N} (R^d)^{⊗k} is the carrier
+of signature computations.  Following pySigLib design choice (1), elements with
+scalar part 1 (group-like elements such as signatures) are stored as a SINGLE
+flattened contiguous array holding levels 1..N back-to-back::
+
+    flat = [ A_1 (d floats) | A_2 (d^2 floats) | ... | A_N (d^N floats) ]
+
+The scalar level A_0 == 1 is implicit.  All functions below are pure and
+jit-compatible; ``d`` and ``depth`` are static Python ints.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# layout helpers
+# ---------------------------------------------------------------------------
+
+def level_sizes(d: int, depth: int) -> List[int]:
+    """Sizes of levels 1..depth: [d, d^2, ..., d^depth]."""
+    return [d ** k for k in range(1, depth + 1)]
+
+
+def sig_dim(d: int, depth: int) -> int:
+    """Total flattened length of levels 1..depth."""
+    return sum(level_sizes(d, depth))
+
+
+def level_offsets(d: int, depth: int) -> List[int]:
+    """Start offset of each level 1..depth inside the flat array."""
+    offs, acc = [], 0
+    for s in level_sizes(d, depth):
+        offs.append(acc)
+        acc += s
+    return offs
+
+
+def split_levels(flat: jax.Array, d: int, depth: int) -> List[jax.Array]:
+    """Split a flat signature (..., sig_dim) into per-level arrays (..., d^k)."""
+    out, off = [], 0
+    for s in level_sizes(d, depth):
+        out.append(flat[..., off:off + s])
+        off += s
+    return out
+
+
+def join_levels(levels: Sequence[jax.Array]) -> jax.Array:
+    """Concatenate per-level arrays back into a flat signature."""
+    return jnp.concatenate(list(levels), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# primitive tensor operations (flat level representation)
+# ---------------------------------------------------------------------------
+
+def outer(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Tensor (outer) product of flat level tensors.
+
+    a: (..., m) flat level-i, b: (..., n) flat level-j  ->  (..., m*n) level-(i+j).
+    """
+    return (a[..., :, None] * b[..., None, :]).reshape(*a.shape[:-1], -1)
+
+
+def tensor_exp_levels(z: jax.Array, depth: int) -> List[jax.Array]:
+    """Levels 1..depth of exp(z) = sum_k z^{⊗k}/k! for an increment z (..., d)."""
+    levels = [z]
+    for k in range(2, depth + 1):
+        levels.append(outer(levels[-1], z / k))
+    return levels
+
+
+def tensor_exp(z: jax.Array, depth: int) -> jax.Array:
+    """Flat signature of a linear segment with increment z (Proposition 2.1)."""
+    return join_levels(tensor_exp_levels(z, depth))
+
+
+def chen_levels(a: List[jax.Array], b: List[jax.Array], depth: int) -> List[jax.Array]:
+    """Chen product on per-level lists: c_k = a_k + b_k + Σ_{i=1}^{k-1} a_i ⊗ b_{k-i}."""
+    out = []
+    for k in range(1, depth + 1):
+        c = a[k - 1] + b[k - 1]
+        for i in range(1, k):
+            c = c + outer(a[i - 1], b[k - i - 1])
+        out.append(c)
+    return out
+
+
+def chen(a: jax.Array, b: jax.Array, d: int, depth: int) -> jax.Array:
+    """Chen's identity (Prop 2.2): signature of a concatenation, flat in / flat out."""
+    return join_levels(
+        chen_levels(split_levels(a, d, depth), split_levels(b, d, depth), depth)
+    )
+
+
+def sig_inverse(a: jax.Array, d: int, depth: int) -> jax.Array:
+    """Group inverse of a signature: S(x)^{-1} = S(time-reversed x).
+
+    Computed as the truncated tensor-algebra inverse of (1, a_1, a_2, ...):
+    b = Σ_{k>=0} (-1)^k (a - 1)^{⊗k}, truncated at ``depth``.
+    """
+    al = split_levels(a, d, depth)
+    # accumulate powers of u := (0, a_1, ..., a_N)  (nilpotent to depth)
+    out = [-x for x in al]                      # -u
+    power = [x for x in al]                     # u^1
+    for k in range(2, depth + 1):
+        # power <- power ⊗ u   (only levels <= depth survive)
+        new_power: List[jax.Array] = [None] * depth  # type: ignore
+        for tot in range(k, depth + 1):
+            acc = None
+            for i in range(k - 1, tot):        # level i from power (>= k-1), tot-i from u
+                if power[i - 1] is None:
+                    continue
+                term = outer(power[i - 1], al[tot - i - 1])
+                acc = term if acc is None else acc + term
+            new_power[tot - 1] = acc
+        power = new_power
+        sign = 1.0 if k % 2 == 0 else -1.0
+        for lvl in range(k, depth + 1):
+            if power[lvl - 1] is not None:
+                out[lvl - 1] = out[lvl - 1] + sign * power[lvl - 1]
+    return join_levels(out)
+
+
+def sig_inner(a: jax.Array, b: jax.Array, d: int, depth: int,
+              include_scalar: bool = True) -> jax.Array:
+    """Standard (Euclidean tensor) inner product ⟨a, b⟩ over levels 0..depth."""
+    ip = jnp.sum(a * b, axis=-1)
+    if include_scalar:
+        ip = ip + 1.0  # level-0 contribution 1*1
+    return ip
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def identity_like(batch_shape, d: int, depth: int, dtype=jnp.float32) -> jax.Array:
+    """Flat representation of the group identity (1, 0, 0, ...)."""
+    return jnp.zeros((*batch_shape, sig_dim(d, depth)), dtype=dtype)

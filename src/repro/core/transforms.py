@@ -1,0 +1,67 @@
+"""Path-to-path transformations (pySigLib §4), backpropagatable.
+
+Two views are provided:
+
+* ``time_augment`` / ``lead_lag`` — materialise the transformed *path*
+  (useful for user code and for oracles).
+* ``transform_increments`` — the on-the-fly view: produce the transformed
+  path's *increment stream* directly from the raw increments, which is all the
+  signature / signature-kernel algorithms consume.  This is the paper's
+  "adapting the algorithms internally" — the transformed path never exists in
+  memory.
+
+Lead-lag convention ([10, 18, 19], paper §4): with points x_0..x_{L-1},
+the lead-lag path has 2L-1 points p_i = (lead_i, lag_i) with
+lead_{2k} = lead_{2k-1} = x_k and lag_{2k} = lag_{2k+1} = x_k, so its
+increments alternate (dx_k, 0) (lead jumps first) then (0, dx_k).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def time_augment(path: jax.Array, t0: float = 0.0, t1: float = 1.0) -> jax.Array:
+    """x̂_{t_i} = (x_{t_i}, t_i) ∈ R^{d+1} with a uniform time grid."""
+    L = path.shape[-2]
+    t = jnp.linspace(t0, t1, L, dtype=path.dtype)
+    t = jnp.broadcast_to(t[..., :, None], (*path.shape[:-1], 1))
+    return jnp.concatenate([path, t], axis=-1)
+
+
+def lead_lag(path: jax.Array) -> jax.Array:
+    """X^LL_{t_i} = (X^Lead_{t_i}, X^Lag_{t_i}) ∈ R^{2d}, length 2L-1."""
+    L = path.shape[-2]
+    rep = jnp.repeat(path, 2, axis=-2)              # x0 x0 x1 x1 ... (2L)
+    leadc = rep[..., 1:, :]                          # lead: x0 x1 x1 x2 x2 ... (2L-1)
+    lagc = rep[..., :-1, :]                          # lag:  x0 x0 x1 x1 x2 ... (2L-1)
+    return jnp.concatenate([leadc, lagc], axis=-1)
+
+
+def basepoint(path: jax.Array) -> jax.Array:
+    """Prepend the origin, making translation information visible to S(x)."""
+    zero = jnp.zeros_like(path[..., :1, :])
+    return jnp.concatenate([zero, path], axis=-2)
+
+
+def transform_increments(z: jax.Array, time_aug: bool, lead_lag_: bool,
+                         t0: float = 0.0, t1: float = 1.0) -> jax.Array:
+    """On-the-fly transform of an increment stream z (..., L-1, d).
+
+    Matches increments of the materialised transforms above exactly.
+    """
+    n = z.shape[-2]
+    if lead_lag_:
+        zeros = jnp.zeros_like(z)
+        lead_inc = jnp.concatenate([z, zeros], axis=-1)   # (dx, 0)
+        lag_inc = jnp.concatenate([zeros, z], axis=-1)    # (0, dx)
+        z = jnp.stack([lead_inc, lag_inc], axis=-2).reshape(
+            *z.shape[:-2], 2 * n, 2 * z.shape[-1])
+    if time_aug:
+        # uniform time grid over the (possibly lead-lagged) point sequence, so
+        # this matches time_augment(lead_lag(x)) exactly.
+        steps = z.shape[-2]
+        dt = jnp.full((*z.shape[:-1], 1), (t1 - t0) / steps, dtype=z.dtype)
+        z = jnp.concatenate([z, dt], axis=-1)
+    return z

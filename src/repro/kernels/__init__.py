@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- sigkernel_pde/: Goursat-PDE wavefront solver (fwd, exact bwd, fused-delta)
+- signature/:     Horner truncated-signature kernel
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,175 @@
+"""Pallas TPU kernel: exact backward through the sig-kernel PDE (pySigLib §3.4).
+
+One reverse wavefront pass per strip computes the adjoint
+
+    g[a,b] = g[a,b+1]·A(Δ[a−1,b]) + g[a+1,b]·A(Δ[a,b−1]) − g[a+1,b+1]·B(Δ[a,b])
+
+and accumulates   dΔ[i,j] += g[i+1,j+1]·[(k̂[i+1,j]+k̂[i,j+1])·A'(Δ) − k̂[i,j]·B'(Δ)]
+
+folding refined cells back onto the unrefined Δ block.  Strips are processed
+bottom-up (grid index maps reverse the strip order); the adjoint row handed to
+the strip above overwrites the carried row in place (reads trail writes — the
+mirror image of the forward trick).  k̂ inside the strip is RECOMPUTED from the
+forward's checkpoint row — O(nx·ny/T) saved state instead of the full grid,
+a beyond-paper improvement (the paper stores the full grid / recomputes fully).
+
+Skew/lane conventions match ``kernel.py``:
+cell (r, c) := refined update (i, j) = (strip_top + r, c), value k̂[i+1, c+1],
+living at skew-step t = r + c, lane r.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .kernel import coeff_A, coeff_B, skew_to_ST, _expand_dyadic, vmem_scratch
+
+
+def coeff_dA(p):
+    return 0.5 + p / 6.0
+
+
+def coeff_dB(p):
+    return -p / 6.0
+
+
+def bwd_kernel(delta_ref, delta_next_ref, cps_ref, gbar_ref, ddelta_ref,
+               ksk_ref, gbrow_ref, dsk_ref, *,
+               T: int, lam1: int, lam2: int, ny: int, Ly: int):
+    """One (batch, reversed-strip) grid step of the exact backward pass."""
+    s_rev = pl.program_id(1)
+    n_steps = ny + T - 1
+
+    @pl.when(s_rev == 0)
+    def _reset():
+        gbrow_ref[...] = jnp.zeros_like(gbrow_ref)
+
+    M = _expand_dyadic(delta_ref[0], lam1, lam2)            # (T, ny)
+    S_T = skew_to_ST(M, T, ny)                              # (ny+T, T)
+    S_Tp = jnp.pad(S_T, ((0, 2), (0, 0)))                   # safe t+2 reads
+    scale = 2.0 ** (-(lam1 + lam2))
+    # first refined Δ row of the strip below (coefficients for lane T-1)
+    d_next = jnp.repeat(delta_next_ref[0, 0:1, :], 2 ** lam2, axis=1) * scale
+    d_nextp = jnp.pad(d_next, ((0, 0), (0, T + 3)))         # (1, ny + T + 3)
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
+    zeros = jnp.zeros((1, T), jnp.float32)
+
+    # ---- phase 1: recompute strip interior k̂ from the checkpoint row -------
+    def fstep(t, carry):
+        prev, prev2 = carry
+        p = jax.lax.dynamic_slice(S_T, (t, 0), (1, T))
+        up0 = cps_ref[0, 0, t + 1]
+        upleft0 = cps_ref[0, 0, t]
+        shift_prev = jnp.where(lane == 0, up0, jnp.roll(prev, 1, axis=1))
+        shift_prev2 = jnp.where(lane == 0, upleft0, jnp.roll(prev2, 1, axis=1))
+        left = jnp.where(lane == t, 1.0, prev)
+        upleft = jnp.where(lane == t, 1.0, shift_prev2)
+        cur = (left + shift_prev) * coeff_A(p) - upleft * coeff_B(p)
+        active = (lane <= t) & (lane > t - ny)
+        cur = jnp.where(active, cur, 0.0)
+        pl.store(ksk_ref, (pl.ds(t, 1), pl.ds(0, T)), cur)
+        return (cur, prev)
+
+    jax.lax.fori_loop(0, n_steps, fstep, (zeros, zeros))
+
+    # ---- phase 2: reverse adjoint wavefront --------------------------------
+    gbar = gbar_ref[0]
+
+    def bstep(i, carry):
+        t = n_steps - 1 - i
+        gnext, gnext2 = carry                               # G at skew t+1, t+2
+        cT = jnp.maximum(t - (T - 1), 0)                    # column of lane T-1
+
+        p_c = jax.lax.dynamic_slice(S_Tp, (t, 0), (1, T))       # Δ(r, c)
+        p_a = jax.lax.dynamic_slice(S_Tp, (t + 1, 0), (1, T))   # Δ(r, c+1)
+        p_r1 = jnp.roll(p_a, -1, axis=1)                        # Δ(r+1, c)
+        p_r1c1 = jnp.roll(
+            jax.lax.dynamic_slice(S_Tp, (t + 2, 0), (1, T)), -1, axis=1)
+        # lane T-1 coefficients come from the strip below
+        p_r1 = jnp.where(lane == T - 1, d_nextp[0, cT], p_r1)
+        p_r1c1 = jnp.where(lane == T - 1, d_nextp[0, cT + 1], p_r1c1)
+
+        g_right = gnext                                     # G(r, c+1)
+        g_down = jnp.roll(gnext, -1, axis=1)                # G(r+1, c)
+        g_downright = jnp.roll(gnext2, -1, axis=1)          # G(r+1, c+1)
+        g_down = jnp.where(lane == T - 1, gbrow_ref[0, cT + 1], g_down)
+        g_downright = jnp.where(lane == T - 1, gbrow_ref[0, cT + 2], g_downright)
+
+        cur = (g_right * coeff_A(p_a) + g_down * coeff_A(p_r1)
+               - g_downright * coeff_B(p_r1c1))
+        # seed ∂F/∂k̂[nx, ny] at the bottom-right cell of the bottom strip
+        seed_here = (s_rev == 0) & (t == n_steps - 1)
+        cur = cur + jnp.where(seed_here & (lane == T - 1), gbar, 0.0)
+        active = (lane <= t) & (lane > t - ny)
+        cur = jnp.where(active, cur, 0.0)
+
+        # ---- dΔ contribution of cells on this anti-diagonal ----
+        k_tm1 = pl.load(ksk_ref, (pl.ds(jnp.maximum(t - 1, 0), 1), pl.ds(0, T)))
+        k_tm2 = pl.load(ksk_ref, (pl.ds(jnp.maximum(t - 2, 0), 1), pl.ds(0, T)))
+        k_left = jnp.where(lane == t, 1.0, k_tm1)               # k̂[i+1, j]
+        k_up = jnp.where(lane == 0, cps_ref[0, 0, jnp.minimum(t + 1, ny + T)],
+                         jnp.roll(k_tm1, 1, axis=1))            # k̂[i, j+1]
+        k_upleft = jnp.where(lane == 0, cps_ref[0, 0, jnp.minimum(t, ny + T)],
+                             jnp.roll(k_tm2, 1, axis=1))
+        k_upleft = jnp.where(lane == t, 1.0, k_upleft)          # k̂[i, j]
+        contrib = cur * ((k_left + k_up) * coeff_dA(p_c) - k_upleft * coeff_dB(p_c))
+        contrib = jnp.where(active, contrib, 0.0)
+        pl.store(dsk_ref, (pl.ds(t, 1), pl.ds(0, T)), contrib)
+
+        # hand the r = 0 adjoint row up to the strip above (in-place; reads at
+        # indices <= t-T+3 trail these writes in the reverse loop)
+        @pl.when(t <= ny - 1)
+        def _():
+            gbrow_ref[0, t + 1] = cur[0, 0]
+
+        return (cur, gnext)
+
+    jax.lax.fori_loop(0, n_steps, bstep, (zeros, zeros))
+
+    # ---- phase 3: unskew + dyadic fold -> unrefined dΔ block ----------------
+    U = dsk_ref[...].T                                      # (T, n_steps)
+    rows = [jax.lax.dynamic_slice(U, (r, r), (1, ny)) for r in range(T)]
+    dM = jnp.concatenate(rows, axis=0)                      # (T, ny)
+    if lam1 or lam2:
+        dM = dM.reshape(T >> lam1, 1 << lam1, Ly, 1 << lam2).sum((1, 3))
+    dM = dM * scale
+    ddelta_ref[0] = dM.astype(ddelta_ref.dtype)
+
+
+def build_bwd(batch: int, Lx: int, Ly: int, *, T: int, lam1: int, lam2: int,
+              interpret: bool):
+    R = T >> lam1
+    assert R >= 1 and R << lam1 == T and Lx % R == 0
+    n_strips = Lx // R
+    nx, ny = Lx << lam1, Ly << lam2
+    n_steps = ny + T - 1
+
+    kern = functools.partial(bwd_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny, Ly=Ly)
+
+    def rev(s):
+        return n_strips - 1 - s
+
+    return pl.pallas_call(
+        kern,
+        grid=(batch, n_strips),
+        in_specs=[
+            pl.BlockSpec((1, R, Ly), lambda b, s: (b, rev(s), 0)),
+            pl.BlockSpec((1, R, Ly),
+                         lambda b, s: (b, jnp.minimum(rev(s) + 1, n_strips - 1), 0)),
+            pl.BlockSpec((1, 1, ny + T + 1), lambda b, s: (b, rev(s), 0)),
+            pl.BlockSpec((1,), lambda b, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, R, Ly), lambda b, s: (b, rev(s), 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, Lx, Ly), jnp.float32),
+        scratch_shapes=[
+            vmem_scratch((n_steps, T)),        # recomputed k̂ (skewed)
+            vmem_scratch((1, ny + T + 3)),     # carried adjoint row
+            vmem_scratch((n_steps, T)),        # dΔ accumulator (skewed)
+        ],
+        interpret=interpret,
+    )

@@ -1,0 +1,256 @@
+"""Pallas TPU kernel: Goursat-PDE signature-kernel solver (pySigLib §3.3).
+
+TPU-native translation of the paper's GPU wavefront scheme (DESIGN.md §2):
+
+* the PDE grid is swept in **row strips of T refined rows** (T = VPU lane
+  count, default 128) — the analogue of the paper's 32-thread blocks;
+* inside a strip the anti-diagonal wavefront advances one skew-step per loop
+  iteration, carrying a **rotating pair of diagonal buffers** (``prev``,
+  ``prev2``) in registers/VMEM — the analogue of the paper's 3 rotating
+  anti-diagonals in CUDA shared memory;
+* the strip's bottom row **overwrites the carried boundary row in place**
+  (reads trail writes by T−1 steps), exactly the paper's trick of reusing the
+  initial-condition vector between blocks;
+* dyadic refinement is applied **on-the-fly**: Δ is expanded from the
+  unrefined (R, Ly) HBM block only inside VMEM (refined Δ never exists in
+  HBM), with R = T / 2^λ1 original rows per strip;
+* Δ itself is precomputed OUTSIDE the kernel by one batched MXU matmul
+  (paper design choice (2)) — see ``ops.py``.
+
+Grid = (batch, n_strips); TPU grid iteration is sequential per core, so VMEM
+scratch (the boundary row) persists across strips — the TPU-native replacement
+for CUDA inter-block synchronisation.
+
+In grad mode the kernel additionally emits one **checkpoint row per strip**
+(k̂ at the strip's top boundary).  The backward kernel recomputes the strip
+interior from the checkpoint — O(nx·ny / T) activation memory instead of the
+full grid, a beyond-paper improvement (the paper stores the full grid).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def coeff_A(p):
+    return 1.0 + 0.5 * p + (1.0 / 12.0) * p * p
+
+
+def coeff_B(p):
+    return 1.0 - (1.0 / 12.0) * p * p
+
+
+def skew_to_ST(M: jax.Array, T: int, n: int) -> jax.Array:
+    """(T, n) -> (n + T, T) skewed so that S_T[t, r] = M[r, t - r].
+
+    Built with T contiguous row writes then one VMEM transpose.
+    """
+    S = jnp.zeros((T, n + T), M.dtype)
+    for r in range(T):
+        S = jax.lax.dynamic_update_slice(S, M[r:r + 1], (r, r))
+    return S.T
+
+
+def _expand_dyadic(blk: jax.Array, lam1: int, lam2: int) -> jax.Array:
+    """On-the-fly VMEM expansion of an unrefined Δ block (R, Ly) to (T, ny)."""
+    scale = 2.0 ** (-(lam1 + lam2))
+    M = blk
+    if lam1:
+        M = jnp.repeat(M, 2 ** lam1, axis=0)
+    if lam2:
+        M = jnp.repeat(M, 2 ** lam2, axis=1)
+    return M * scale
+
+
+def fused_fwd_kernel(dx_ref, dy_ref, out_ref, brow_ref, *,
+                     T: int, lam1: int, lam2: int, ny: int):
+    """Fused-Δ forward: the strip's Δ block is computed ON THE FLY in VMEM as
+    dx_strip @ dyᵀ (an (R, d) × (d, Ly) MXU matmul) — Δ never exists in HBM.
+
+    Beyond-paper optimisation: pySigLib precomputes Δ with one bmm (design
+    choice (2)) because on GPU the bmm is the fast path; on TPU the Goursat
+    sweep is HBM-bound on streaming Δ (3·B²·L²·4 bytes for a Gram), so fusing
+    the tiny-K matmul into the wavefront kernel converts the workload from
+    memory-bound to compute-bound (EXPERIMENTS.md §Perf).
+    """
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _reset():
+        brow_ref[...] = jnp.ones_like(brow_ref)
+
+    blk = jnp.dot(dx_ref[0], dy_ref[0].T,
+                  preferred_element_type=jnp.float32)      # (R, Ly) in VMEM
+    _wavefront(blk, out_ref, None, brow_ref, T=T, lam1=lam1, lam2=lam2,
+               ny=ny, save_cps=False)
+
+
+def fwd_kernel(delta_ref, out_ref, cps_ref, brow_ref, *,
+               T: int, lam1: int, lam2: int, ny: int, save_cps: bool):
+    """One (batch, strip) grid step of the forward wavefront solver.
+
+    delta_ref: (1, R, Ly) unrefined Δ rows of this strip (VMEM block).
+    out_ref:   (1,) final kernel value k̂[nx, ny] (written every strip;
+               the last strip's write is the result).
+    cps_ref:   (1, 1, ny + T + 1) checkpoint row (grad mode only).
+    brow_ref:  (1, ny + T + 1) scratch — carried boundary row
+               brow[c] = k̂[strip_top, c]; persists across grid steps.
+    """
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _reset():
+        brow_ref[...] = jnp.ones_like(brow_ref)
+
+    if save_cps:
+        cps_ref[0, 0, :] = brow_ref[0, :]
+
+    _wavefront(delta_ref[0], out_ref, cps_ref, brow_ref, T=T, lam1=lam1,
+               lam2=lam2, ny=ny, save_cps=save_cps)
+
+
+def _wavefront(blk, out_ref, cps_ref, brow_ref, *, T, lam1, lam2, ny,
+               save_cps):
+    """Anti-diagonal sweep of one strip given its unrefined Δ block (R, Ly)."""
+    M = _expand_dyadic(blk, lam1, lam2)                # (T, ny)
+    S_T = skew_to_ST(M, T, ny)                         # (ny+T, T): [t, r] = Δ(r, t-r)
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
+
+    def step(t, carry):
+        prev, prev2 = carry                            # (1, T) f32
+        p = jax.lax.dynamic_slice(S_T, (t, 0), (1, T))  # anti-diagonal of Δ
+        A = coeff_A(p)
+        B = coeff_B(p)
+        up0 = brow_ref[0, t + 1]
+        upleft0 = brow_ref[0, t]
+        shift_prev = jnp.where(lane == 0, up0, jnp.roll(prev, 1, axis=1))
+        shift_prev2 = jnp.where(lane == 0, upleft0, jnp.roll(prev2, 1, axis=1))
+        left = jnp.where(lane == t, 1.0, prev)
+        upleft = jnp.where(lane == t, 1.0, shift_prev2)
+        cur = (left + shift_prev) * A - upleft * B
+        active = (lane <= t) & (lane > t - ny)
+        cur = jnp.where(active, cur, 0.0)
+
+        # bottom strip row becomes next strip's boundary: in-place overwrite,
+        # reads (index t+1) trail writes (index t-T+2) by T-1 steps.
+        @pl.when(t >= T - 1)
+        def _():
+            brow_ref[0, t - T + 2] = cur[0, T - 1]
+
+        return (cur, prev)
+
+    zeros = jnp.zeros((1, T), jnp.float32)
+    jax.lax.fori_loop(0, ny + T - 1, step, (zeros, zeros))
+
+    # after the strip, brow[ny] = k̂[strip_bottom, ny]; last strip ⇒ k̂[nx, ny].
+    if out_ref is not None:
+        out_ref[0] = brow_ref[0, ny]
+
+
+def build_fwd(batch: int, Lx: int, Ly: int, *, T: int, lam1: int, lam2: int,
+              save_cps: bool, interpret: bool):
+    """Construct the pallas_call for the forward solver.
+
+    Lx must be a multiple of R = T >> lam1 (ops.py zero-pads: Δ = 0 rows/cols
+    leave the Goursat solution invariant since A(0) = B(0) = 1).
+    """
+    R = T >> lam1
+    assert R >= 1 and R << lam1 == T, (T, lam1)
+    assert Lx % R == 0, (Lx, R)
+    n_strips = Lx // R
+    nx, ny = Lx << lam1, Ly << lam2
+
+    if save_cps:
+        kern = functools.partial(fwd_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny,
+                                 save_cps=True)
+    else:
+        def kern(delta_ref, out_ref, brow_ref):
+            fwd_kernel(delta_ref, out_ref, None, brow_ref,
+                       T=T, lam1=lam1, lam2=lam2, ny=ny, save_cps=False)
+
+    out_shapes = [jax.ShapeDtypeStruct((batch,), jnp.float32)]
+    out_specs = [pl.BlockSpec((1,), lambda b, s: (b,))]
+    if save_cps:
+        out_shapes.append(
+            jax.ShapeDtypeStruct((batch, n_strips, ny + T + 1), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1, ny + T + 1), lambda b, s: (b, s, 0)))
+
+    return pl.pallas_call(
+        kern,
+        grid=(batch, n_strips),
+        in_specs=[pl.BlockSpec((1, R, Ly), lambda b, s: (b, s, 0))],
+        out_specs=out_specs if save_cps else out_specs[0],
+        out_shape=out_shapes if save_cps else out_shapes[0],
+        scratch_shapes=[vmem_scratch((1, ny + T + 1))],
+        interpret=interpret,
+    )
+
+
+def build_fwd_fused(batch: int, Lx: int, Ly: int, d: int, *, T: int,
+                    lam1: int, lam2: int, interpret: bool):
+    """Fused-Δ forward: inputs are increments dx (B, Lx, d), dy (B, Ly, d)."""
+    import functools as _ft
+    R = T >> lam1
+    assert R >= 1 and R << lam1 == T and Lx % R == 0
+    n_strips = Lx // R
+    nx, ny = Lx << lam1, Ly << lam2
+    kern = _ft.partial(fused_fwd_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny)
+    return pl.pallas_call(
+        kern,
+        grid=(batch, n_strips),
+        in_specs=[pl.BlockSpec((1, R, d), lambda b, s: (b, s, 0)),
+                  pl.BlockSpec((1, Ly, d), lambda b, s: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1,), lambda b, s: (b,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.float32),
+        scratch_shapes=[vmem_scratch((1, ny + T + 1))],
+        interpret=interpret,
+    )
+
+
+def fused_gram_kernel(dx_ref, dy_ref, out_ref, brow_ref, *,
+                      T: int, lam1: int, lam2: int, ny: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _reset():
+        brow_ref[...] = jnp.ones_like(brow_ref)
+
+    blk = jnp.dot(dx_ref[0], dy_ref[0].T,
+                  preferred_element_type=jnp.float32)
+    _wavefront(blk, None, None, brow_ref, T=T, lam1=lam1, lam2=lam2,
+               ny=ny, save_cps=False)
+    out_ref[0, 0] = brow_ref[0, ny]
+
+
+def build_gram_fused(Bx: int, By: int, Lx: int, Ly: int, d: int, *, T: int,
+                     lam1: int, lam2: int, interpret: bool):
+    """Fused-Δ Gram: grid over (row path, col path, strip); dx/dy blocks are
+    fetched from the ORIGINAL increment arrays by index map — neither Δ nor
+    any pairwise replication of the paths ever exists in HBM."""
+    import functools as _ft
+    R = T >> lam1
+    assert R >= 1 and R << lam1 == T and Lx % R == 0
+    n_strips = Lx // R
+    ny = Ly << lam2
+    kern = _ft.partial(fused_gram_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny)
+    return pl.pallas_call(
+        kern,
+        grid=(Bx, By, n_strips),
+        in_specs=[pl.BlockSpec((1, R, d), lambda a, b, s: (a, s, 0)),
+                  pl.BlockSpec((1, Ly, d), lambda a, b, s: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda a, b, s: (a, b)),
+        out_shape=jax.ShapeDtypeStruct((Bx, By), jnp.float32),
+        scratch_shapes=[vmem_scratch((1, ny + T + 1))],
+        interpret=interpret,
+    )
+
+
+def vmem_scratch(shape, dtype=jnp.float32):
+    """VMEM scratch allocator (TPU target; also honoured by interpret mode)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

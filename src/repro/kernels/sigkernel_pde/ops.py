@@ -1,0 +1,139 @@
+"""Jit'd public wrappers for the sig-kernel PDE Pallas kernels.
+
+Responsibilities:
+* dtype discipline (compute in f32; bf16/f16 inputs are upcast),
+* batch flattening,
+* zero-padding Lx to the strip granularity (Δ = 0 rows/cols leave the Goursat
+  solution invariant because A(0) = B(0) = 1, so padding is exact — and the
+  padded problem's *exact* adjoint restricted to the real Δ block is the real
+  problem's exact adjoint),
+* strip-height (T) selection under the VMEM budget,
+* interpret-mode selection (CPU: interpret=True; TPU: compiled).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import build_fwd
+from .grad_kernel import build_bwd
+
+# ~12 MiB working-set budget out of ~16 MiB VMEM per core
+_VMEM_BUDGET = 12 * 1024 * 1024
+_MAX_T = 128
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def choose_T(Lx: int, Ly: int, lam1: int, lam2: int) -> int:
+    """Largest power-of-two strip height whose VMEM working set fits."""
+    ny = Ly << lam2
+    T = _MAX_T
+    while T > (1 << lam1):
+        R = T >> lam1
+        # Δ block + expanded M + skewed S_T (+ ~3x for bwd scratch)
+        working = 4 * (R * Ly + T * ny + (ny + T) * T * 4)
+        if working <= _VMEM_BUDGET:
+            break
+        T //= 2
+    return max(T, 1 << lam1)
+
+
+def _pad_batched(delta: jax.Array, R: int):
+    B, Lx, Ly = delta.shape
+    pad = (-Lx) % R
+    if pad:
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+    return delta, Lx + pad
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def _solve_flat(delta: jax.Array, lam1: int, lam2: int, with_cps: bool):
+    B, Lx, Ly = delta.shape
+    T = choose_T(Lx, Ly, lam1, lam2)
+    delta, Lxp = _pad_batched(delta, T >> lam1)
+    call = build_fwd(B, Lxp, Ly, T=T, lam1=lam1, lam2=lam2,
+                     save_cps=with_cps, interpret=_on_cpu())
+    out = call(delta)
+    return out
+
+
+def solve(delta: jax.Array, lam1: int = 0, lam2: int = 0) -> jax.Array:
+    """Final kernel values for Δ (..., Lx, Ly) -> (...,)."""
+    batch_shape = delta.shape[:-2]
+    flat = delta.reshape((-1,) + delta.shape[-2:]).astype(jnp.float32)
+    k = _solve_flat(flat, lam1, lam2, False)
+    return k.reshape(batch_shape)
+
+
+def solve_with_grid(delta: jax.Array, lam1: int = 0, lam2: int = 0):
+    """Forward + residuals for the exact backward (checkpoint rows, not the
+    full grid).  Returns (k, cps)."""
+    batch_shape = delta.shape[:-2]
+    flat = delta.reshape((-1,) + delta.shape[-2:]).astype(jnp.float32)
+    k, cps = _solve_flat(flat, lam1, lam2, True)
+    return k.reshape(batch_shape), cps
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def _grad_flat(delta, cps, gbar, lam1, lam2):
+    B, Lx, Ly = delta.shape
+    T = choose_T(Lx, Ly, lam1, lam2)
+    delta, Lxp = _pad_batched(delta, T >> lam1)
+    call = build_bwd(B, Lxp, Ly, T=T, lam1=lam1, lam2=lam2,
+                     interpret=_on_cpu())
+    dd = call(delta, delta, cps, gbar)
+    return dd[:, :Lx, :]
+
+
+def solve_grad(delta: jax.Array, cps: jax.Array, gbar: jax.Array,
+               lam1: int = 0, lam2: int = 0) -> jax.Array:
+    """Exact ∂F/∂Δ (paper Alg 4) from saved checkpoint rows."""
+    batch_shape = delta.shape[:-2]
+    flat = delta.reshape((-1,) + delta.shape[-2:]).astype(jnp.float32)
+    g = gbar.reshape((-1,)).astype(jnp.float32)
+    dd = _grad_flat(flat, cps, g, lam1, lam2)
+    return dd.reshape(batch_shape + dd.shape[-2:]).astype(delta.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused-Δ variants (beyond-paper: Δ never exists in HBM — see kernel.py)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def solve_fused(dx: jax.Array, dy: jax.Array, lam1: int = 0,
+                lam2: int = 0) -> jax.Array:
+    """k̂ final values from increments directly. dx: (B, Lx, d), dy: (B, Ly, d)."""
+    from .kernel import build_fwd_fused
+    B, Lx, d = dx.shape
+    Ly = dy.shape[1]
+    T = choose_T(Lx, Ly, lam1, lam2)
+    R = T >> lam1
+    pad = (-Lx) % R
+    if pad:  # zero increments -> zero Δ rows -> exact no-ops
+        dx = jnp.pad(dx, ((0, 0), (0, pad), (0, 0)))
+    call = build_fwd_fused(B, Lx + pad, Ly, d, T=T, lam1=lam1, lam2=lam2,
+                           interpret=_on_cpu())
+    return call(dx.astype(jnp.float32), dy.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def gram_fused(dX: jax.Array, dY: jax.Array, lam1: int = 0,
+               lam2: int = 0) -> jax.Array:
+    """Full Gram from increments. dX: (Bx, Lx, d), dY: (By, Ly, d) -> (Bx, By)."""
+    from .kernel import build_gram_fused
+    Bx, Lx, d = dX.shape
+    By, Ly = dY.shape[0], dY.shape[1]
+    T = choose_T(Lx, Ly, lam1, lam2)
+    R = T >> lam1
+    pad = (-Lx) % R
+    if pad:
+        dX = jnp.pad(dX, ((0, 0), (0, pad), (0, 0)))
+    call = build_gram_fused(Bx, By, Lx + pad, Ly, d, T=T, lam1=lam1,
+                            lam2=lam2, interpret=_on_cpu())
+    return call(dX.astype(jnp.float32), dY.astype(jnp.float32))

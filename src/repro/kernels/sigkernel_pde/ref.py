@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the sig-kernel PDE Pallas kernels.
+
+Delegates to the independently-written row-scan reference in
+``repro.core.sigkernel`` (which is itself validated against truncated
+signature inner products and autodiff).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.sigkernel import (solve_goursat, solve_goursat_grad)
+
+
+def solve(delta: jax.Array, lam1: int = 0, lam2: int = 0) -> jax.Array:
+    """Final kernel values k̂[nx, ny] for a batch of Δ matrices (..., Lx, Ly)."""
+    return solve_goursat(delta, lam1, lam2)
+
+
+def solve_grid(delta: jax.Array, lam1: int = 0, lam2: int = 0) -> jax.Array:
+    """Full refined PDE grids (..., nx+1, ny+1)."""
+    return solve_goursat(delta, lam1, lam2, return_grid=True)
+
+
+def solve_grad(delta: jax.Array, gbar: jax.Array, lam1: int = 0,
+               lam2: int = 0) -> jax.Array:
+    """Exact ∂F/∂Δ (Alg 4) given upstream cotangents gbar (...,)."""
+    grid = solve_goursat(delta, lam1, lam2, return_grid=True)
+    return solve_goursat_grad(delta, grid, gbar, lam1, lam2)

@@ -1,0 +1,73 @@
+"""Jit'd public wrapper for the Horner signature Pallas kernel.
+
+Handles batch/length padding (zero increments are exact no-ops), the
+(batch, L, d) -> (tiles, L, d, BT) layout transform, batch-tile sizing under
+the VMEM budget, and exact backprop: the backward pass is the time-reversed
+signature deconstruction of pySigLib §2.4 (O(1) memory in path length),
+reusing the validated pure-JAX implementation in ``repro.core.signature``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tensoralg import sig_dim, level_sizes
+from .kernel import build_horner
+
+_VMEM_BUDGET = 10 * 1024 * 1024
+_MAX_BT = 128
+_LB = 256
+
+
+def choose_BT(d: int, depth: int, LB: int) -> int:
+    sd = sig_dim(d, depth)
+    bmax = d ** max(depth - 1, 1)
+    BT = _MAX_BT
+    while BT > 8:
+        if 4 * BT * (2 * sd + 2 * bmax + LB * d) <= _VMEM_BUDGET:
+            break
+        BT //= 2
+    return BT
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _horner_flat(z: jax.Array, depth: int) -> jax.Array:
+    B, Lm1, d = z.shape
+    LB = min(_LB, max(Lm1, 1))
+    BT = choose_BT(d, depth, LB)
+    Bp = -(-B // BT) * BT
+    Lp = -(-Lm1 // LB) * LB
+    zp = jnp.pad(z.astype(jnp.float32), ((0, Bp - B), (0, Lp - Lm1), (0, 0)))
+    n_tiles = Bp // BT
+    zt = zp.reshape(n_tiles, BT, Lp, d).transpose(0, 2, 3, 1)  # (t, L, d, BT)
+    out = build_horner(n_tiles, Lp, d, depth, BT=BT, LB=LB,
+                       interpret=jax.default_backend() == "cpu")(zt)
+    sd = sig_dim(d, depth)
+    return out.transpose(0, 2, 1).reshape(Bp, sd)[:B]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def signature_from_increments(z: jax.Array, depth: int) -> jax.Array:
+    """Truncated signature of increment streams z (..., L-1, d) via Pallas."""
+    batch_shape = z.shape[:-2]
+    flat = z.reshape((-1,) + z.shape[-2:])
+    sig = _horner_flat(flat, depth)
+    return sig.reshape(batch_shape + sig.shape[-1:]).astype(z.dtype)
+
+
+def _fwd(z, depth):
+    sig = signature_from_increments(z, depth)
+    return sig, (z, sig)
+
+
+def _bwd(depth, res, g):
+    from repro.core.signature import _signature_core_bwd
+    z, sig = res
+    return _signature_core_bwd(depth, (z, sig.astype(jnp.float32)),
+                               g.astype(jnp.float32))
+
+
+signature_from_increments.defvjp(_fwd, _bwd)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the Horner signature Pallas kernel.
+
+Uses the *direct* algorithm (paper Alg 1) — an independently-written scheme —
+so kernel and oracle share no code path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.signature import _signature_scan, _direct_step
+
+
+def signature_from_increments(z: jax.Array, depth: int) -> jax.Array:
+    """Truncated signature from an increment stream z (..., L-1, d)."""
+    return _signature_scan(z, z.shape[-1], depth, _direct_step)

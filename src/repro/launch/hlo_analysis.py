@@ -1,0 +1,219 @@
+"""Trip-count-aware HLO text analysis for the dry-run roofline.
+
+XLA's ``cost_analysis()`` and a naive scan of the HLO text both count a
+while-loop body ONCE, which undercounts scanned-layer models by ~n_layers ×
+n_microbatches.  This module parses the compiled HLO module text into
+computations, extracts per-computation collective traffic and dot FLOPs, and
+aggregates through the while-loop call graph using parsed trip counts.
+
+Heuristics (documented in EXPERIMENTS.md §Roofline):
+* trip count of a while loop = the integer constant compared against the
+  induction variable in its condition computation (max constant if several);
+* per-device link traffic (ring estimates, result shape R, group size n):
+    all-gather        R·(n-1)/n     reduce-scatter  R·(n-1)
+    all-reduce        2·R·(n-1)/n   all-to-all      R·(n-1)/n
+    collective-permute R
+* dot FLOPs = 2 · |result| · |contracting dims of lhs|.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.*)$")
+_SHAPE_RE = re.compile(r"^\(?([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: List[int]) -> int:
+    return _DTYPE_BYTES.get(dtype, 4) * (math.prod(dims) if dims else 1)
+
+
+def _parse_shape(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.match(text.strip())
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """Computation headers sit at column 0 and end with '{'; bodies indented."""
+    comps: Dict[str, List[str]] = {}
+    cur, body = None, []
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        if cur is None:
+            if (stripped and not line[0].isspace()
+                    and stripped.endswith("{") and "(" in stripped):
+                head = stripped
+                is_entry = head.startswith("ENTRY")
+                if is_entry:
+                    head = head[len("ENTRY"):].strip()
+                name = head.split("(", 1)[0].strip().lstrip("%").rstrip()
+                name = name.split()[0] if name else name
+                cur = name
+                body = []
+                comps[cur] = body
+                if is_entry:
+                    comps["__entry__"] = body
+        else:
+            if stripped == "}" and not line[0].isspace():
+                cur = None
+            elif stripped.strip() == "}":
+                cur = None
+            else:
+                body.append(line)
+    return comps
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota form [G,N]
+    if m:
+        return int(m.group(2))
+    return default
+
+
+class HloStats:
+    def __init__(self):
+        self.flops = 0.0
+        self.collective: Dict[str, Dict[str, float]] = {
+            c: {"count": 0.0, "out_bytes": 0.0, "traffic": 0.0}
+            for c in COLLECTIVES}
+
+    def add(self, other: "HloStats", mult: float = 1.0):
+        self.flops += other.flops * mult
+        for c in COLLECTIVES:
+            for k in self.collective[c]:
+                self.collective[c][k] += other.collective[c][k] * mult
+
+    @property
+    def total_traffic(self) -> float:
+        return sum(c["traffic"] for c in self.collective.values())
+
+    def to_dict(self):
+        return {"flops": self.flops, "collectives": self.collective,
+                "total_traffic": self.total_traffic}
+
+
+def analyze(hlo: str) -> HloStats:
+    comps = split_computations(hlo)
+    shapes: Dict[str, Dict[str, Tuple[str, List[int]]]] = {}
+    for name, lines in comps.items():
+        tbl = {}
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            sh = _parse_shape(m.group(2))
+            if sh:
+                tbl[m.group(1).lstrip("%")] = sh
+        shapes[name] = tbl
+
+    def trip_count(cond_name: str) -> int:
+        consts = []
+        for line in comps.get(cond_name, []):
+            for c in re.findall(r"constant\((\d+)\)", line):
+                consts.append(int(c))
+        return max(consts) if consts else 1
+
+    local_cache: Dict[str, HloStats] = {}
+
+    def local_stats(name: str) -> Tuple[HloStats, List[Tuple[str, int]]]:
+        st = HloStats()
+        calls: List[Tuple[str, int]] = []
+        tbl = shapes.get(name, {})
+        for line in comps.get(name, []):
+            s = line.strip()
+            m = _DEF_RE.match(s)
+            if not m:
+                continue
+            rhs = m.group(2)
+            sh = _parse_shape(rhs)
+            # while loops
+            wm = re.search(r"while\(", rhs)
+            if wm:
+                bm = re.search(r"body=(%?[\w.\-]+)", rhs)
+                cm = re.search(r"condition=(%?[\w.\-]+)", rhs)
+                if bm and cm:
+                    calls.append((bm.group(1).lstrip("%"),
+                                  trip_count(cm.group(1).lstrip("%"))))
+                continue
+            # nested calls / fusions / conditionals: count once
+            for cm in re.finditer(
+                    r"(?:calls=|to_apply=|fusion\(|branch_computations=\{)"
+                    r"(%?[\w.\-]+)", rhs):
+                callee = cm.group(1).lstrip("%")
+                if callee in comps:
+                    calls.append((callee, 1))
+            # collectives
+            for c in COLLECTIVES:
+                if re.search(rf"(?:^|\s){c}(?:-start)?\(", rhs):
+                    if sh is None:
+                        break
+                    dtype, dims = sh
+                    nbytes = _shape_bytes(dtype, dims)
+                    n = _group_size(s)
+                    if c == "all-gather":
+                        tr = nbytes * (n - 1) / max(n, 1)
+                    elif c == "reduce-scatter":
+                        tr = nbytes * (n - 1)
+                    elif c == "all-reduce":
+                        tr = 2 * nbytes * (n - 1) / max(n, 1)
+                    elif c == "all-to-all":
+                        tr = nbytes * (n - 1) / max(n, 1)
+                    else:
+                        tr = float(nbytes)
+                    st.collective[c]["count"] += 1
+                    st.collective[c]["out_bytes"] += float(nbytes)
+                    st.collective[c]["traffic"] += float(tr)
+                    break
+            # dot flops
+            if re.search(r"\sdot\(", rhs) and sh is not None:
+                dtype, dims = sh
+                res = math.prod(dims) if dims else 1
+                ld = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                ops = re.search(r"dot\((%?[\w.\-]+),?\s*(%?[\w.\-]+)?", rhs)
+                k = 1
+                if ld and ops:
+                    lhs = ops.group(1).lstrip("%")
+                    lsh = tbl.get(lhs)
+                    if lsh:
+                        for d in ld.group(1).split(","):
+                            if d:
+                                k *= lsh[1][int(d)] if int(d) < len(lsh[1]) else 1
+                st.flops += 2.0 * res * k
+        return st, calls
+
+    memo: Dict[str, HloStats] = {}
+    visiting = set()
+
+    def total(name: str) -> HloStats:
+        if name in memo:
+            return memo[name]
+        if name in visiting:
+            return HloStats()
+        visiting.add(name)
+        st, calls = local_stats(name)
+        agg = HloStats()
+        agg.add(st)
+        for callee, mult in calls:
+            agg.add(total(callee), mult)
+        visiting.discard(name)
+        memo[name] = agg
+        return agg
+
+    entry = "__entry__" if "__entry__" in comps else next(iter(comps))
+    return total(entry)

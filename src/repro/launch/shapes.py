@@ -1,0 +1,112 @@
+"""Assigned input-shape presets and per-cell input ShapeDtypeStructs."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build_model
+from repro.models.api import padded_vocab
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapePreset:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapePreset("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapePreset("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapePreset("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapePreset("long_500k", "decode", 524288, 1),
+}
+
+# the paper's own workloads (pySigLib Table 2 scaled to pod size):
+# sig_gram — forward Gram of 4096×4096 path pairs, L=1024, d=8 (MMD eval /
+#            hypothesis testing); sig_mmd_train — differentiated MMD with the
+#            exact one-pass backward (512×512 pairs, L=256).
+SIG_SHAPES = {
+    "sig_gram": ShapePreset("sig_gram", "sig_fwd", 1024, 4096),
+    "sig_mmd_train": ShapePreset("sig_mmd_train", "sig_train", 256, 512),
+}
+
+
+def cell_supported(cfg, shape: ShapePreset) -> Optional[str]:
+    """None if supported, else the skip reason (recorded in EXPERIMENTS.md)."""
+    if cfg.family == "sigkernel":
+        if shape.kind not in ("sig_fwd", "sig_train"):
+            return "LM shapes do not apply to the sig-kernel workload"
+        return None
+    if shape.kind in ("sig_fwd", "sig_train"):
+        return "sig shapes apply only to the sigkernel-workload arch"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention family: 500k decode requires sub-quadratic "
+                "sequence mixing (run for ssm/hybrid only, per spec)")
+    return None
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def train_input_specs(cfg, shape: ShapePreset) -> Dict:
+    B, S = shape.batch, shape.seq
+    batch = {"tokens": _i32(B, S), "labels": _i32(B, S)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct((B, cfg.n_patches, 1024),
+                                                jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.sig_loss:
+        batch["sig_target"] = jax.ShapeDtypeStruct((B, 32, cfg.sig_loss_dim),
+                                                   jnp.float32)
+    return batch
+
+
+def prefill_input_specs(cfg, shape: ShapePreset) -> Dict:
+    B, S = shape.batch, shape.seq
+    batch = {"tokens": _i32(B, S)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct((B, cfg.n_patches, 1024),
+                                                jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def decode_input_specs(cfg, shape: ShapePreset, cache_shape) -> Dict:
+    B = shape.batch
+    return {"caches": cache_shape, "tokens": _i32(B, 1),
+            "cur_len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def cache_shape_for(model, cfg, shape: ShapePreset):
+    """Abstract cache pytree for a decode cell (no allocation)."""
+    params_shape = jax.eval_shape(
+        model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return jax.eval_shape(
+        lambda p: model.cache_init(p, shape.batch, shape.seq), params_shape)
+
+
+def microbatch_policy(cfg, gb: int, batch_shard: int) -> int:
+    """Number of sequential microbatches for the train step."""
+    if cfg.d_model >= 6000:
+        target = 1            # >=30B-class: one sequence per device
+    elif cfg.family == "encdec":
+        target = 2            # enc-dec holds encoder + decoder activations
+    elif cfg.d_model >= 2000:
+        target = 4
+    else:
+        target = 8
+    n_mb = max(1, gb // max(batch_shard * target, 1))
+    while gb % n_mb or (gb // n_mb) % batch_shard:
+        n_mb -= 1
+    return max(n_mb, 1)

@@ -1,0 +1,7 @@
+"""Model zoo: the ten assigned architectures as composable pytree modules."""
+
+from .config import ArchConfig, get_config, list_configs, register
+from .api import Model, build_model
+
+__all__ = ["ArchConfig", "get_config", "list_configs", "register",
+           "Model", "build_model"]

@@ -1,0 +1,193 @@
+"""Top-level model API: build_model(cfg) -> Model with init / loss / serve fns.
+
+Families: dense, moe, vlm (dense LM + stubbed patch embeddings), encdec
+(whisper), ssm (mamba2), hybrid (recurrentgemma).  The paper's technique
+attaches as an optional signature-kernel auxiliary loss on the hidden-state
+trajectory (cfg.sig_loss — DESIGN.md §4/5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.api import shard
+from . import layers as L
+from . import transformer as T
+from . import whisper as W
+
+VOCAB_ALIGN = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable            # (key) -> params
+    loss: Callable            # (params, batch) -> (loss, metrics)
+    prefill: Callable         # (params, batch) -> (logits, cache)
+    decode: Callable          # (params, cache, tokens, cur_len) -> (logits, cache)
+    cache_init: Callable      # (params, batch_size, max_len) -> cache
+
+
+def padded_vocab(cfg) -> int:
+    return -(-cfg.vocab // VOCAB_ALIGN) * VOCAB_ALIGN
+
+
+def _logits(params, x, cfg):
+    table = params["lm_head"] if "lm_head" in params else params["embed"]
+    logits = L.unembed(table, x)
+    vp = padded_vocab(cfg)
+    if vp != cfg.vocab:  # mask synthetic vocab slots
+        mask = jnp.arange(vp) < cfg.vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def _sig_aux(params, hidden, batch, cfg):
+    """Signature-kernel MMD between the model's hidden trajectory and a target
+    path distribution (the paper-technique hook available on every arch)."""
+    from repro.core import losses as sig_losses
+    S = hidden.shape[1]
+    stride = max(1, S // 32)
+    path_h = hidden[:, ::stride][:, :32].astype(jnp.float32)
+    target = batch["sig_target"].astype(jnp.float32)
+    return sig_losses.sig_aux_loss(
+        path_h, target, proj=params["sig_proj"],
+        lam1=cfg.sig_dyadic, lam2=cfg.sig_dyadic)
+
+
+def build_model(cfg) -> Model:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    return _build_lm(cfg)
+
+
+# ---------------------------------------------------------------------------
+# decoder-only families (dense / moe / vlm / ssm / hybrid)
+# ---------------------------------------------------------------------------
+
+def _build_lm(cfg) -> Model:
+    vp = padded_vocab(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        params = {"embed": L.embed_init(ks[0], vp, cfg.d_model),
+                  "final_norm": L.rmsnorm_init(cfg.d_model),
+                  "layers": T.stack_init(ks[1], cfg)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.embed_init(ks[2], vp, cfg.d_model)
+        if cfg.family == "vlm":
+            params["patch_proj"] = L.dense_init(ks[3], 1024, cfg.d_model)
+        if cfg.sig_loss:
+            params["sig_proj"] = L.dense_init(ks[4], cfg.d_model,
+                                              cfg.sig_loss_dim)
+        return params
+
+    def embed_inputs(params, batch):
+        x = L.embed(params["embed"], batch["tokens"], cdt)
+        if cfg.family == "vlm" and "patches" in batch:
+            pe = batch["patches"].astype(cdt) @ params["patch_proj"].astype(cdt)
+            x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+        return shard(x, "batch", "seq", None)
+
+    def forward(params, batch):
+        x = embed_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])
+        x, aux = T.stack_apply(params["layers"], x, positions, cfg)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x, aux
+
+    def loss(params, batch):
+        x, aux = forward(params, batch)
+        logits = _logits(params, x, cfg)
+        ce = L.cross_entropy(logits, batch["labels"])
+        total = ce + 0.01 * aux
+        metrics = {"ce": ce, "aux": aux}
+        if cfg.sig_loss:
+            sl = _sig_aux(params, x, batch, cfg)
+            total = total + cfg.sig_loss_weight * sl
+            metrics["sig"] = sl
+        return total, metrics
+
+    def prefill(params, batch):
+        x = embed_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])
+        max_len = batch.get("max_len", x.shape[1])
+        x, caches = T.stack_prefill(params["layers"], x, positions, cfg,
+                                    max_len, cdt)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return _logits(params, x[:, -1:], cfg), caches
+
+    def cache_init(params, batch_size, max_len):
+        return T.stack_cache_init(cfg, batch_size, max_len, cdt)
+
+    def decode(params, caches, tokens, cur_len):
+        x = L.embed(params["embed"], tokens, cdt)       # (B, 1)
+        x = shard(x, "batch", None, None)
+        x, caches = T.stack_decode(params["layers"], x, caches, cur_len, cfg)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return _logits(params, x, cfg), caches
+
+    return Model(cfg, init, loss, prefill, decode, cache_init)
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+
+def _build_encdec(cfg) -> Model:
+    vp = padded_vocab(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        params = W.init(k1, cfg.replace(vocab=vp))
+        if cfg.sig_loss:
+            params["sig_proj"] = L.dense_init(k2, cfg.d_model, cfg.sig_loss_dim)
+        return params
+
+    def encode(params, batch):
+        frames = batch["frames"].astype(cdt)
+        enc = W.encoder_apply(params["enc"], frames, cfg)
+        return L.layernorm(params["ln_enc"], enc, cfg.norm_eps)
+
+    def loss(params, batch):
+        enc = encode(params, batch)
+        temb = L.embed(params["embed"], batch["tokens"], cdt)
+        x = W.decoder_apply(params["dec"], temb, enc, cfg)
+        x = L.layernorm(params["ln_out"], x, cfg.norm_eps)
+        logits = _logits(params, x, cfg)
+        ce = L.cross_entropy(logits, batch["labels"])
+        metrics = {"ce": ce}
+        total = ce
+        if cfg.sig_loss:
+            sl = _sig_aux(params, x, batch, cfg)
+            total = total + cfg.sig_loss_weight * sl
+            metrics["sig"] = sl
+        return total, metrics
+
+    def prefill(params, batch):
+        enc = encode(params, batch)
+        max_len = batch.get("max_len", batch["tokens"].shape[1])
+        temb = L.embed(params["embed"], batch["tokens"], cdt)
+        x, caches = W.decoder_prefill(params, temb, enc, cfg, max_len, cdt)
+        x = L.layernorm(params["ln_out"], x, cfg.norm_eps)
+        return _logits(params, x[:, -1:], cfg), caches
+
+    def cache_init(params, batch_size, max_len):
+        # caches require encoder states; serve path uses prefill instead.
+        enc = jnp.zeros((batch_size, cfg.n_audio_frames, cfg.d_model), cdt)
+        return W.dec_cache_init(params, enc, cfg, batch_size, max_len, cdt)
+
+    def decode(params, caches, tokens, cur_len):
+        x = L.embed(params["embed"], tokens, cdt)
+        x, caches = W.decoder_decode(params, x, caches, cur_len, cfg)
+        x = L.layernorm(params["ln_out"], x, cfg.norm_eps)
+        return _logits(params, x, cfg), caches
+
+    return Model(cfg, init, loss, prefill, decode, cache_init)

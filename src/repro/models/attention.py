@@ -1,0 +1,208 @@
+"""GQA attention: blocked (flash-style) training path + cached decode paths.
+
+The training/prefill path streams over KV chunks with an online softmax so the
+(S × S) score matrix is never materialised — required for the 32k-prefill
+shapes to fit HBM.  Decode supports a full preallocated KV cache and a
+sliding-window ring cache (RecurrentGemma local attention; enables the
+long_500k decode shape with O(window) memory).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.api import shard
+from .layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              qkv_bias: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim).reshape(
+            d_model, n_heads, head_dim),
+        "wk": dense_init(ks[1], d_model, n_kv * head_dim).reshape(
+            d_model, n_kv, head_dim),
+        "wv": dense_init(ks[2], d_model, n_kv * head_dim).reshape(
+            d_model, n_kv, head_dim),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model).reshape(
+            n_heads, head_dim, d_model),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv, head_dim), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv, head_dim), jnp.float32)
+    return p
+
+
+def qkv(p, x, positions, rope_theta: Optional[float]):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, kv_pos: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      chunk: int = 1024) -> jax.Array:
+    """Streaming-softmax attention.
+
+    q: (B, S, H, D); k, v: (B, Skv, KV, D); GQA via head grouping.
+    q_pos: (S,), kv_pos: (Skv,).  window > 0 limits to local attention.
+    Never materialises more than (B, S, H, chunk) of scores.
+    """
+    B, S, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    chunk = min(chunk, Skv)
+    pad = (-Skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-10 ** 9)
+    n_chunks = (Skv + pad) // chunk
+
+    # K/V stay in model dtype (bf16); each chunk is sliced and the matmuls
+    # accumulate in f32 via preferred_element_type — the full-sequence K/V
+    # are never materialised in f32.  Their SEQ dim must be unsharded here:
+    # SP leaves the residual stream seq-sharded, and per-chunk dynamic slices
+    # from a seq-sharded tensor make XLA all-gather it EVERY chunk iteration
+    # (32x per layer) instead of once.
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+    qs = (q / math.sqrt(D)).astype(q.dtype).reshape(B, S, KV, G, D)
+
+    def step(carry, j):
+        m, l, acc = carry
+        kj = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=1)
+        pj = jax.lax.dynamic_slice_in_dim(kv_pos, j * chunk, chunk, axis=0)
+        s = jnp.einsum("bskgd,bckd->bskgc", qs, kj,
+                       preferred_element_type=jnp.float32)
+        mask = jnp.ones((S, chunk), bool)
+        if causal:
+            mask &= pj[None, :] <= q_pos[:, None]
+        if window:
+            mask &= pj[None, :] > q_pos[:, None] - window
+        mask &= pj[None, :] >= 0
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p_ = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + p_.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bskgc,bckd->bskgd", p_.astype(v.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, S, KV, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def attention(p, x, positions, *, rope_theta, causal=True, window=0,
+              kv_x: Optional[jax.Array] = None, kv_positions=None,
+              chunk: int = 1024):
+    """Self or cross attention over full sequences (train / prefill)."""
+    dt = x.dtype
+    if kv_x is None:
+        q, k, v = qkv(p, x, positions, rope_theta)
+        kv_pos = positions
+    else:  # cross attention: KV from encoder states, no rope on cross
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(dt))
+        kv_pos = kv_positions
+        causal = False
+    q = shard(q, "batch", "seq", "model", None)
+    k = shard(k, "batch", "seq", "model", None)
+    out = blocked_attention(q, k, v, positions, kv_pos,
+                            causal=causal, window=window, chunk=chunk)
+    out = shard(out, "batch", "seq", "model", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# decode with caches
+# ---------------------------------------------------------------------------
+
+def cache_init(batch: int, max_len: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16) -> Dict:
+    """Full preallocated KV cache (positions implicit = slot index)."""
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+    }
+
+
+def window_cache_init(batch: int, window: int, n_kv: int, head_dim: int,
+                      dtype=jnp.bfloat16) -> Dict:
+    """Sliding-window ring cache: O(window) memory at any context length."""
+    return {
+        "k": jnp.zeros((batch, window, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, window, n_kv, head_dim), dtype),
+        "pos": jnp.full((window,), -10 ** 9, jnp.int32),
+    }
+
+
+def decode_attention(p, x, cache: Dict, cur_len: jax.Array, *,
+                     rope_theta, window: int = 0):
+    """One-token attention against a cache.  x: (B, 1, d_model).
+
+    Returns (out (B, 1, d_model), updated cache).  For window > 0 the cache is
+    a ring buffer indexed cur_len % window.
+    """
+    dt = x.dtype
+    pos = cur_len[None] if cur_len.ndim == 0 else cur_len
+    q, k, v = qkv(p, x, jnp.reshape(cur_len, (1,)), rope_theta)
+    if window:
+        slot = (cur_len % window).astype(jnp.int32)
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        cache["pos"] = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.reshape(cur_len, (1,)).astype(jnp.int32), (slot,))
+        kv_pos = cache["pos"]
+        valid = (kv_pos >= 0) & (kv_pos <= cur_len) & (kv_pos > cur_len - window)
+    else:
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cur_len, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cur_len, 0, 0))
+        kv_pos = jnp.arange(cache["k"].shape[1])
+        valid = kv_pos <= cur_len
+
+    B, _, H, D = q.shape
+    KV = cache["k"].shape[2]
+    G = H // KV
+    # cache stays in its storage dtype; f32 accumulation via the matmul only
+    qf = (q / math.sqrt(D)).astype(cache["k"].dtype).reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bckd->bkgc", qf, cache["k"],
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", w.astype(cache["v"].dtype), cache["v"],
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H, D).astype(dt)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt)), cache

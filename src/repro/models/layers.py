@@ -1,0 +1,122 @@
+"""Shared model building blocks (pure-pytree functional style).
+
+Params are nested dicts of jnp arrays; every constructor is `init_*(key, ...)`
+and every application is a pure function.  Activation sharding uses logical
+axis names resolved through ``repro.parallel.api``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.api import shard
+
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"]).astype(dt)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D), positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                                # (B, S, 1, D/2)
+    sin = sin[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, act: str):
+    ks = jax.random.split(key, 3)
+    if act == "relu2":  # squared-ReLU, 2-matrix MLP (nemotron)
+        return {"w_in": dense_init(ks[0], d_model, d_ff),
+                "w_out": dense_init(ks[1], d_ff, d_model)}
+    return {"w_gate": dense_init(ks[0], d_model, d_ff),
+            "w_up": dense_init(ks[1], d_model, d_ff),
+            "w_out": dense_init(ks[2], d_ff, d_model)}
+
+
+def mlp(p, x, act: str):
+    dt = x.dtype
+    if act == "relu2":
+        h = x @ p["w_in"].astype(dt)
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        g = x @ p["w_gate"].astype(dt)
+        u = x @ p["w_up"].astype(dt)
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+        h = g * u
+    h = shard(h, "batch", "seq", "model")
+    return h @ p["w_out"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int):
+    return {"table": jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02}
+
+
+def embed(p, tokens, dtype):
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p, x):
+    logits = x @ p["table"].astype(x.dtype).T
+    return shard(logits, "batch", "seq", "model")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 1e-4) -> jax.Array:
+    """Mean token cross-entropy with optional z-loss, vocab-parallel safe."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss.mean()

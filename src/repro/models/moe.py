@@ -1,0 +1,90 @@
+"""Mixture-of-Experts block: deterministic capacity-based top-k dispatch.
+
+GShard/Switch-style dense dispatch (one-hot einsums) — fully static shapes,
+TPU/SPMD friendly: with experts sharded over the ``expert`` logical axis the
+dispatch einsum lowers to an all-to-all.  Supports shared experts with a
+sigmoid gate (Qwen-MoE) and fine-grained routed experts (DBRX).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.api import shard
+from .layers import dense_init, mlp_init, mlp
+
+CAPACITY_FACTOR = 1.25
+GROUP = 256
+
+
+def moe_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    p = {
+        "router": dense_init(ks[0], D, E, scale=0.02),
+        "w_gate": jax.random.normal(ks[1], (E, D, F), jnp.float32) / math.sqrt(D),
+        "w_up": jax.random.normal(ks[2], (E, D, F), jnp.float32) / math.sqrt(D),
+        "w_out": jax.random.normal(ks[3], (E, F, D), jnp.float32) / math.sqrt(F),
+    }
+    if cfg.n_shared_experts:
+        k1, k2 = jax.random.split(jax.random.fold_in(key, 7))
+        p["shared"] = mlp_init(k1, D, cfg.n_shared_experts * F, cfg.act)
+        p["shared_gate"] = dense_init(k2, D, 1, scale=0.02)
+    return p
+
+
+def moe_apply(p, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    dt = x.dtype
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.n_experts_per_tok
+    tokens = B * S
+    g = min(GROUP, tokens)
+    ng = tokens // g
+    xg = shard(x.reshape(ng, g, D), "batch", None, None)
+
+    logits = (xg @ p["router"].astype(dt)).astype(jnp.float32)   # (ng, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, idx = jax.lax.top_k(probs, k)                        # (ng, g, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    if g <= 128:
+        cap = g  # dropless for decode / tiny groups (exactness at boundaries)
+    else:
+        cap = int(math.ceil(g * k / E * CAPACITY_FACTOR))
+        cap = max(4, -(-cap // 4) * 4)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)           # (ng, g, k, E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(ng, k * g, E)    # k-major priority
+    pos = jnp.cumsum(flat, axis=1) - 1.0                         # slot within expert
+    keep = flat * (pos < cap)
+    disp_flat = keep[..., None] * jax.nn.one_hot(pos, cap, dtype=jnp.float32)
+    disp = disp_flat.reshape(ng, k, g, E, cap).sum(1)            # (ng, g, E, cap)
+    comb = (disp_flat.reshape(ng, k, g, E, cap)
+            * gate_w.transpose(0, 2, 1)[..., None, None]).sum(1)
+
+    x_e = jnp.einsum("ngd,ngec->necd", xg, disp.astype(dt))      # (ng, E, cap, D)
+    x_e = shard(x_e, "batch", "expert", None, None)
+    gate = jnp.einsum("necd,edf->necf", x_e, p["w_gate"].astype(dt))
+    up = jnp.einsum("necd,edf->necf", x_e, p["w_up"].astype(dt))
+    act = jax.nn.silu(gate) if cfg.act == "silu" else jax.nn.gelu(gate)
+    h = shard(act * up, "batch", "expert", None, None)
+    y_e = jnp.einsum("necf,efd->necd", h, p["w_out"].astype(dt))
+    y_e = shard(y_e, "batch", "expert", None, None)
+    y = jnp.einsum("necd,ngec->ngd", y_e, comb.astype(dt))       # (ng, g, D)
+    y = y.reshape(B, S, D)
+
+    if cfg.n_shared_experts:
+        sg = jax.nn.sigmoid(xg.reshape(B, S, D) @ p["shared_gate"].astype(dt))
+        y = y + sg * mlp(p["shared"], x, cfg.act)
+
+    # load-balance auxiliary loss (Switch) + router z-loss
+    me = probs.mean(axis=(0, 1))                                 # mean prob / expert
+    ce = onehot.sum(2).mean(axis=(0, 1))                         # fraction routed
+    aux = E * jnp.sum(me * ce) + 1e-3 * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return y, aux

@@ -1,0 +1,187 @@
+"""Mamba-2 (SSD — state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm: quadratic attention-like mixing inside chunks of
+length Q, linear state passing between chunks (scan), so training/prefill is
+O(L·Q) and decode is a pure O(1)-per-token recurrence — which is what makes
+the long_500k decode shape feasible for this family.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.api import shard
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def ssd_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def ssm_init(key, cfg):
+    d_inner, H, N = ssd_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * N + H
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, d_in_proj),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), math.log(math.e - 1)),  # softplus^-1(1)
+        "norm": rmsnorm_init(d_inner),
+        "out_proj": dense_init(ks[2], d_inner, cfg.d_model),
+    }
+
+
+def _split_proj(zxbcdt, d_inner, N, H):
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    Bm = zxbcdt[..., 2 * d_inner:2 * d_inner + N]
+    Cm = zxbcdt[..., 2 * d_inner + N:2 * d_inner + 2 * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * N:]
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, width K. x: (B, L, C), w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssm_apply(p, u: jax.Array, cfg, return_cache: bool = False):
+    """Full-sequence SSD. u: (B, L, d_model) -> (B, L, d_model)[, cache]."""
+    dt_ = u.dtype
+    d_inner, H, N = ssd_dims(cfg)
+    P = cfg.ssm_head_dim
+    B_, L_real, _ = u.shape
+    Q = min(cfg.ssm_chunk, L_real)
+    pad = (-L_real) % Q
+    if pad:  # padded steps get dt = 0 ⇒ exact no-ops on the state
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    L = L_real + pad
+    nc = L // Q
+
+    zxbcdt = u @ p["in_proj"].astype(dt_)
+    z, x, Bm, Cm, dt = _split_proj(zxbcdt, d_inner, N, H)
+    if pad:
+        live = (jnp.arange(L) < L_real)[None, :, None]
+        dt = jnp.where(live, dt, -1e9)  # softplus(-1e9) = 0
+    xbc_raw = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xbc = _causal_conv(xbc_raw, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    x, Bm, Cm = (xbc[..., :d_inner], xbc[..., d_inner:d_inner + N],
+                 xbc[..., d_inner + N:])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, L, H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    dA = dt * A                                                   # (B, L, H)
+
+    xh = x.reshape(B_, nc, Q, H, P)
+    Bc = Bm.reshape(B_, nc, Q, N)
+    Cc = Cm.reshape(B_, nc, Q, N)
+    dtc = dt.reshape(B_, nc, Q, H)
+    dAc = dA.reshape(B_, nc, Q, H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    # One sequential scan over chunks computes intra-chunk (quadratic in Q),
+    # the carried state, and the inter-chunk contribution TOGETHER, so the
+    # (Q, Q, H) decay tensors exist for ONE chunk at a time (O(L·Q) memory
+    # instead of O(L·Q·H) for all chunks at once).
+    def chunk_step(S_prev, inp):
+        xj, Bj, Cj, dtj, dAj = inp                     # (B, Q, ...) one chunk
+        cum = jnp.cumsum(dAj, axis=1)                  # (B, Q, H)
+        scores = jnp.einsum("bin,bjn->bij", Cj, Bj,
+                            preferred_element_type=jnp.float32)
+        # mask the exponent BEFORE exp: exp on the i<j branch would overflow
+        # and poison gradients through the where (inf * 0 -> NaN in bwd).
+        diff = cum[:, :, None, :] - cum[:, None, :, :]             # (B,i,j,H)
+        diff = jnp.where(causal[None, :, :, None], diff, -1e30)
+        w = jnp.exp(diff) * scores[..., None] * dtj[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w.astype(xj.dtype), xj,
+                             preferred_element_type=jnp.float32)
+        y_inter = jnp.einsum("bin,bhnp,bih->bihp", Cj.astype(jnp.float32),
+                             S_prev, jnp.exp(cum))
+        decay_last = jnp.exp(cum[:, -1:, :] - cum)     # (B, Q, H)
+        S_loc = jnp.einsum("bjn,bjh,bjhp->bhnp", Bj.astype(jnp.float32),
+                           (decay_last * dtj), xj.astype(jnp.float32))
+        S_new = S_prev * jnp.exp(cum[:, -1])[:, :, None, None] + S_loc
+        return S_new, (y_intra + y_inter)
+
+    S0 = jnp.zeros((B_, H, N, P), jnp.float32)
+    swap = lambda t: jnp.moveaxis(t, 1, 0)
+    # remat the chunk body: its (B, Q, Q, H) decay residuals would otherwise
+    # be saved for EVERY chunk by the scan backward
+    S_final, y = jax.lax.scan(
+        jax.checkpoint(chunk_step, prevent_cse=False), S0,
+        (swap(xh), swap(Bc), swap(Cc), swap(dtc), swap(dAc)))
+    y = jnp.moveaxis(y, 0, 1).reshape(B_, L, H, P)     # (B, L, H, P) f32
+    y = y + p["D"][None, None, :, None] * x.reshape(B_, L, H, P).astype(jnp.float32)
+    y = y.reshape(B_, L, d_inner).astype(dt_)
+
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = shard(y, "batch", "seq", "model")
+    out = (y @ p["out_proj"].astype(dt_))[:, :L_real]
+    if return_cache:
+        K = cfg.ssm_conv
+        tail = xbc_raw[:, max(L_real - (K - 1), 0):L_real, :].astype(jnp.float32)
+        if tail.shape[1] < K - 1:
+            tail = jnp.pad(tail, ((0, 0), (K - 1 - tail.shape[1], 0), (0, 0)))
+        cache = {"conv": tail, "state": S_final}
+        return out, cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent O(1) per token)
+# ---------------------------------------------------------------------------
+
+def ssm_cache_init(batch: int, cfg, dtype=jnp.float32) -> Dict:
+    d_inner, H, N = ssd_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, H, N, cfg.ssm_head_dim), dtype),
+    }
+
+
+def ssm_decode(p, u: jax.Array, cache: Dict, cfg) -> Tuple[jax.Array, Dict]:
+    """One-token recurrence. u: (B, 1, d_model)."""
+    dt_ = u.dtype
+    d_inner, H, N = ssd_dims(cfg)
+    P = cfg.ssm_head_dim
+
+    zxbcdt = u[:, 0] @ p["in_proj"].astype(dt_)                   # (B, proj)
+    z, x, Bm, Cm, dt = _split_proj(zxbcdt, d_inner, N, H)
+    xbc_new = jnp.concatenate([x, Bm, Cm], axis=-1)               # (B, conv_dim)
+    conv_buf = jnp.concatenate([cache["conv"],
+                                xbc_new[:, None, :].astype(cache["conv"].dtype)],
+                               axis=1)                            # (B, K, conv)
+    w = p["conv_w"].astype(dt_)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_buf.astype(dt_), w)
+                      + p["conv_b"].astype(dt_))
+    x, Bm, Cm = (xbc[..., :d_inner], xbc[..., d_inner:d_inner + N],
+                 xbc[..., d_inner + N:])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * A)                                          # (B, H)
+    xh = x.reshape(-1, H, P).astype(jnp.float32)
+    state = (cache["state"].astype(jnp.float32) * da[:, :, None, None]
+             + jnp.einsum("bn,bh,bhp->bhnp", Bm.astype(jnp.float32), dt, xh))
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(-1, d_inner).astype(dt_)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(dt_))[:, None, :]
+    new_cache = {"conv": conv_buf[:, 1:, :], "state": state.astype(cache["state"].dtype)}
+    return out, new_cache

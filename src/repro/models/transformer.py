@@ -1,0 +1,383 @@
+"""Decoder-only LM assembly for dense / MoE / SSM / hybrid families.
+
+Uniform stacks use scan-over-layers (stacked params, small HLO, fast 96-layer
+compiles) with optional per-layer remat; heterogeneous stacks (RecurrentGemma's
+(rec, rec, attn) pattern) are unrolled.  Prefill/decode thread per-layer caches
+through the same scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.api import shard
+from . import layers as L
+from . import attention as A
+from . import moe as MOE
+from . import ssm as SSM
+from . import rglru as RG
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def layer_kind(cfg, idx: int) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.family == "hybrid":
+        return cfg.block_pattern[idx % len(cfg.block_pattern)]
+    if cfg.family == "moe":
+        return "moe"
+    return "dense"
+
+
+def layer_init(key, cfg, kind: str):
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {"ln": L.rmsnorm_init(cfg.d_model),
+                "mixer": SSM.ssm_init(ks[0], cfg)}
+    p = {"ln1": L.rmsnorm_init(cfg.d_model), "ln2": L.rmsnorm_init(cfg.d_model)}
+    if kind == "rec":
+        p["rec"] = RG.rglru_init(ks[0], cfg)
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+    elif kind == "moe":
+        p["attn"] = A.attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd, cfg.qkv_bias)
+        p["moe"] = MOE.moe_init(ks[1], cfg)
+    else:  # dense or local-attn hybrid layer
+        p["attn"] = A.attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd, cfg.qkv_bias)
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def layer_apply(p, x, positions, cfg, kind: str) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence layer. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        x = x + SSM.ssm_apply(p["mixer"], L.rmsnorm(p["ln"], x, cfg.norm_eps), cfg)
+        return x, aux
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind == "rec":
+        x = x + RG.rglru_apply(p["rec"], h, cfg)
+    else:
+        window = cfg.attn_window if (kind == "attn" and cfg.attn_window) else 0
+        x = x + A.attention(p["attn"], h, positions, rope_theta=cfg.rope_theta,
+                            causal=True, window=window)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        y, aux = MOE.moe_apply(p["moe"], h, cfg)
+        x = x + y
+    else:
+        x = x + L.mlp(p["mlp"], h, cfg.act)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode-path per-layer
+# ---------------------------------------------------------------------------
+
+def layer_cache_init(cfg, kind: str, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if kind == "ssm":
+        return SSM.ssm_cache_init(batch, cfg)
+    if kind == "rec":
+        return RG.rglru_cache_init(batch, cfg)
+    if kind == "attn" and cfg.attn_window:
+        return A.window_cache_init(batch, min(cfg.attn_window, max_len),
+                                   cfg.n_kv_heads, cfg.hd, dtype)
+    return A.cache_init(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype)
+
+
+def layer_decode(p, x, cache, cur_len, cfg, kind: str):
+    if kind == "ssm":
+        h, cache = SSM.ssm_decode(p["mixer"],
+                                  L.rmsnorm(p["ln"], x, cfg.norm_eps), cache, cfg)
+        return x + h, cache
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind == "rec":
+        h, cache = RG.rglru_decode(p["rec"], h, cache, cfg)
+    else:
+        window = cfg.attn_window if (kind == "attn" and cfg.attn_window) else 0
+        h, cache = A.decode_attention(p["attn"], h, cache, cur_len,
+                                      rope_theta=cfg.rope_theta, window=window)
+    x = x + h
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        y, _ = MOE.moe_apply(p["moe"], h, cfg)
+        x = x + y
+    else:
+        x = x + L.mlp(p["mlp"], h, cfg.act)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# full stacks
+# ---------------------------------------------------------------------------
+
+def _uniform(cfg) -> bool:
+    return cfg.scan_layers and cfg.family in ("dense", "moe", "vlm", "ssm")
+
+
+def _grouped(cfg) -> bool:
+    """Hybrid stacks scan over pattern groups (e.g. (rec, rec, attn) × 8 for
+    RecurrentGemma) so remat bounds memory the same way uniform scans do —
+    unrolled per-layer jax.checkpoint does NOT free residuals across layers."""
+    return (cfg.scan_layers and cfg.family == "hybrid"
+            and cfg.n_layers >= 2 * len(cfg.block_pattern))
+
+
+def _group_split(cfg):
+    g = len(cfg.block_pattern)
+    return cfg.n_layers // g, cfg.n_layers % g   # (n_groups, n_rest)
+
+
+def stack_init(key, cfg):
+    kinds = [layer_kind(cfg, i) for i in range(cfg.n_layers)]
+    keys = jax.random.split(key, cfg.n_layers)
+    if _uniform(cfg):
+        stacked = jax.vmap(lambda k: layer_init(k, cfg, kinds[0]))(keys)
+        return {"stacked": stacked}
+    if _grouped(cfg):
+        g = len(cfg.block_pattern)
+        n_groups, n_rest = _group_split(cfg)
+        params = {"groups": {}}
+        for j, kind in enumerate(cfg.block_pattern):
+            gkeys = jnp.stack([keys[i * g + j] for i in range(n_groups)])
+            params["groups"][f"pos_{j}"] = jax.vmap(
+                lambda k, kind=kind: layer_init(k, cfg, kind))(gkeys)
+        for r in range(n_rest):
+            i = n_groups * g + r
+            params[f"layer_{i}"] = layer_init(keys[i], cfg, kinds[i])
+        return params
+    return {f"layer_{i}": layer_init(keys[i], cfg, kinds[i])
+            for i in range(cfg.n_layers)}
+
+
+def stack_apply(params, x, positions, cfg):
+    """Run all layers over a full sequence. Returns (x, aux)."""
+    if _uniform(cfg):
+        kind = layer_kind(cfg, 0)
+        body = functools.partial(layer_apply, positions=positions, cfg=cfg, kind=kind)
+        fn = (lambda p, h: body(p, h))
+        if cfg.remat:
+            fn = jax.checkpoint(fn, prevent_cse=False)
+
+        def scan_body(carry, lp):
+            h, aux = carry
+            h = shard(h, "batch", "residual", None)   # SP residual boundary
+            h, a = fn(lp, h)
+            return (h, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                                   params["stacked"])
+        return x, aux
+
+    if _grouped(cfg):
+        n_groups, n_rest = _group_split(cfg)
+
+        def group_fn(gp, h):
+            a_sum = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(cfg.block_pattern):
+                h, a = layer_apply(gp[f"pos_{j}"], h, positions, cfg, kind)
+                a_sum = a_sum + a
+            return h, a_sum
+
+        fn = jax.checkpoint(group_fn, prevent_cse=False) if cfg.remat \
+            else group_fn
+
+        def scan_body(carry, gp):
+            h, aux = carry
+            h = shard(h, "batch", "residual", None)
+            h, a = fn(gp, h)
+            return (h, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)), params["groups"])
+        for r in range(n_rest):
+            i = n_groups * len(cfg.block_pattern) + r
+            x, a = layer_apply(params[f"layer_{i}"], x, positions, cfg,
+                               layer_kind(cfg, i))
+            aux = aux + a
+        return x, aux
+
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(cfg.n_layers):
+        kind = layer_kind(cfg, i)
+        fn = functools.partial(layer_apply, positions=positions, cfg=cfg, kind=kind)
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        x = shard(x, "batch", "residual", None)
+        x, a = fn(params[f"layer_{i}"], x)
+        aux = aux + a
+    return x, aux
+
+
+def stack_cache_init(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if _uniform(cfg):
+        one = layer_cache_init(cfg, layer_kind(cfg, 0), batch, max_len, dtype)
+        return {"stacked": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)}
+    if _grouped(cfg):
+        n_groups, n_rest = _group_split(cfg)
+        caches = {"groups": {}}
+        for j, kind in enumerate(cfg.block_pattern):
+            one = layer_cache_init(cfg, kind, batch, max_len, dtype)
+            caches["groups"][f"pos_{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), one)
+        for r in range(n_rest):
+            i = n_groups * len(cfg.block_pattern) + r
+            caches[f"layer_{i}"] = layer_cache_init(
+                cfg, layer_kind(cfg, i), batch, max_len, dtype)
+        return caches
+    return {f"layer_{i}": layer_cache_init(cfg, layer_kind(cfg, i), batch,
+                                           max_len, dtype)
+            for i in range(cfg.n_layers)}
+
+
+def stack_decode(params, x, caches, cur_len, cfg):
+    if _uniform(cfg):
+        kind = layer_kind(cfg, 0)
+
+        # caches ride in the scan CARRY with per-layer dynamic updates, so the
+        # while-loop aliases the (donated) cache buffers in place — scanning
+        # them as xs/ys would double-buffer the full multi-GB cache in temp.
+        def body(carry, lp):
+            h, cs, i = carry
+            ck = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+                cs)
+            h, ck_new = layer_decode(lp, h, ck, cur_len, cfg, kind)
+            cs = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), i, 0), cs, ck_new)
+            return (h, cs, i + 1), None
+
+        (x, new_cache, _), _ = jax.lax.scan(
+            body, (x, caches["stacked"], jnp.asarray(0, jnp.int32)),
+            params["stacked"])
+        return x, {"stacked": new_cache}
+
+    if _grouped(cfg):
+        n_groups, n_rest = _group_split(cfg)
+
+        def body(carry, gp):
+            h, cs, i = carry
+            new_cs = dict(cs)
+            for j, kind in enumerate(cfg.block_pattern):
+                ck = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(c, i, 0,
+                                                           keepdims=False),
+                    cs[f"pos_{j}"])
+                h, ck_new = layer_decode(gp[f"pos_{j}"], h, ck, cur_len, cfg,
+                                         kind)
+                new_cs[f"pos_{j}"] = jax.tree.map(
+                    lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                        c, n.astype(c.dtype), i, 0),
+                    new_cs[f"pos_{j}"], ck_new)
+            return (h, new_cs, i + 1), None
+
+        (x, new_groups, _), _ = jax.lax.scan(
+            body, (x, caches["groups"], jnp.asarray(0, jnp.int32)),
+            params["groups"])
+        new = {"groups": new_groups}
+        for r in range(n_rest):
+            i = n_groups * len(cfg.block_pattern) + r
+            x, new[f"layer_{i}"] = layer_decode(
+                params[f"layer_{i}"], x, caches[f"layer_{i}"], cur_len, cfg,
+                layer_kind(cfg, i))
+        return x, new
+
+    new = {}
+    for i in range(cfg.n_layers):
+        kind = layer_kind(cfg, i)
+        x, new[f"layer_{i}"] = layer_decode(params[f"layer_{i}"], x,
+                                            caches[f"layer_{i}"], cur_len, cfg, kind)
+    return x, new
+
+
+def stack_prefill(params, x, positions, cfg, max_len: int, dtype=jnp.bfloat16):
+    """Full-sequence forward that also builds decode caches."""
+    B = x.shape[0]
+
+    def one_layer_prefill(p, h, kind):
+        # run the layer and extract its cache
+        if kind == "ssm":
+            y, cache = SSM.ssm_apply(p["mixer"],
+                                     L.rmsnorm(p["ln"], h, cfg.norm_eps), cfg,
+                                     return_cache=True)
+            return h + y, cache
+        hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        if kind == "rec":
+            y, cache = RG.rglru_apply(p["rec"], hn, cfg, return_cache=True)
+            h = h + y
+        else:
+            window = cfg.attn_window if (kind == "attn" and cfg.attn_window) else 0
+            q, k, v = A.qkv(p["attn"], hn, positions, cfg.rope_theta)
+            out = A.blocked_attention(q, k, v, positions, positions,
+                                      causal=True, window=window)
+            h = h + jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(h.dtype))
+            S = hn.shape[1]
+            if window:
+                W = min(cfg.attn_window, max_len)
+                cache = A.window_cache_init(B, W, cfg.n_kv_heads, cfg.hd, dtype)
+                take = min(W, S)
+                # ring convention: position p lives at slot p % W
+                slots = (jnp.arange(S - take, S) % W).astype(jnp.int32)
+                cache["k"] = cache["k"].at[:, slots].set(
+                    k[:, S - take:].astype(dtype))
+                cache["v"] = cache["v"].at[:, slots].set(
+                    v[:, S - take:].astype(dtype))
+                cache["pos"] = cache["pos"].at[slots].set(
+                    jnp.arange(S - take, S, dtype=jnp.int32))
+            else:
+                cache = A.cache_init(B, max_len, cfg.n_kv_heads, cfg.hd, dtype)
+                cache["k"] = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(dtype), (0, 0, 0, 0))
+                cache["v"] = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(dtype), (0, 0, 0, 0))
+        hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+        if kind == "moe":
+            y, _ = MOE.moe_apply(p["moe"], hn, cfg)
+            h = h + y
+        else:
+            h = h + L.mlp(p["mlp"], hn, cfg.act)
+        return h, cache
+
+    if _uniform(cfg):
+        kind = layer_kind(cfg, 0)
+
+        def body(h, lp):
+            h, cache = one_layer_prefill(lp, h, kind)
+            return h, cache
+
+        x, caches = jax.lax.scan(body, x, params["stacked"])
+        return x, {"stacked": caches}
+
+    if _grouped(cfg):
+        n_groups, n_rest = _group_split(cfg)
+
+        def gbody(h, gp):
+            gcaches = {}
+            for j, kind in enumerate(cfg.block_pattern):
+                h, gcaches[f"pos_{j}"] = one_layer_prefill(
+                    gp[f"pos_{j}"], h, kind)
+            return h, gcaches
+
+        x, groups = jax.lax.scan(gbody, x, params["groups"])
+        caches = {"groups": groups}
+        for r in range(n_rest):
+            i = n_groups * len(cfg.block_pattern) + r
+            x, caches[f"layer_{i}"] = one_layer_prefill(
+                params[f"layer_{i}"], x, layer_kind(cfg, i))
+        return x, caches
+
+    caches = {}
+    for i in range(cfg.n_layers):
+        x, caches[f"layer_{i}"] = one_layer_prefill(
+            params[f"layer_{i}"], x, layer_kind(cfg, i))
+    return x, caches

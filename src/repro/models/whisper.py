@@ -1,0 +1,231 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed per spec).
+
+The conv/mel frontend is a STUB: ``input_specs`` provides precomputed frame
+embeddings (B, n_audio_frames, d_model).  Encoder: bidirectional self-attn;
+decoder: causal self-attn + cross-attn.  Sinusoidal positions are computed on
+the fly so decoder length is unrestricted (the assigned decode_32k/train_4k
+shapes exceed Whisper's native 448 — noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import attention as A
+
+
+def sinusoid(positions: jax.Array, d: int, dtype) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def enc_layer_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {"ln1": L.layernorm_init(cfg.d_model),
+            "attn": A.attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd),
+            "ln2": L.layernorm_init(cfg.d_model),
+            "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act)}
+
+
+def dec_layer_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {"ln1": L.layernorm_init(cfg.d_model),
+            "attn": A.attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd),
+            "ln2": L.layernorm_init(cfg.d_model),
+            "cross": A.attn_init(ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.hd),
+            "ln3": L.layernorm_init(cfg.d_model),
+            "mlp": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.act)}
+
+
+def encoder_apply(params, frames: jax.Array, cfg) -> jax.Array:
+    """frames: (B, F, d_model) stubbed embeddings -> encoder states."""
+    x = frames + sinusoid(jnp.arange(frames.shape[1]), cfg.d_model, frames.dtype)
+    pos = jnp.arange(frames.shape[1])
+
+    def body(h, lp):
+        a = A.attention(lp["attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps),
+                        pos, rope_theta=None, causal=False)
+        h = h + a
+        h = h + L.mlp(lp["mlp"], L.layernorm(lp["ln2"], h, cfg.norm_eps), cfg.act)
+        return h, None
+
+    if cfg.scan_layers:
+        fn = jax.checkpoint(lambda p, h: body(h, p)[0], prevent_cse=False) \
+            if cfg.remat else (lambda p, h: body(h, p)[0])
+        x, _ = jax.lax.scan(
+            lambda h, lp: (fn(lp, A.shard(h, "batch", "residual", None)), None),
+            x, params["stacked"])
+    else:
+        for i in range(cfg.n_enc_layers):
+            x, _ = body(x, params[f"layer_{i}"])
+    return x
+
+
+def dec_layer_apply(lp, h, enc, pos, enc_pos, cfg):
+    a = A.attention(lp["attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps),
+                    pos, rope_theta=None, causal=True)
+    h = h + a
+    c = A.attention(lp["cross"], L.layernorm(lp["ln2"], h, cfg.norm_eps),
+                    pos, rope_theta=None, kv_x=enc, kv_positions=enc_pos)
+    h = h + c
+    h = h + L.mlp(lp["mlp"], L.layernorm(lp["ln3"], h, cfg.norm_eps), cfg.act)
+    return h
+
+
+def decoder_apply(params, tokens_emb: jax.Array, enc: jax.Array, cfg) -> jax.Array:
+    S = tokens_emb.shape[1]
+    pos = jnp.arange(S)
+    enc_pos = jnp.arange(enc.shape[1])
+    x = tokens_emb + sinusoid(pos, cfg.d_model, tokens_emb.dtype)
+
+    def body(h, lp):
+        return dec_layer_apply(lp, h, enc, pos, enc_pos, cfg), None
+
+    if cfg.scan_layers:
+        fn = jax.checkpoint(lambda p, h: body(h, p)[0], prevent_cse=False) \
+            if cfg.remat else (lambda p, h: body(h, p)[0])
+        x, _ = jax.lax.scan(
+            lambda h, lp: (fn(lp, A.shard(h, "batch", "residual", None)), None),
+            x, params["stacked"])
+    else:
+        for i in range(cfg.n_layers):
+            x = dec_layer_apply(params[f"layer_{i}"], x, enc, pos, enc_pos, cfg)
+    return x
+
+
+def init(key, cfg):
+    ks = jax.random.split(key, 4)
+    if cfg.scan_layers:
+        enc = {"stacked": jax.vmap(lambda k: enc_layer_init(k, cfg))(
+            jax.random.split(ks[0], cfg.n_enc_layers))}
+        dec = {"stacked": jax.vmap(lambda k: dec_layer_init(k, cfg))(
+            jax.random.split(ks[1], cfg.n_layers))}
+    else:
+        enc = {f"layer_{i}": enc_layer_init(k, cfg)
+               for i, k in enumerate(jax.random.split(ks[0], cfg.n_enc_layers))}
+        dec = {f"layer_{i}": dec_layer_init(k, cfg)
+               for i, k in enumerate(jax.random.split(ks[1], cfg.n_layers))}
+    return {"enc": enc, "dec": dec,
+            "embed": L.embed_init(ks[2], cfg.vocab, cfg.d_model),
+            "ln_enc": L.layernorm_init(cfg.d_model),
+            "ln_out": L.layernorm_init(cfg.d_model)}
+
+
+def decoder_prefill(params, tokens_emb: jax.Array, enc: jax.Array, cfg,
+                    max_len: int, dtype=jnp.bfloat16):
+    """Decoder forward that also fills self-attn caches and cross K/V."""
+    B, S = tokens_emb.shape[:2]
+    pos = jnp.arange(S)
+    enc_pos = jnp.arange(enc.shape[1])
+    x = tokens_emb + sinusoid(pos, cfg.d_model, tokens_emb.dtype)
+
+    def one(lp, h):
+        hn = L.layernorm(lp["ln1"], h, cfg.norm_eps)
+        q, k, v = A.qkv(lp["attn"], hn, pos, None)
+        out = A.blocked_attention(q, k, v, pos, pos, causal=True)
+        h = h + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"].astype(h.dtype))
+        cache = A.cache_init(B, max_len, cfg.n_kv_heads, cfg.hd, dtype)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(dtype), (0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(dtype), (0, 0, 0, 0))
+        ck = jnp.einsum("bsd,dhk->bshk", enc, lp["cross"]["wk"].astype(enc.dtype))
+        cv = jnp.einsum("bsd,dhk->bshk", enc, lp["cross"]["wv"].astype(enc.dtype))
+        cache["ck"] = ck.astype(dtype)
+        cache["cv"] = cv.astype(dtype)
+        c = A.attention(lp["cross"], L.layernorm(lp["ln2"], h, cfg.norm_eps),
+                        pos, rope_theta=None, kv_x=enc, kv_positions=enc_pos)
+        h = h + c
+        h = h + L.mlp(lp["mlp"], L.layernorm(lp["ln3"], h, cfg.norm_eps), cfg.act)
+        return h, cache
+
+    if cfg.scan_layers:
+        def body(h, lp):
+            h2, cache = one(lp, h)
+            return h2, cache
+        x, caches = jax.lax.scan(body, x, params["dec"]["stacked"])
+        return x, {"stacked": caches}
+    caches = {}
+    for i in range(cfg.n_layers):
+        x, caches[f"layer_{i}"] = one(params["dec"][f"layer_{i}"], x)
+    return x, caches
+
+
+# ---------------------------------------------------------------------------
+# decode path (cached)
+# ---------------------------------------------------------------------------
+
+def dec_cache_init(params, enc: jax.Array, cfg, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Dict:
+    """Self-attn KV caches + precomputed per-layer cross K/V."""
+    def one(lp):
+        k = jnp.einsum("bsd,dhk->bshk", enc, lp["cross"]["wk"].astype(enc.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc, lp["cross"]["wv"].astype(enc.dtype))
+        return {"ck": k.astype(dtype), "cv": v.astype(dtype),
+                **A.cache_init(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype)}
+
+    if cfg.scan_layers:
+        caches = jax.vmap(one)(params["dec"]["stacked"])
+        return {"stacked": caches}
+    return {f"layer_{i}": one(params["dec"][f"layer_{i}"])
+            for i in range(cfg.n_layers)}
+
+
+def dec_layer_decode(lp, h, cache, cur_len, cfg):
+    a, cache = A.decode_attention(
+        lp["attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps), cache, cur_len,
+        rope_theta=None)
+    h = h + a
+    # cross attention against precomputed K/V
+    dt = h.dtype
+    hn = L.layernorm(lp["ln2"], h, cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", hn, lp["cross"]["wq"].astype(dt))
+    B, _, H, D = q.shape
+    KV = cache["ck"].shape[2]
+    qf = (q / math.sqrt(D)).astype(cache["ck"].dtype).reshape(B, KV, H // KV, D)
+    s = jnp.einsum("bkgd,bckd->bkgc", qf, cache["ck"],
+                   preferred_element_type=jnp.float32)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckd->bkgd", w.astype(cache["cv"].dtype), cache["cv"],
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, H, D).astype(dt)
+    h = h + jnp.einsum("bshk,hkd->bsd", o, lp["cross"]["wo"].astype(dt))
+    h = h + L.mlp(lp["mlp"], L.layernorm(lp["ln3"], h, cfg.norm_eps), cfg.act)
+    return h, cache
+
+
+def decoder_decode(params, x, caches, cur_len, cfg):
+    x = x + sinusoid(jnp.reshape(cur_len, (1,)), cfg.d_model, x.dtype)
+    if cfg.scan_layers:
+        # carry-based cache threading (in-place while-loop aliasing; see
+        # transformer.stack_decode)
+        def body(carry, lp):
+            h, cs, i = carry
+            ck = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+                cs)
+            h, ck_new = dec_layer_decode(lp, h, ck, cur_len, cfg)
+            cs = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), i, 0), cs, ck_new)
+            return (h, cs, i + 1), None
+
+        (x, new, _), _ = jax.lax.scan(
+            body, (x, caches["stacked"], jnp.asarray(0, jnp.int32)),
+            params["dec"]["stacked"])
+        return x, {"stacked": new}
+    new = {}
+    for i in range(cfg.n_layers):
+        x, new[f"layer_{i}"] = dec_layer_decode(
+            params["dec"][f"layer_{i}"], x, caches[f"layer_{i}"], cur_len, cfg)
+    return x, new

@@ -1,0 +1,81 @@
+"""AdamW with configurable moment dtype, global-norm clipping and schedules.
+
+Moments can be stored in bf16 for ≥100B-parameter models (nemotron/dbrx/
+qwen72/internvl) — the difference between fitting and not fitting a v5e-256
+pod (DESIGN.md §6); master params stay fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: dict
+    v: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        mdt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return AdamWState(count=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params):
+        # global-norm clip (f32 accumulate)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        count = state.count + 1
+        lr = self.lr(count)
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+        mdt = jnp.dtype(self.moment_dtype)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m32 = m.astype(jnp.float32)
+            v32 = v.astype(jnp.float32)
+            m_new = self.b1 * m32 + (1 - self.b1) * g
+            v_new = self.b2 * v32 + (1 - self.b2) * g * g
+            step = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + self.eps)
+            if p.ndim >= 2:  # no decay on norms / scalars
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * step
+            return p_new.astype(p.dtype), m_new.astype(mdt), v_new.astype(mdt)
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(count, new_m, new_v), {"grad_norm": gnorm}
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

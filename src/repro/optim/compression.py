@@ -1,0 +1,66 @@
+"""Int8 gradient compression with error feedback for the cross-pod reduce.
+
+Within a pod, ICI is fast (~50 GB/s/link) and gradients stay uncompressed.
+BETWEEN pods, the data-center network is the bottleneck at scale; this module
+replaces the pod-axis mean with
+
+    all_gather(int8 quantised shards) + local dequant-sum        (EF-SGD)
+
+which moves ~8x fewer bytes than an fp32 ring all-reduce.  Quantisation error
+is carried in an error-feedback accumulator (per-parameter, fp32, sharded
+like the gradient), which preserves convergence (Karimireddy et al. 2019).
+
+Usage inside a shard_map whose manual axes include "pod":
+
+    g_global, ef_new = psum_compressed(g_local, ef, "pod")
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def psum_compressed(g: jax.Array, ef: jax.Array, axis_name: str
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Mean of ``g`` over ``axis_name`` with int8 EF compression.
+
+    g, ef: local fp32 arrays (same shape).  Returns (mean, new_ef).
+    """
+    x = g + ef
+    q, scale = quantize_int8(x)
+    ef_new = x - dequantize(q, scale)
+    qs = jax.lax.all_gather(q, axis_name)            # (n, ...) int8 on the wire
+    ss = jax.lax.all_gather(scale, axis_name)        # (n,)
+    n = qs.shape[0]
+    deq = qs.astype(jnp.float32) * ss.reshape((n,) + (1,) * g.ndim)
+    return deq.sum(axis=0) / n, ef_new
+
+
+def psum_compressed_tree(grads, ef_tree, axis_name: str):
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_flatten(ef_tree)[0]
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        m, ne = psum_compressed(g.astype(jnp.float32), e, axis_name)
+        out_g.append(m)
+        out_e.append(ne)
+    return (jax.tree_util.tree_unflatten(treedef, out_g),
+            jax.tree_util.tree_unflatten(treedef, out_e))
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,1 @@
+from .api import shard, logical_rules, resolve, DEFAULT_RULES, MULTIPOD_RULES

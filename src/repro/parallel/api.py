@@ -1,0 +1,84 @@
+"""Mesh-context helpers: logical-axis activation sharding.
+
+Models annotate activations with *logical* axis names; the mapping onto
+physical mesh axes is installed by the launcher (train / serve / dryrun).
+Outside any mesh context the annotations are no-ops, so the same model code
+runs on a laptop and on a 512-chip mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+# default logical -> physical mapping for a ("data", "model") mesh
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": "data",            # data-parallel batch
+    "fsdp": "data",             # parameter/optimizer sharding axis
+    "model": "model",           # tensor-parallel axis
+    "seq": None,                # sequence axis inside layers
+    "residual": "model",        # sequence axis of the residual stream (SP):
+                                # shards remat-saved carries and turns TP
+                                # all-reduces into reduce-scatter/all-gather
+    "expert": "model",          # expert-parallel axis
+    None: None,
+}
+
+MULTIPOD_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "model": "model",
+    "seq": None,
+    "residual": "model",
+    "expert": "model",
+    None: None,
+}
+
+
+def current_rules() -> Optional[Dict[str, Axis]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_rules(rules: Dict[str, Axis]):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def resolve(*logical: Optional[str]) -> P:
+    """Logical axis names -> PartitionSpec under the active rules.
+
+    Deduplicates mesh axes left-to-right (a mesh axis may appear in at most
+    one positional dim — e.g. mamba2 maps both `batch` and `model` onto the
+    model axis; the first dim wins)."""
+    rules = current_rules() or DEFAULT_RULES
+    out, used = [], set()
+    for name in logical:
+        axis = rules.get(name, None)
+        axes = (axis,) if isinstance(axis, str) else tuple(axis or ())
+        axes = tuple(a for a in axes if a not in used)
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without a mesh."""
+    if current_rules() is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, resolve(*logical))
+    except (ValueError, RuntimeError):
+        return x  # no mesh context / incompatible rank: stay unconstrained

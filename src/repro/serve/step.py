@@ -1,0 +1,33 @@
+"""Serving steps: batched prefill and single-token decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.step import cast_compute
+
+
+def make_prefill_step(model, max_len: int = None):
+    """max_len: static decode-cache capacity (defaults to the prompt length)."""
+    cdt = jnp.dtype(model.cfg.compute_dtype)
+
+    def prefill_step(params, batch):
+        if max_len is not None:
+            batch = dict(batch, max_len=max_len)   # static python int
+        return model.prefill(cast_compute(params, cdt), batch)
+
+    return prefill_step
+
+
+def make_decode_step(model, *, greedy: bool = True):
+    cdt = jnp.dtype(model.cfg.compute_dtype)
+
+    def decode_step(params, caches, tokens, cur_len):
+        """tokens: (B, 1) current tokens; returns (next_tokens, logits, caches)."""
+        logits, caches = model.decode(cast_compute(params, cdt), caches,
+                                      tokens, cur_len)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, caches
+
+    return decode_step

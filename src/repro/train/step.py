@@ -1,0 +1,112 @@
+"""Train-step factory: mixed precision, microbatch gradient accumulation.
+
+Master params fp32 (FSDP-sharded); a bf16 compute copy is cast once per step
+so FSDP all-gathers move bf16 (half the bytes).  Gradients accumulate in fp32
+across microbatches via lax.scan; AdamW updates the sharded master copy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.api import shard
+
+
+def cast_compute(params, dtype):
+    def one(p):
+        if jnp.issubdtype(p.dtype, jnp.floating) and p.ndim >= 1:
+            return p.astype(dtype)
+        return p
+    return jax.tree.map(one, params)
+
+
+def apply_param_dtype(tree, cfg):
+    """Master-parameter dtype policy (cfg.param_dtype; bf16 for 340B-class).
+
+    Works on arrays and ShapeDtypeStructs alike."""
+    target = jnp.dtype(cfg.param_dtype)
+
+    def one(p):
+        if jnp.issubdtype(p.dtype, jnp.floating) and p.dtype != target:
+            if hasattr(p, "astype"):
+                return p.astype(target)
+            return jax.ShapeDtypeStruct(p.shape, target)
+        return p
+
+    return jax.tree.map(one, tree)
+
+
+def make_train_step(model, optimizer, *, num_microbatches: int = 1,
+                    param_pspecs=None, accum_dtype: str = "float32"):
+    """param_pspecs: optional tree of PartitionSpec matching params — applied
+    to gradients/accumulators so FSDP gradients reduce-scatter into shards
+    instead of being all-reduced into replicated buffers.
+    accum_dtype: gradient-accumulator dtype; bf16 halves both the accumulator
+    memory and the per-microbatch reduce-scatter bytes (340B-class default)."""
+    cfg = model.cfg
+    cdt = jnp.dtype(cfg.compute_dtype)
+    adt = jnp.dtype(accum_dtype)
+
+    def constrain(tree):
+        if param_pspecs is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            param_pspecs)
+
+    def loss_fn(compute_params, mb):
+        loss, metrics = model.loss(compute_params, mb)
+        return loss.astype(jnp.float32), metrics
+
+    def train_step(params, opt_state, batch):
+        compute = cast_compute(params, cdt)
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if num_microbatches > 1:
+            def split(x):
+                n = num_microbatches
+                if getattr(x, "ndim", 0) == 0:   # scalars (e.g. max_len)
+                    return jnp.broadcast_to(jnp.asarray(x), (n,))
+                return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                g_acc, loss_acc = acc
+                (loss, metrics), grads = grad_fn(compute, mb)
+                grads = constrain(grads)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(adt), g_acc, grads)
+                g_acc = constrain(g_acc)
+                return (g_acc, loss_acc + loss), metrics
+
+            g0 = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), compute))
+            (grads, loss_sum), metrics = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss_sum / num_microbatches
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        else:
+            (loss, metrics), grads = grad_fn(compute, batch)
+            grads = constrain(jax.tree.map(
+                lambda g: g.astype(jnp.float32), grads))
+
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    cdt = jnp.dtype(model.cfg.compute_dtype)
+
+    def eval_step(params, batch):
+        loss, metrics = model.loss(cast_compute(params, cdt), batch)
+        return dict(metrics, loss=loss)
+
+    return eval_step

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: XLA_FLAGS / device-count overrides are deliberately NOT set here —
+# smoke tests and benches must see exactly 1 device.  Multi-device tests
+# spawn subprocesses that set their own XLA_FLAGS (see test_distribution.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,77 @@
+"""Gradient compression: quantisation invariants + EF convergence, and a
+multi-device shard_map integration test (subprocess with forced devices)."""
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.compression import (quantize_int8, dequantize,
+                                     init_error_feedback)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_quantize_bounds():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,)) * 10
+    q, s = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    err = jnp.abs(dequantize(q, s) - x).max()
+    assert float(err) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """EF compensates: the running sum of compressed values tracks the true
+    running sum (error does not accumulate)."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (128,))
+    ef = jnp.zeros_like(x)
+    acc_true, acc_comp = jnp.zeros_like(x), jnp.zeros_like(x)
+    for _ in range(50):
+        g = x + ef
+        q, s = quantize_int8(g)
+        deq = dequantize(q, s)
+        ef = g - deq
+        acc_true += x
+        acc_comp += deq
+    rel = float(jnp.abs(acc_comp - acc_true).max() / jnp.abs(acc_true).max())
+    assert rel < 0.01, rel
+
+
+def test_psum_compressed_multidevice():
+    """int8-EF pod reduce inside shard_map matches the exact mean."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.optim.compression import psum_compressed
+
+        mesh = jax.make_mesh((4,), ("pod",))
+        g = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
+        ef = jnp.zeros((4, 256))
+
+        def f(g, ef):
+            m, ef_new = psum_compressed(g[0], ef[0], "pod")
+            return m[None], ef_new[None]
+
+        fm = jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                           out_specs=(P("pod"), P("pod")))
+        mean_c, ef_new = fm(g, ef)
+        exact = g.mean(axis=0)
+        err = float(jnp.abs(mean_c[0] - exact).max())
+        scale = float(jnp.abs(g).max()) / 127
+        assert err <= 2 * scale + 1e-6, (err, scale)
+        # every pod row agrees
+        assert float(jnp.abs(mean_c - mean_c[0:1]).max()) < 1e-7
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=300,
+                       env={**__import__('os').environ,
+                            "PYTHONPATH": "src"},
+                       cwd=__import__('os').path.join(
+                           __import__('os').path.dirname(__file__), ".."))
+    assert "OK" in r.stdout, r.stdout + r.stderr

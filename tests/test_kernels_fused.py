@@ -1,0 +1,35 @@
+"""Fused-Δ Pallas kernels (beyond-paper §Perf it.3): Δ computed in VMEM."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.sigkernel_pde import ops, ref
+from repro.core.signature import path_increments
+from repro.core.sigkernel import sigkernel_gram
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def paths(seed, B, L, d):
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, L, d)) * 0.2
+
+
+@pytest.mark.parametrize("B,Lx,Ly,d,l1,l2", [
+    (2, 9, 7, 3, 0, 0), (3, 20, 15, 4, 1, 1), (1, 33, 12, 2, 0, 2)])
+def test_fused_forward(B, Lx, Ly, d, l1, l2):
+    dx = path_increments(paths(0, B, Lx + 1, d))
+    dy = path_increments(paths(1, B, Ly + 1, d))
+    delta = jnp.einsum("bid,bjd->bij", dx, dy)
+    k_f = ops.solve_fused(dx, dy, l1, l2)
+    k_r = ref.solve(delta, l1, l2)
+    np.testing.assert_allclose(k_f, k_r, rtol=5e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("Bx,By,L,d", [(3, 4, 8, 3), (2, 5, 12, 2)])
+def test_fused_gram(Bx, By, L, d):
+    X, Y = paths(2, Bx, L, d), paths(3, By, L, d)
+    K_f = ops.gram_fused(path_increments(X), path_increments(Y))
+    K_r = sigkernel_gram(X, Y)
+    np.testing.assert_allclose(K_f, K_r, rtol=5e-4, atol=1e-5)

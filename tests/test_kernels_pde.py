@@ -1,0 +1,97 @@
+"""Pallas sig-kernel PDE kernels vs the pure-jnp oracle (interpret mode).
+
+Shape/dtype sweep per the kernel-validation contract: every (Lx, Ly, λ1, λ2,
+dtype) cell asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.sigkernel_pde import ops, ref
+from repro.kernels.sigkernel_pde.kernel import build_fwd
+from repro.kernels.sigkernel_pde.grad_kernel import build_bwd
+
+jax.config.update("jax_platform_name", "cpu")
+
+FWD_CASES = [
+    (2, 5, 7, 0, 0), (3, 16, 16, 0, 0), (2, 10, 33, 1, 1),
+    (1, 130, 64, 0, 0), (2, 6, 9, 2, 1), (1, 33, 129, 0, 2),
+    (4, 20, 20, 1, 0),
+]
+
+
+def delta(seed, B, Lx, Ly, dtype=jnp.float32):
+    d = jax.random.normal(jax.random.PRNGKey(seed), (B, Lx, Ly)) * 0.1
+    return d.astype(dtype)
+
+
+@pytest.mark.parametrize("B,Lx,Ly,l1,l2", FWD_CASES)
+def test_forward_vs_ref(B, Lx, Ly, l1, l2):
+    d = delta(0, B, Lx, Ly)
+    k_pal = ops.solve(d, l1, l2)
+    k_ref = ref.solve(d, l1, l2)
+    np.testing.assert_allclose(k_pal, k_ref, rtol=5e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_forward_dtypes(dtype):
+    d = delta(1, 2, 12, 15, dtype)
+    k_pal = ops.solve(d, 1, 1)
+    k_ref = ref.solve(d.astype(jnp.float32), 1, 1)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 5e-4
+    np.testing.assert_allclose(np.asarray(k_pal, np.float32), k_ref, rtol=tol)
+
+
+@pytest.mark.parametrize("B,Lx,Ly,l1,l2", [
+    (2, 5, 7, 0, 0), (3, 16, 16, 0, 0), (2, 10, 33, 1, 1),
+    (1, 40, 50, 0, 0), (2, 6, 9, 2, 1), (1, 33, 20, 0, 2)])
+def test_backward_vs_ref(B, Lx, Ly, l1, l2):
+    d = delta(2, B, Lx, Ly)
+    gbar = jax.random.normal(jax.random.PRNGKey(3), (B,))
+    _, cps = ops.solve_with_grid(d, l1, l2)
+    dd_pal = ops.solve_grad(d, cps, gbar, l1, l2)
+    dd_ref = ref.solve_grad(d, gbar, l1, l2)
+    denom = max(float(jnp.abs(dd_ref).max()), 1e-6)
+    assert float(jnp.abs(dd_pal - dd_ref).max()) / denom < 2e-5
+
+
+@pytest.mark.parametrize("Lx,Ly,T,l1,l2", [
+    (24, 10, 8, 0, 0), (16, 12, 8, 1, 0), (24, 40, 8, 1, 1), (32, 8, 8, 0, 2)])
+def test_multistrip_small_T(Lx, Ly, T, l1, l2):
+    """Force small strips so the carried-boundary-row path is exercised."""
+    B = 2
+    d = delta(4, B, Lx, Ly)
+    gbar = jax.random.normal(jax.random.PRNGKey(5), (B,))
+    fwd = build_fwd(B, Lx, Ly, T=T, lam1=l1, lam2=l2, save_cps=True,
+                    interpret=True)
+    k, cps = fwd(d)
+    np.testing.assert_allclose(k, ref.solve(d, l1, l2), rtol=5e-4)
+    bwd = build_bwd(B, Lx, Ly, T=T, lam1=l1, lam2=l2, interpret=True)
+    dd = bwd(d, d, cps, gbar)
+    dd_ref = ref.solve_grad(d, gbar, l1, l2)
+    denom = max(float(jnp.abs(dd_ref).max()), 1e-6)
+    assert float(jnp.abs(dd - dd_ref).max()) / denom < 2e-5
+
+
+def test_end_to_end_custom_vjp():
+    from repro.core.sigkernel import sigkernel, delta_matrix, solve_goursat
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 3)) * 0.2
+    y = jax.random.normal(jax.random.PRNGKey(2), (2, 7, 3)) * 0.2
+    k1 = sigkernel(x, y, lam1=1, lam2=1, use_pallas=True)
+    k2 = sigkernel(x, y, lam1=1, lam2=1)
+    np.testing.assert_allclose(k1, k2, rtol=1e-5)
+    g1 = jax.grad(lambda q: sigkernel(q, y, lam1=1, lam2=1,
+                                      use_pallas=True).sum())(x)
+    g2 = jax.grad(
+        lambda q: solve_goursat(delta_matrix(q, y), 1, 1).sum())(x)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+def test_padding_invariance():
+    """Zero Δ rows/cols must not change the solution (ops.py relies on it)."""
+    d = delta(6, 1, 9, 11)
+    dpad = jnp.pad(d, ((0, 0), (0, 5), (0, 3)))
+    np.testing.assert_allclose(ref.solve(d, 0, 0), ref.solve(dpad, 0, 0),
+                               rtol=1e-6)

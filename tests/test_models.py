@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests: reduced config, forward/train/decode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import get_config, build_model
+from repro.configs import ASSIGNED
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 12
+
+
+def make_batch(cfg, key=2, seq=S):
+    toks = jax.random.randint(jax.random.PRNGKey(key), (B, seq), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks, "max_len": 32}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.ones((B, 8, 1024), jnp.float32) * 0.1
+    if cfg.family == "encdec":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.n_audio_frames, cfg.d_model))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for name in ASSIGNED:
+        cfg = get_config(name).reduced()
+        m = build_model(cfg)
+        out[name] = (cfg, m, m.init(jax.random.PRNGKey(0)))
+    return out
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_loss_finite(built, name):
+    cfg, m, params = built[name]
+    loss, metrics = m.loss(params, make_batch(cfg))
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_grads_finite(built, name):
+    cfg, m, params = built[name]
+    g = jax.grad(lambda p: m.loss(p, make_batch(cfg))[0])(params)
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(g))
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_prefill_decode_consistency(built, name):
+    cfg, m, params = built[name]
+    batch = make_batch(cfg)
+    toks = batch["tokens"]
+    l_full, _ = m.prefill(params, batch)
+    b2 = dict(batch)
+    b2["tokens"] = toks[:, :S - 1]
+    _, cache = m.prefill(params, b2)
+    l_dec, _ = m.decode(params, cache, toks[:, S - 1:],
+                        jnp.asarray(S - 1, jnp.int32))
+    err = np.abs(np.asarray(l_full)[..., :cfg.vocab]
+                 - np.asarray(l_dec)[..., :cfg.vocab]).max()
+    assert err < 2e-4, err
+
+
+@pytest.mark.parametrize("name", ["recurrentgemma-2b", "mamba2-780m"])
+def test_long_recurrent_decode(built, name):
+    """Decode far past the local-attention window / via SSM recurrence."""
+    cfg, m, params = built[name]
+    S2 = 20
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S2), 0, cfg.vocab)
+    batch = make_batch(cfg)
+    batch["tokens"] = toks
+    batch["max_len"] = 64
+    l_full, _ = m.prefill(params, batch)
+    b2 = dict(batch)
+    b2["tokens"] = toks[:, :3]
+    _, cache = m.prefill(params, b2)
+    l_dec = None
+    for t in range(3, S2):
+        l_dec, cache = m.decode(params, cache, toks[:, t:t + 1],
+                                jnp.asarray(t, jnp.int32))
+    err = np.abs(np.asarray(l_full)[..., :cfg.vocab]
+                 - np.asarray(l_dec)[..., :cfg.vocab]).max()
+    assert err < 2e-4, err
+
+
+def test_train_step_decreases_loss():
+    from repro.optim.adamw import AdamW, cosine_schedule
+    from repro.train.step import make_train_step
+    cfg = get_config("deepseek-7b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=cosine_schedule(1e-3, 2, 50))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(m, opt, num_microbatches=2))
+    batch = make_batch(cfg)
+    losses = []
+    for i in range(15):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_sig_loss_attaches_and_trains():
+    """The paper-technique hook: sig-kernel aux loss on hidden trajectories."""
+    cfg = get_config("mamba2-780m").reduced().replace(sig_loss=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    batch["sig_target"] = 0.1 * jax.random.normal(
+        jax.random.PRNGKey(7), (B, 32, cfg.sig_loss_dim))
+    loss, metrics = m.loss(params, batch)
+    assert "sig" in metrics and np.isfinite(float(metrics["sig"]))
+    g = jax.grad(lambda p: m.loss(p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+def test_moe_aux_loss_present():
+    cfg = get_config("dbrx-132b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    _, metrics = m.loss(params, make_batch(cfg))
+    assert float(metrics["aux"]) > 0

@@ -1,0 +1,119 @@
+"""Truncated signatures: algorithms, identities, gradients, transforms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.tensoralg as ta
+import repro.core.transforms as tf
+from repro.core.signature import (signature, signature_direct,
+                                  signature_combine, path_increments)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def paths(seed, B=2, L=10, d=3, scale=0.3):
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, L, d)) * scale
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 99), d=st.integers(2, 4), depth=st.integers(2, 5),
+       L=st.integers(2, 12))
+def test_direct_equals_horner(seed, d, depth, L):
+    p = paths(seed, 2, L, d)
+    np.testing.assert_allclose(signature_direct(p, depth), signature(p, depth),
+                               rtol=2e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 99), split=st.integers(2, 8))
+def test_chen_identity(seed, split):
+    p = paths(seed, 2, 10, 3)
+    full = signature(p, 4)
+    a = signature(p[:, :split + 1], 4)
+    b = signature(p[:, split:], 4)
+    np.testing.assert_allclose(signature_combine(a, b, 3, 4), full,
+                               rtol=2e-5, atol=1e-6)
+
+
+def test_time_reversal_inverse():
+    p = paths(3)
+    s = signature(p, 4)
+    s_rev = signature(p[:, ::-1], 4)
+    ident = ta.chen(s, s_rev, 3, 4)
+    np.testing.assert_allclose(ident, np.zeros_like(ident), atol=1e-5)
+
+
+def test_reparameterisation_invariance():
+    """Inserting duplicate points (zero increments) never changes S(x)."""
+    p = paths(4, 2, 8, 3)
+    p_dup = jnp.concatenate([p[:, :4], p[:, 3:4], p[:, 4:]], axis=1)
+    np.testing.assert_allclose(signature(p, 4), signature(p_dup, 4),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_linear_path_is_tensor_exp():
+    z = jnp.array([[0.3, -0.5]])
+    p = jnp.stack([jnp.zeros((1, 2)), z], axis=1)       # one segment
+    np.testing.assert_allclose(signature(p, 5), ta.tensor_exp(z, 5),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_custom_vjp_matches_autodiff():
+    p = paths(5, 2, 8, 3)
+    g1 = jax.grad(lambda q: signature(q, 4).sum())(p)
+    g2 = jax.grad(lambda q: signature_direct(q, 4).sum())(p)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+def test_grad_finite_differences():
+    p = np.asarray(paths(6, 1, 5, 2))
+    f = lambda q: float(signature(jnp.asarray(q), 3).sum())
+    g = jax.grad(lambda q: signature(q, 3).sum())(jnp.asarray(p))
+    eps = 1e-4
+    for idx in [(0, 0, 0), (0, 2, 1), (0, 4, 0)]:
+        pp, pm = p.copy(), p.copy()
+        pp[idx] += eps
+        pm[idx] -= eps
+        fd = (f(pp) - f(pm)) / (2 * eps)
+        assert abs(fd - float(g[idx])) < 1e-2 * max(1.0, abs(fd))
+
+
+def test_stream_mode():
+    p = paths(7, 2, 6, 3)
+    stream = signature(p, 3, stream=True)
+    assert stream.shape[-2] == 5
+    np.testing.assert_allclose(stream[:, -1], signature(p, 3),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(stream[:, 0],
+                               signature(p[:, :2], 3), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("time_aug,lead_lag", [(True, False), (False, True),
+                                               (True, True)])
+def test_transforms_on_the_fly_vs_materialised(time_aug, lead_lag):
+    p = paths(8, 2, 7, 2)
+    q = p
+    if lead_lag:
+        q = tf.lead_lag(q)
+    if time_aug:
+        q = tf.time_augment(q)
+    np.testing.assert_allclose(
+        signature(p, 3, time_aug=time_aug, lead_lag=lead_lag),
+        signature(q, 3), rtol=1e-5, atol=1e-6)
+
+
+def test_transform_increments_match_path_increments():
+    p = paths(9, 1, 6, 2)
+    z = tf.transform_increments(path_increments(p), True, True)
+    z_mat = path_increments(tf.time_augment(tf.lead_lag(p)))
+    np.testing.assert_allclose(z, z_mat, atol=1e-6)
+
+
+def test_transforms_differentiable():
+    p = paths(10, 1, 6, 2)
+    g = jax.grad(lambda q: signature(q, 3, lead_lag=True,
+                                     time_aug=True).sum())(p)
+    assert np.isfinite(np.asarray(g)).all()

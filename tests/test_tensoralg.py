@@ -1,0 +1,68 @@
+"""Algebraic invariants of the flattened truncated tensor algebra."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.tensoralg as ta
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * 0.3
+
+
+@pytest.mark.parametrize("d,depth", [(2, 3), (3, 4), (5, 2), (1, 5)])
+def test_layout_sizes(d, depth):
+    assert ta.sig_dim(d, depth) == sum(d ** k for k in range(1, depth + 1))
+    offs = ta.level_offsets(d, depth)
+    assert offs[0] == 0
+    assert all(b - a == d ** (k + 1)
+               for k, (a, b) in enumerate(zip(offs, offs[1:])))
+
+
+def test_split_join_roundtrip():
+    d, depth = 3, 4
+    x = rand(0, 7, ta.sig_dim(d, depth))
+    assert np.allclose(ta.join_levels(ta.split_levels(x, d, depth)), x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(2, 4), depth=st.integers(2, 4), seed=st.integers(0, 99))
+def test_chen_associative(d, depth, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a, b, c = (ta.tensor_exp(jax.random.normal(k, (d,)) * 0.4, depth)
+               for k in ks)
+    left = ta.chen(ta.chen(a, b, d, depth), c, d, depth)
+    right = ta.chen(a, ta.chen(b, c, d, depth), d, depth)
+    np.testing.assert_allclose(left, right, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(2, 4), depth=st.integers(2, 5), seed=st.integers(0, 99))
+def test_exp_inverse(d, depth, seed):
+    z = jax.random.normal(jax.random.PRNGKey(seed), (d,)) * 0.5
+    e = ta.tensor_exp(z, depth)
+    e_inv = ta.tensor_exp(-z, depth)
+    ident = ta.chen(e, e_inv, d, depth)
+    np.testing.assert_allclose(ident, np.zeros_like(ident), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(2, 3), depth=st.integers(2, 4), seed=st.integers(0, 99))
+def test_algebraic_inverse_matches_exp(d, depth, seed):
+    z = jax.random.normal(jax.random.PRNGKey(seed), (d,)) * 0.5
+    e = ta.tensor_exp(z, depth)
+    np.testing.assert_allclose(ta.sig_inverse(e, d, depth),
+                               ta.tensor_exp(-z, depth), rtol=1e-4, atol=1e-5)
+
+
+def test_identity_is_neutral():
+    d, depth = 3, 3
+    e = ta.tensor_exp(jnp.array([0.1, -0.2, 0.3]), depth)
+    ident = ta.identity_like((), d, depth)
+    np.testing.assert_allclose(ta.chen(ident, e, d, depth), e, atol=1e-6)
+    np.testing.assert_allclose(ta.chen(e, ident, d, depth), e, atol=1e-6)
