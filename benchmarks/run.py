@@ -19,12 +19,13 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=3)
     args, _ = ap.parse_known_args()
 
-    from . import (table1_signatures, table2_sigkernels, fig1_truncation_sweep,
+    from . import (table1_signatures, table2_sigkernels,
+                   table3_logsignatures, fig1_truncation_sweep,
                    fig2_length_sweep, grad_accuracy)
 
     print("name,us_per_call,derived")
-    for mod in (table1_signatures, table2_sigkernels, fig1_truncation_sweep,
-                fig2_length_sweep, grad_accuracy):
+    for mod in (table1_signatures, table2_sigkernels, table3_logsignatures,
+                fig1_truncation_sweep, fig2_length_sweep, grad_accuracy):
         for line in mod.run(quick=not args.full, repeats=args.repeats):
             print(line, flush=True)
 

@@ -1,0 +1,59 @@
+#!/usr/bin/env python
+"""Docs link-check: every relative markdown link must resolve to a file.
+
+    python docs/check_links.py
+
+Scans all *.md files in the repo (skipping hidden and vendored dirs),
+extracts inline links, and verifies local targets exist. External links
+(http/https/mailto) are not fetched — CI must stay hermetic. Also run as a
+test via tests/test_docs.py. Exits nonzero listing any broken links.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List, Tuple
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache", "node_modules"}
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def markdown_files() -> List[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        out.extend(os.path.join(dirpath, f) for f in filenames
+                   if f.endswith(".md"))
+    return sorted(out)
+
+
+def broken_links() -> List[Tuple[str, str]]:
+    bad = []
+    for path in markdown_files():
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            local = target.split("#", 1)[0]
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), local))
+            if not os.path.exists(resolved):
+                bad.append((os.path.relpath(path, ROOT), target))
+    return bad
+
+
+def main() -> int:
+    bad = broken_links()
+    for src, target in bad:
+        print(f"BROKEN {src}: {target}")
+    n = len(markdown_files())
+    print(f"checked {n} markdown files, {len(bad)} broken links")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

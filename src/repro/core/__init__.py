@@ -1,16 +1,21 @@
 """Core signature computations — the paper's contribution as composable JAX ops."""
 
+from . import lyndon
 from . import tensoralg
 from .signature import (signature, signature_direct, signature_combine,
                         path_increments, transformed_dim)
+from .logsignature import (logsignature, logsignature_combine,
+                           logsignature_dim)
 from .sigkernel import (sigkernel, sigkernel_gram, solve_goursat,
                         solve_goursat_grad, delta_matrix)
 from .transforms import time_augment, lead_lag, basepoint, transform_increments
 from . import losses
 
 __all__ = [
-    "tensoralg", "signature", "signature_direct", "signature_combine",
-    "path_increments", "transformed_dim", "sigkernel", "sigkernel_gram",
+    "lyndon", "tensoralg", "signature", "signature_direct",
+    "signature_combine", "path_increments", "transformed_dim",
+    "logsignature", "logsignature_combine", "logsignature_dim",
+    "sigkernel", "sigkernel_gram",
     "solve_goursat", "solve_goursat_grad", "delta_matrix", "time_augment",
     "lead_lag", "basepoint", "transform_increments", "losses",
 ]

@@ -1,0 +1,215 @@
+"""Lyndon-word machinery for log-signatures (free Lie algebra bases).
+
+The log-signature of a path lives in the free Lie algebra L^N(R^d), a linear
+subspace of the truncated tensor algebra T^N(R^d) of dimension equal to the
+number of Lyndon words of length <= N over a d-letter alphabet (Witt's
+formula).  Two coordinate systems on that subspace are supported, mirroring
+``signatory``:
+
+* ``"lyndon"`` — the coefficient of each Lyndon *word* read directly off the
+  flat tensor expansion.  Because the expansion of a bracketed Lyndon word is
+  the word itself plus lexicographically-greater words of the same length,
+  this extraction is a change of basis (a gather — the cheapest projection,
+  and the one the fused Pallas path uses).
+* ``"brackets"`` — coefficients with respect to the Lyndon (Chen-Fox-Lyndon)
+  *bracket* basis itself, recovered from the word coefficients by solving the
+  unitriangular change-of-basis system.
+
+Everything data-independent (word enumeration, bracketing, the expansion
+matrix, the triangular solve) is computed ONCE per (d, depth) in NumPy at
+trace time and cached, so the jnp-facing ``compress``/``expand`` maps are a
+static gather / matmul — fully jit- and vmap-compatible.
+
+Ordering convention: words are grouped by length, lexicographic within a
+length — matching the flat level layout of ``repro.core.tensoralg``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tensoralg import level_offsets, sig_dim
+
+Word = Tuple[int, ...]
+
+
+# ---------------------------------------------------------------------------
+# enumeration (Duval's algorithm) and Witt's formula
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def lyndon_words(d: int, depth: int) -> Tuple[Word, ...]:
+    """All Lyndon words over {0..d-1} of length 1..depth, (length, lex)-ordered."""
+    by_len: List[List[Word]] = [[] for _ in range(depth + 1)]
+    w = [-1]
+    while w:
+        w[-1] += 1
+        m = len(w)
+        by_len[m].append(tuple(w))
+        while len(w) < depth:
+            w.append(w[len(w) - m])
+        while w and w[-1] == d - 1:
+            w.pop()
+    # Duval emits in global lex order; regroup as (length, lex-within-length).
+    return tuple(wd for length in range(1, depth + 1)
+                 for wd in sorted(by_len[length]))
+
+
+def _mobius(n: int) -> int:
+    if n == 1:
+        return 1
+    mu, m = 1, n
+    p = 2
+    while p * p <= m:
+        if m % p == 0:
+            m //= p
+            if m % p == 0:
+                return 0
+            mu = -mu
+        p += 1
+    if m > 1:
+        mu = -mu
+    return mu
+
+
+def witt_dims(d: int, depth: int) -> List[int]:
+    """Number of Lyndon words of each length 1..depth (Witt's formula)."""
+    out = []
+    for n in range(1, depth + 1):
+        total = sum(_mobius(m) * d ** (n // m) for m in range(1, n + 1)
+                    if n % m == 0)
+        out.append(total // n)
+    return out
+
+
+def logsig_dim(d: int, depth: int) -> int:
+    """Dimension of the depth-truncated free Lie algebra over R^d."""
+    return sum(witt_dims(d, depth))
+
+
+# ---------------------------------------------------------------------------
+# standard bracketing and its tensor expansion
+# ---------------------------------------------------------------------------
+
+def _is_lyndon(w: Word) -> bool:
+    return all(w < w[i:] + w[:i] for i in range(1, len(w)))
+
+
+@functools.lru_cache(maxsize=None)
+def standard_bracketing(w: Word):
+    """Chen-Fox-Lyndon bracketing: w = uv with v the longest proper Lyndon
+    suffix; returns a nested tuple of letters."""
+    if len(w) == 1:
+        return w[0]
+    if not _is_lyndon(w):
+        raise ValueError(f"not a Lyndon word: {w}")
+    for i in range(1, len(w)):
+        if _is_lyndon(w[i:]):
+            return (standard_bracketing(w[:i]), standard_bracketing(w[i:]))
+    raise AssertionError("unreachable: every Lyndon word factorises")
+
+
+def bracket_string(w: Word) -> str:
+    """Human-readable standard bracketing, e.g. ``[0, [0, 1]]``."""
+    def fmt(b):
+        if isinstance(b, int):
+            return str(b)
+        return f"[{fmt(b[0])}, {fmt(b[1])}]"
+    return fmt(standard_bracketing(w))
+
+
+def _expand_bracket(b) -> Dict[Word, float]:
+    """Tensor-word coefficients of a nested commutator ``[u, v] = uv - vu``."""
+    if isinstance(b, int):
+        return {(b,): 1.0}
+    u, v = _expand_bracket(b[0]), _expand_bracket(b[1])
+    out: Dict[Word, float] = {}
+    for wu, cu in u.items():
+        for wv, cv in v.items():
+            out[wu + wv] = out.get(wu + wv, 0.0) + cu * cv
+            out[wv + wu] = out.get(wv + wu, 0.0) - cu * cv
+    return {w: c for w, c in out.items() if c != 0.0}
+
+
+def word_to_flat_index(w: Word, d: int, depth: int) -> int:
+    """Position of tensor word w inside the flat level-1..depth layout."""
+    k = len(w)
+    within = 0
+    for a in w:
+        within = within * d + a
+    return level_offsets(d, depth)[k - 1] + within
+
+
+# ---------------------------------------------------------------------------
+# cached static tables
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def lyndon_flat_indices(d: int, depth: int) -> np.ndarray:
+    """Flat-layout index of every Lyndon word — the "final gather" table."""
+    return np.asarray([word_to_flat_index(w, d, depth)
+                       for w in lyndon_words(d, depth)], dtype=np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def expand_matrix(d: int, depth: int) -> np.ndarray:
+    """E (n_lyndon, sig_dim): row i is the tensor expansion of bracket i."""
+    words = lyndon_words(d, depth)
+    E = np.zeros((len(words), sig_dim(d, depth)), dtype=np.float64)
+    for i, w in enumerate(words):
+        for tw, c in _expand_bracket(standard_bracketing(w)).items():
+            E[i, word_to_flat_index(tw, d, depth)] = c
+    return E
+
+
+@functools.lru_cache(maxsize=None)
+def _basis_change(d: int, depth: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(M, M^{-1}) with M[i, j] = coeff of Lyndon word i in bracket j.
+
+    With (length, lex) ordering M is block-diagonal by length and
+    lower-unitriangular within each block, hence exactly invertible.
+    """
+    M = expand_matrix(d, depth)[:, lyndon_flat_indices(d, depth)].T
+    assert np.allclose(np.diag(M), 1.0) and np.allclose(np.triu(M, 1), 0.0)
+    return M, np.linalg.inv(M)
+
+
+# ---------------------------------------------------------------------------
+# jit-compatible compress / expand maps
+# ---------------------------------------------------------------------------
+
+def compress(logsig_flat: jax.Array, d: int, depth: int,
+             mode: str = "lyndon") -> jax.Array:
+    """Project a flat log-signature (..., sig_dim) onto Lie coordinates
+    (..., logsig_dim).
+
+    ``mode="lyndon"``: gather the Lyndon-word coefficients (a static take).
+    ``mode="brackets"``: additionally apply the precomputed inverse of the
+    unitriangular word->bracket change of basis.
+    """
+    idx = jnp.asarray(lyndon_flat_indices(d, depth))
+    words = jnp.take(logsig_flat, idx, axis=-1)
+    if mode == "lyndon":
+        return words
+    if mode == "brackets":
+        _, Minv = _basis_change(d, depth)
+        return words @ jnp.asarray(Minv, dtype=logsig_flat.dtype).T
+    raise ValueError(f"unknown compress mode: {mode!r}")
+
+
+def expand(coeffs: jax.Array, d: int, depth: int,
+           mode: str = "lyndon") -> jax.Array:
+    """Inverse of :func:`compress`: Lie coordinates (..., logsig_dim) back to
+    the flat tensor layout (..., sig_dim)."""
+    E = jnp.asarray(expand_matrix(d, depth), dtype=coeffs.dtype)
+    if mode == "lyndon":
+        _, Minv = _basis_change(d, depth)
+        coeffs = coeffs @ jnp.asarray(Minv, dtype=coeffs.dtype).T
+    elif mode != "brackets":
+        raise ValueError(f"unknown expand mode: {mode!r}")
+    return coeffs @ E

@@ -343,6 +343,11 @@ def sigkernel(x: jax.Array, y: jax.Array, *, lam1: int = 0, lam2: int = 0,
 
     Differentiable w.r.t. x and y with pySigLib's exact one-pass backward.
     ``lam1``/``lam2`` are the independent dyadic refinement orders.
+
+    ``use_pallas`` is a plain bool defaulting to False — it is NOT
+    auto-selected from the backend (unlike ``signature``/``logsignature``,
+    whose ``use_pallas=None`` means auto).  Set it explicitly on TPU; see
+    docs/solver_guide.md.
     """
     delta = delta_matrix(x, y, time_aug=time_aug, lead_lag=lead_lag)
     return _sigkernel_from_delta(delta, lam1, lam2, use_pallas)
@@ -351,7 +356,12 @@ def sigkernel(x: jax.Array, y: jax.Array, *, lam1: int = 0, lam2: int = 0,
 def sigkernel_gram(X: jax.Array, Y: jax.Array, *, lam1: int = 0, lam2: int = 0,
                    time_aug: bool = False, lead_lag: bool = False,
                    use_pallas: bool = False) -> jax.Array:
-    """Gram matrix K[a, b] = k(X_a, Y_b).  X: (Bx, L, d), Y: (By, L', d) -> (Bx, By)."""
+    """Gram matrix K[a, b] = k(X_a, Y_b).  X: (Bx, L, d), Y: (By, L', d) -> (Bx, By).
+
+    Materialises all Bx·By Δ matrices at once — use
+    :func:`sigkernel_gram_blocked` when that does not fit in memory.
+    ``use_pallas`` defaults to False and is never auto (docs/solver_guide.md).
+    """
     dX = tf.transform_increments(path_increments(X), time_aug, lead_lag)
     dY = tf.transform_increments(path_increments(Y), time_aug, lead_lag)
     # one big matmul for all pairs: (Bx, Lx, By, Ly) — batched per pair after
@@ -370,6 +380,9 @@ def sigkernel_gram_blocked(X: jax.Array, Y: jax.Array, *, row_block: int = 8,
 
     Differentiable (the per-block solve uses autodiff through the selected
     solver; the exact custom backward handles use_pallas=True).
+    ``solver="antidiag"`` is the fast CPU path (any other value falls back to
+    the row-major reference); ``use_pallas`` defaults to False and is never
+    auto — see docs/solver_guide.md.
     """
     dX = tf.transform_increments(path_increments(X), time_aug, lead_lag)
     dY = tf.transform_increments(path_increments(Y), time_aug, lead_lag)

@@ -170,8 +170,12 @@ def signature(path: jax.Array, depth: int, *, time_aug: bool = False,
       path: (..., L, d) discrete stream; linearly interpolated.
       depth: truncation level N.
       time_aug / lead_lag: §4 transforms, applied on-the-fly to increments.
-      use_pallas: route the hot loop through the Pallas TPU kernel
-        (default: auto — kernels module decides based on backend).
+      use_pallas: route the hot loop through the Pallas TPU kernel.  Default
+        ``None`` means auto: ``repro.kernels.signature.ops.default_use_pallas``
+        decides from the active backend (True on TPU, False elsewhere —
+        on CPU/GPU the kernel would run in interpret mode).  Pass an explicit
+        bool to override; see docs/solver_guide.md.  Ignored when
+        ``stream=True`` (the streamed scan is pure JAX).
       stream: if True return signatures of all prefixes (..., L-1, sig_dim).
 
     Returns:
@@ -181,6 +185,9 @@ def signature(path: jax.Array, depth: int, *, time_aug: bool = False,
     z = _effective_increments(path, time_aug, lead_lag)
     if stream:
         return _signature_stream_from_increments(z, depth)
+    if use_pallas is None:
+        from repro.kernels.signature import ops as sig_ops
+        use_pallas = sig_ops.default_use_pallas()
     if use_pallas:
         from repro.kernels.signature import ops as sig_ops
         return sig_ops.signature_from_increments(z, depth)

@@ -100,6 +100,37 @@ def chen(a: jax.Array, b: jax.Array, d: int, depth: int) -> jax.Array:
     )
 
 
+def _levels_mul(a: List, b: List, depth: int) -> List:
+    """Truncated product of two scalar-free elements given as level lists.
+
+    Entries may be ``None`` (zero level); levels above ``depth`` are dropped.
+    The result's level ``tot`` is Σ_{i} a_i ⊗ b_{tot-i}.
+    """
+    out: List = [None] * depth
+    for tot in range(2, depth + 1):
+        acc = None
+        for i in range(1, tot):
+            if a[i - 1] is None or b[tot - i - 1] is None:
+                continue
+            term = outer(a[i - 1], b[tot - i - 1])
+            acc = term if acc is None else acc + term
+        out[tot - 1] = acc
+    return out
+
+
+def _power_series(al: List[jax.Array], depth: int, coeff) -> List[jax.Array]:
+    """Σ_{k>=1} coeff(k) · u^{⊗k} truncated at ``depth``, u given as levels."""
+    out = [coeff(1) * x for x in al]
+    power: List = list(al)
+    for k in range(2, depth + 1):
+        power = _levels_mul(power, al, depth)   # u^{⊗k}; levels < k are None
+        c = coeff(k)
+        for lvl in range(k, depth + 1):
+            if power[lvl - 1] is not None:
+                out[lvl - 1] = out[lvl - 1] + c * power[lvl - 1]
+    return out
+
+
 def sig_inverse(a: jax.Array, d: int, depth: int) -> jax.Array:
     """Group inverse of a signature: S(x)^{-1} = S(time-reversed x).
 
@@ -107,26 +138,34 @@ def sig_inverse(a: jax.Array, d: int, depth: int) -> jax.Array:
     b = Σ_{k>=0} (-1)^k (a - 1)^{⊗k}, truncated at ``depth``.
     """
     al = split_levels(a, d, depth)
-    # accumulate powers of u := (0, a_1, ..., a_N)  (nilpotent to depth)
-    out = [-x for x in al]                      # -u
-    power = [x for x in al]                     # u^1
-    for k in range(2, depth + 1):
-        # power <- power ⊗ u   (only levels <= depth survive)
-        new_power: List[jax.Array] = [None] * depth  # type: ignore
-        for tot in range(k, depth + 1):
-            acc = None
-            for i in range(k - 1, tot):        # level i from power (>= k-1), tot-i from u
-                if power[i - 1] is None:
-                    continue
-                term = outer(power[i - 1], al[tot - i - 1])
-                acc = term if acc is None else acc + term
-            new_power[tot - 1] = acc
-        power = new_power
-        sign = 1.0 if k % 2 == 0 else -1.0
-        for lvl in range(k, depth + 1):
-            if power[lvl - 1] is not None:
-                out[lvl - 1] = out[lvl - 1] + sign * power[lvl - 1]
-    return join_levels(out)
+    return join_levels(_power_series(al, depth, lambda k: (-1.0) ** k))
+
+
+def tensor_log(a: jax.Array, d: int, depth: int) -> jax.Array:
+    """Truncated log of a group-like element (the dual of :func:`tensor_exp`).
+
+    ``a`` is a flat signature (scalar part 1 implicit); returns the flat
+    Lie element log(1 + u) = Σ_{k>=1} (-1)^{k+1} u^{⊗k} / k with u = a.
+    The result lives in the free Lie algebra — its Lyndon-coordinate
+    projection is ``repro.core.lyndon.compress``.
+    """
+    al = split_levels(a, d, depth)
+    return join_levels(
+        _power_series(al, depth, lambda k: (-1.0) ** (k + 1) / k))
+
+
+def tensor_exp_full(a: jax.Array, d: int, depth: int) -> jax.Array:
+    """Truncated exp of an arbitrary scalar-free element (flat in / flat out).
+
+    Generalises :func:`tensor_exp` (which only handles level-1 increments):
+    exp(u) = Σ_{k>=0} u^{⊗k}/k!, scalar part implicit.  Inverse of
+    :func:`tensor_log` on the image of log.
+    """
+    al = split_levels(a, d, depth)
+    fact = [1.0]
+    for k in range(1, depth + 1):
+        fact.append(fact[-1] * k)
+    return join_levels(_power_series(al, depth, lambda k: 1.0 / fact[k]))
 
 
 def sig_inner(a: jax.Array, b: jax.Array, d: int, depth: int,

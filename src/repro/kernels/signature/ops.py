@@ -22,6 +22,13 @@ _MAX_BT = 128
 _LB = 256
 
 
+def default_use_pallas() -> bool:
+    """Backend-based default for ``use_pallas=None``: the compiled kernel is
+    the fast path on TPU; elsewhere it runs in interpret mode, so the pure-JAX
+    implementation is preferred."""
+    return jax.default_backend() == "tpu"
+
+
 def choose_BT(d: int, depth: int, LB: int) -> int:
     sd = sig_dim(d, depth)
     bmax = d ** max(depth - 1, 1)
@@ -71,3 +78,24 @@ def _bwd(depth, res, g):
 
 
 signature_from_increments.defvjp(_fwd, _bwd)
+
+
+def logsignature_from_increments(z: jax.Array, depth: int,
+                                 mode: str = "lyndon") -> jax.Array:
+    """Fused increments -> log-signature via the Pallas Horner kernel.
+
+    The Horner recursion (the O(L) hot loop) runs through the same
+    ``pallas_call`` as :func:`signature_from_increments` — no forked kernel —
+    and the log + Lyndon projection are applied as a cheap epilogue: a fixed
+    polynomial in the signature levels followed by a static gather
+    (``mode="lyndon"``) or gather+matmul (``mode="brackets"``).  Gradients
+    reuse the exact time-reversed deconstruction backward of the signature
+    kernel wrapper via autodiff composition.
+    """
+    from repro.core.logsignature import MODES, _project
+    from repro.core.tensoralg import tensor_log
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    d = z.shape[-1]
+    sig = signature_from_increments(z, depth)
+    return _project(tensor_log(sig, d, depth), d, depth, mode)

@@ -49,6 +49,11 @@ def test_psum_compressed_multidevice():
         from jax.sharding import PartitionSpec as P
         from repro.optim.compression import psum_compressed
 
+        try:
+            from jax import shard_map
+        except ImportError:
+            from jax.experimental.shard_map import shard_map
+
         mesh = jax.make_mesh((4,), ("pod",))
         g = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
         ef = jnp.zeros((4, 256))
@@ -57,8 +62,8 @@ def test_psum_compressed_multidevice():
             m, ef_new = psum_compressed(g[0], ef[0], "pod")
             return m[None], ef_new[None]
 
-        fm = jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                           out_specs=(P("pod"), P("pod")))
+        fm = shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                       out_specs=(P("pod"), P("pod")))
         mean_c, ef_new = fm(g, ef)
         exact = g.mean(axis=0)
         err = float(jnp.abs(mean_c[0] - exact).max())

@@ -1,0 +1,57 @@
+"""Docs stay truthful: links resolve and documented modules import."""
+
+import importlib
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(ROOT, "docs"))
+
+import check_links  # noqa: E402
+
+
+def test_no_broken_markdown_links():
+    bad = check_links.broken_links()
+    assert not bad, f"broken links: {bad}"
+
+
+def test_docs_cover_required_pages():
+    for page in ["docs/index.md", "docs/solver_guide.md",
+                 "docs/api/core.signature.md", "docs/api/core.logsignature.md",
+                 "docs/api/core.sigkernel.md", "docs/api/kernels.md"]:
+        assert os.path.exists(os.path.join(ROOT, page)), page
+
+
+@pytest.mark.parametrize("module", [
+    "repro.core.signature", "repro.core.logsignature", "repro.core.lyndon",
+    "repro.core.sigkernel", "repro.kernels.signature.ops",
+    "repro.kernels.sigkernel_pde.ops",
+])
+def test_documented_modules_import(module):
+    importlib.import_module(module)
+
+
+def test_documented_symbols_exist():
+    """Spot-check that API pages don't document vapourware."""
+    # note: repro.core re-exports functions that shadow their submodules
+    # (repro.core.logsignature is the function), so resolve via importlib.
+    ls = importlib.import_module("repro.core.logsignature")
+    ly = importlib.import_module("repro.core.lyndon")
+    sk = importlib.import_module("repro.core.sigkernel")
+    ops = importlib.import_module("repro.kernels.signature.ops")
+    for obj, names in [
+        (ls, ["logsignature", "logsignature_combine", "logsignature_dim"]),
+        (ly, ["lyndon_words", "witt_dims", "logsig_dim", "compress",
+              "expand", "standard_bracketing", "bracket_string",
+              "lyndon_flat_indices", "expand_matrix"]),
+        (sk, ["sigkernel", "sigkernel_gram", "sigkernel_gram_blocked",
+              "solve_goursat", "solve_goursat_antidiag",
+              "solve_goursat_grad", "solve_goursat_grad_pde_approx",
+              "delta_matrix"]),
+        (ops, ["signature_from_increments", "logsignature_from_increments",
+               "default_use_pallas", "choose_BT"]),
+    ]:
+        for name in names:
+            assert hasattr(obj, name), (obj.__name__, name)

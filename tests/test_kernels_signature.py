@@ -68,3 +68,29 @@ def test_length_block_boundary():
         np.testing.assert_allclose(s_pal, s_ref, rtol=1e-4, atol=1e-6)
     finally:
         sops._LB = old
+
+
+# ---------------------------------------------------------------------------
+# fused increments -> log-signature epilogue
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["lyndon", "brackets", "expand"])
+def test_logsignature_fused_vs_pure(mode):
+    from repro.core.logsignature import logsignature_from_increments
+    z = incs(5, 3, 9, 3)
+    ls_pal = ops.logsignature_from_increments(z, 4, mode)
+    ls_ref = logsignature_from_increments(z, 4, mode)
+    denom = max(float(jnp.abs(ls_ref).max()), 1e-6)
+    assert float(jnp.abs(ls_pal - ls_ref).max()) / denom < 5e-5
+
+
+def test_logsignature_fused_gradients():
+    from repro.core.logsignature import logsignature
+    p = jax.random.normal(jax.random.PRNGKey(6), (2, 7, 3)) * 0.3
+    g1 = jax.grad(lambda q: logsignature(q, 3, use_pallas=True).sum())(p)
+    g2 = jax.grad(lambda q: logsignature(q, 3, use_pallas=False).sum())(p)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+def test_default_use_pallas_is_backend_aware():
+    assert ops.default_use_pallas() == (jax.default_backend() == "tpu")

@@ -1,0 +1,94 @@
+"""Lyndon-word machinery: enumeration, Witt's formula, basis changes."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.lyndon as ly
+import repro.core.tensoralg as ta
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def brute_force_lyndon(d, n):
+    """All length-n words strictly smaller than every proper rotation."""
+    out = []
+    for w in itertools.product(range(d), repeat=n):
+        if all(w < w[i:] + w[:i] for i in range(1, n)):
+            out.append(w)
+    return out
+
+
+@pytest.mark.parametrize("d,depth", [(2, 5), (3, 4), (5, 3)])
+def test_enumeration_matches_brute_force(d, depth):
+    words = ly.lyndon_words(d, depth)
+    by_len = {}
+    for w in words:
+        by_len.setdefault(len(w), []).append(w)
+    for n in range(1, depth + 1):
+        expect = sorted(brute_force_lyndon(d, n))
+        assert by_len.get(n, []) == expect          # lex-sorted within length
+
+
+@pytest.mark.parametrize("d,depth", [(2, 6), (3, 5), (4, 4), (5, 5), (7, 3)])
+def test_witt_formula_counts(d, depth):
+    words = ly.lyndon_words(d, depth)
+    counts = [sum(1 for w in words if len(w) == n) for n in range(1, depth + 1)]
+    assert counts == ly.witt_dims(d, depth)
+    assert len(words) == ly.logsig_dim(d, depth)
+
+
+def test_known_witt_values():
+    # necklace-polynomial classics
+    assert ly.witt_dims(2, 5) == [2, 1, 2, 3, 6]
+    assert ly.witt_dims(3, 4) == [3, 3, 8, 18]
+
+
+def test_standard_bracketing():
+    assert ly.bracket_string((0, 1)) == "[0, 1]"
+    assert ly.bracket_string((0, 0, 1)) == "[0, [0, 1]]"
+    assert ly.bracket_string((0, 1, 1)) == "[[0, 1], 1]"
+    with pytest.raises(ValueError):
+        ly.standard_bracketing((1, 0))              # not Lyndon
+
+
+def test_expansion_is_unitriangular():
+    """Bracket of word w expands to w + lex-greater words of the same length."""
+    d, depth = 3, 4
+    words = ly.lyndon_words(d, depth)
+    E = ly.expand_matrix(d, depth)
+    idx = ly.lyndon_flat_indices(d, depth)
+    for i, w in enumerate(words):
+        assert E[i, idx[i]] == 1.0
+        for j in range(len(words)):
+            if E[j, idx[i]] != 0.0:
+                assert len(words[j]) == len(w) and words[i] >= words[j]
+
+
+@pytest.mark.parametrize("mode", ["lyndon", "brackets"])
+@pytest.mark.parametrize("d,depth", [(2, 5), (3, 4), (5, 3)])
+def test_expand_compress_roundtrip(d, depth, mode):
+    key = jax.random.PRNGKey(0)
+    c = jax.random.normal(key, (4, ly.logsig_dim(d, depth)))
+    back = ly.compress(ly.expand(c, d, depth, mode), d, depth, mode)
+    np.testing.assert_allclose(back, c, rtol=1e-5, atol=1e-6)
+
+
+def test_expanded_element_is_lie():
+    """expand() lands in the free Lie algebra: log(exp(u)) == u there, and the
+    shuffle-degeneracy witness level-2 symmetric part vanishes."""
+    d, depth = 3, 3
+    c = jax.random.normal(jax.random.PRNGKey(1), (ly.logsig_dim(d, depth),))
+    u = ly.expand(c, d, depth, "brackets")
+    lvl2 = ta.split_levels(u, d, depth)[1].reshape(d, d)
+    np.testing.assert_allclose(lvl2 + lvl2.T, np.zeros((d, d)), atol=1e-5)
+
+
+def test_bad_mode_raises():
+    with pytest.raises(ValueError):
+        ly.compress(jnp.zeros((ta.sig_dim(2, 2),)), 2, 2, "nope")
+    with pytest.raises(ValueError):
+        ly.expand(jnp.zeros((ly.logsig_dim(2, 2),)), 2, 2, "nope")

@@ -1,0 +1,33 @@
+"""The README quickstart must be executable as written.
+
+Extracts every ```python fenced block from README.md and runs them in order
+in one shared namespace (later blocks may use names from earlier ones).
+"""
+
+import os
+import re
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+README = os.path.join(ROOT, "README.md")
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _blocks():
+    with open(README, encoding="utf-8") as f:
+        return _FENCE.findall(f.read())
+
+
+def test_readme_has_python_snippets():
+    assert len(_blocks()) >= 3
+
+
+def test_readme_snippets_execute():
+    ns = {}
+    for i, block in enumerate(_blocks()):
+        try:
+            exec(compile(block, f"README.md:block{i}", "exec"), ns)
+        except Exception as e:      # pragma: no cover - failure path
+            pytest.fail(f"README python block {i} failed: {e}\n---\n{block}")
