@@ -6,6 +6,11 @@ on CPU, the Pallas kernel on TPU).
 
 Backward: autodiff-through-the-solver (baseline) vs pySigLib's exact one-pass
 backward (Alg 4) wired through custom_vjp.
+
+Gram section (beyond-paper): the unified engine of ``repro.core.gram``
+through every registered backend — dense, fused-Δ, and the symmetric
+upper-triangle fast path.  ``--smoke`` runs tiny shapes through every
+backend (forward + grad) so dispatch regressions fail fast in CI.
 """
 
 from __future__ import annotations
@@ -13,12 +18,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
+from repro.core.gram import sigkernel_gram
 from repro.core.sigkernel import (sigkernel, delta_matrix, solve_goursat,
                                   solve_goursat_antidiag)
 from .common import bench, row
 
 PAPER_CELLS = [(128, 256, 8), (128, 512, 16), (128, 1024, 32)]
 QUICK_CELLS = [(16, 64, 8), (16, 128, 16), (8, 256, 32)]
+GRAM_CELLS_QUICK = [(8, 32, 4)]
+GRAM_CELLS_PAPER = [(32, 128, 8)]
 
 
 def run(quick: bool = True, repeats: int = 5):
@@ -46,4 +55,88 @@ def run(quick: bool = True, repeats: int = 5):
         lines.append(row(f"{tag}_bwd_autodiff", t_ga))
         lines.append(row(f"{tag}_bwd_exact_alg4", t_ge,
                          f"speedup_vs_autodiff={t_ga / t_ge:.2f}x"))
+
+    lines.extend(run_gram(quick=quick, repeats=repeats))
     return lines
+
+
+def run_gram(quick: bool = True, repeats: int = 5,
+             backends=None):
+    """Gram engine rows: every backend × {dense, symmetric} (+ fused)."""
+    cells = GRAM_CELLS_QUICK if quick else GRAM_CELLS_PAPER
+    if backends is None:
+        backends = dispatch.backends_for("gram")
+        if not dispatch.on_tpu():
+            # interpret-mode Pallas timings measure nothing meaningful and
+            # dominate CPU wall-clock; --smoke covers those for correctness
+            backends = [b for b in backends if not dispatch.get(b).needs_tpu]
+    # reference first so the other rows can report their speedup against it
+    backends = (["reference"] if "reference" in backends else []) + \
+        [b for b in backends if b != "reference"]
+    lines = []
+    for (B, L, d) in cells:
+        X = jax.random.normal(jax.random.PRNGKey(2), (B, L, d)) * 0.1
+        Y = jax.random.normal(jax.random.PRNGKey(3), (B, L, d)) * 0.1
+        tag = f"table2_gram_B{B}_L{L}_d{d}"
+        t_ref = None
+        for b in backends:
+            f = jax.jit(lambda x, y, b=b: sigkernel_gram(x, y, backend=b))
+            t = bench(f, X, Y, repeats=repeats)
+            extra = "" if t_ref is None else f"speedup_vs_reference={t_ref / t:.2f}x"
+            if b == "reference":
+                t_ref = t
+            lines.append(row(f"{tag}_dense_{b}", t, extra))
+        # symmetric fast path: ~half the PDE solves of the dense Kxx
+        for b in backends:
+            f_sym = jax.jit(lambda x, b=b: sigkernel_gram(x, backend=b))
+            t_sym = bench(f_sym, X, repeats=repeats)
+            lines.append(row(f"{tag}_symmetric_{b}", t_sym))
+    return lines
+
+
+def run_smoke(repeats: int = 1):
+    """Tiny shapes through EVERY backend, forward and grad — the CI smoke
+    job.  Any dispatch/registry regression fails here in seconds."""
+    import numpy as np
+    B, L, d = 3, 8, 2
+    X = jax.random.normal(jax.random.PRNGKey(0), (B, L, d)) * 0.1
+    Y = jax.random.normal(jax.random.PRNGKey(1), (B, L, d)) * 0.1
+    lines = []
+    K_ref = sigkernel_gram(X, Y, backend="reference")
+    for b in dispatch.backends_for("gram"):
+        t = bench(lambda: sigkernel_gram(X, Y, backend=b), repeats=repeats,
+                  warmup=1)
+        K = sigkernel_gram(X, Y, backend=b)
+        np.testing.assert_allclose(K, K_ref, rtol=5e-4, atol=1e-5,
+                                   err_msg=f"smoke: {b} disagrees")
+        g = jax.grad(lambda q: sigkernel_gram(q, Y, backend=b).sum())(X)
+        assert np.isfinite(np.asarray(g)).all(), f"smoke: {b} grad not finite"
+        lines.append(row(f"smoke_gram_{b}", t, "ok"))
+    with dispatch.count_pair_solves() as c:
+        sigkernel_gram(X, backend="pallas_fused")
+    budget = B * (B + 1) // 2
+    assert c.total <= budget, (c.total, budget)
+    lines.append(row("smoke_symmetric_pair_solves", 0.0,
+                     f"solves={c.total}<=budget={budget}"))
+    for b in dispatch.backends_for("sigkernel"):
+        k = sigkernel(X, Y, backend=b)
+        np.testing.assert_allclose(
+            k, sigkernel(X, Y, backend="reference"), rtol=5e-4, atol=1e-5,
+            err_msg=f"smoke: sigkernel {b} disagrees")
+        lines.append(row(f"smoke_sigkernel_{b}", 0.0, "ok"))
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes through every backend; assert agreement")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    lines = (run_smoke(repeats=args.repeats) if args.smoke
+             else run(quick=not args.full, repeats=args.repeats))
+    for line in lines:
+        print(line, flush=True)

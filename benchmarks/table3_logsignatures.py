@@ -28,19 +28,19 @@ def run(quick: bool = True, repeats: int = 5):
         tag = f"table3_B{B}_L{L}_d{d}_N{N}"
         ratio = f"compress={logsig_dim(d, N)}/{sig_dim(d, N)}"
 
-        f_sig = jax.jit(lambda p: signature(p, N, use_pallas=False))
+        f_sig = jax.jit(lambda p: signature(p, N, backend="reference"))
         t_sig = bench(f_sig, path, repeats=repeats)
         lines.append(row(f"{tag}_signature", t_sig, ratio))
 
         for mode in ("lyndon", "brackets", "expand"):
             f_ls = jax.jit(lambda p, m=mode: logsignature(
-                p, N, mode=m, use_pallas=False))
+                p, N, mode=m, backend="reference"))
             t_ls = bench(f_ls, path, repeats=repeats)
             lines.append(row(f"{tag}_logsig_{mode}", t_ls,
                              f"epilogue_x{t_ls / max(t_sig, 1e-12):.2f}"))
 
         f_grad = jax.jit(jax.grad(
-            lambda p: logsignature(p, N, use_pallas=False).sum()))
+            lambda p: logsignature(p, N, backend="reference").sum()))
         lines.append(row(f"{tag}_logsig_grad",
                          bench(f_grad, path, repeats=repeats)))
     return lines

@@ -52,12 +52,24 @@ print("gram:", K.shape)
 mmd = losses.mmd2(x, y, unbiased=False)
 print("MMD^2:", float(mmd))
 
+# symmetric Gram: omit Y and only the upper triangle is solved (~2x fewer
+# PDE solves), mirrored into the full (4, 4) matrix
+Kxx = sigkernel_gram(x)
+print("symmetric gram:", Kxx.shape,
+      "sym err:", float(jnp.abs(Kxx - Kxx.T).max()))
+
 # exact gradients through the PDE solver (paper §3.4) — train anything
 g = jax.grad(lambda q: losses.mmd2(q, y, unbiased=False))(x)
 print("grad wrt paths:", g.shape, "finite:", bool(jnp.isfinite(g).all()))
 
-# --- Pallas TPU kernels (interpret mode on CPU) -----------------------------
-k_pallas = sigkernel(x, y, use_pallas=True)
+# --- backend registry (repro.core.dispatch) ---------------------------------
+# every entry point takes backend=; "auto" picks per platform; Pallas
+# kernels run in interpret mode on CPU (slow but correct)
+k_pallas = sigkernel(x, y, backend="pallas")
 print("pallas vs jnp:", float(jnp.abs(k_pallas - sigkernel(x, y)).max()))
-sig_pallas = signature(paths, depth=4, use_pallas=True)
+sig_pallas = signature(paths, depth=4, backend="pallas")
 print("pallas signature err:", float(jnp.abs(sig_pallas - sig).max()))
+
+# the fused-Δ Gram backend (Δ never exists in HBM), differentiable too
+K_fused = sigkernel_gram(x, y, backend="pallas_fused")
+print("fused gram err:", float(jnp.abs(K_fused - K).max()))

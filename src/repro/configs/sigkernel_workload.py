@@ -7,3 +7,9 @@ CONFIG = register(ArchConfig(
     name="sigkernel-workload", family="sigkernel",
     n_layers=0, d_model=0, n_heads=0, n_kv_heads=0, d_ff=0, vocab=0,
 ))
+
+# Gram-engine settings for the dry-run / roofline cells: per-device row
+# blocks keep live Δ memory at row_block·By·L² floats, and the CPU-lowered
+# compile cells use the antidiag wavefront (the Pallas backends would lower
+# for TPU only).  repro.launch.dryrun reads these.
+GRAM_ENGINE_DEFAULTS = dict(backend="antidiag", row_block=2)

@@ -1,21 +1,26 @@
 """Core signature computations — the paper's contribution as composable JAX ops."""
 
+from . import dispatch
 from . import lyndon
 from . import tensoralg
 from .signature import (signature, signature_direct, signature_combine,
                         path_increments, transformed_dim)
 from .logsignature import (logsignature, logsignature_combine,
                            logsignature_dim)
-from .sigkernel import (sigkernel, sigkernel_gram, solve_goursat,
+from .sigkernel import (sigkernel, solve_goursat,
                         solve_goursat_grad, delta_matrix)
+from .gram import sigkernel_gram
+from .sigkernel import sigkernel_gram_blocked
 from .transforms import time_augment, lead_lag, basepoint, transform_increments
+from . import gram
 from . import losses
 
 __all__ = [
-    "lyndon", "tensoralg", "signature", "signature_direct",
+    "dispatch", "gram", "lyndon", "tensoralg", "signature",
+    "signature_direct",
     "signature_combine", "path_increments", "transformed_dim",
     "logsignature", "logsignature_combine", "logsignature_dim",
-    "sigkernel", "sigkernel_gram",
+    "sigkernel", "sigkernel_gram", "sigkernel_gram_blocked",
     "solve_goursat", "solve_goursat_grad", "delta_matrix", "time_augment",
     "lead_lag", "basepoint", "transform_increments", "losses",
 ]

@@ -1,0 +1,223 @@
+"""Unified solver-backend registry and dispatch (the single switchboard).
+
+Every compute-heavy entry point (``signature``, ``logsignature``,
+``sigkernel``, the Gram engine in :mod:`repro.core.gram` and the losses on
+top of it) selects its execution path through this registry instead of
+ad-hoc ``use_pallas`` bools / ``solver=`` strings.  A backend is a *named*
+implementation with capability flags; ``"auto"`` resolves per op from the
+active JAX platform and the problem shape.
+
+Registered backends:
+
+``"reference"``
+    Pure-JAX row-major scans (oracle-grade, serial).  Works everywhere,
+    exact one-pass backward for the sig-kernel ops.
+``"antidiag"``
+    Vectorised anti-diagonal wavefront (SIMD on CPU/GPU).  Sig-kernel ops
+    only; the exact backward recomputes the reference grid.
+``"pallas"``
+    Pallas TPU kernels (compiled on TPU, interpret mode elsewhere).
+    Checkpointed exact backward for the PDE; Horner kernel for signatures.
+``"pallas_fused"``
+    Fused-Δ Pallas PDE kernels: Δ is built in VMEM from the increments and
+    never exists in HBM.  Gram-capable; differentiable via the checkpointed
+    exact backward (which re-materialises Δ for the reverse sweep only).
+``"auto"``
+    Shape/platform-aware choice of the above.
+
+The legacy ``use_pallas=``/``solver=`` kwargs survive as thin deprecation
+shims: :func:`canonicalize` maps them onto backend names with a
+``DeprecationWarning``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import warnings
+from typing import Dict, FrozenSet, Optional, Tuple
+
+import jax
+
+#: ops a backend can serve
+OPS = ("signature", "logsignature", "sigkernel", "gram")
+
+#: sentinel distinguishing "kwarg not passed" from an explicit value
+UNSET = object()
+
+#: below this many refined PDE cells the serial reference scan wins on
+#: CPU/GPU (the anti-diagonal skew/gather overhead dominates tiny grids)
+_ANTIDIAG_MIN_CELLS = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Capability card for one named backend."""
+
+    name: str
+    ops: FrozenSet[str]
+    #: backward is the paper's exact one-pass scheme (§2.4 / §3.4 Alg 4),
+    #: not plain autodiff through the forward
+    grad_exact: bool
+    #: can produce a whole Gram matrix without materialising every pairwise
+    #: Δ in HBM up front
+    gram_capable: bool
+    #: compiled only on TPU; elsewhere it runs in (slow) interpret mode
+    needs_tpu: bool
+    #: consumes path increments directly — Δ never exists in HBM
+    fused: bool = False
+
+
+_REGISTRY: Dict[str, BackendSpec] = {}
+
+
+def register(spec: BackendSpec) -> BackendSpec:
+    """Add (or replace) a backend in the registry."""
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> BackendSpec:
+    """Look up a backend by name; raise with the known names otherwise."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {sorted(_REGISTRY)} "
+            f"(plus 'auto')") from None
+
+
+def backends_for(op: str) -> Tuple[str, ...]:
+    """Names of all registered backends that serve ``op``."""
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}; known: {OPS}")
+    return tuple(sorted(n for n, s in _REGISTRY.items() if op in s.ops))
+
+
+register(BackendSpec("reference", frozenset(OPS), grad_exact=True,
+                     gram_capable=False, needs_tpu=False))
+register(BackendSpec("antidiag", frozenset({"sigkernel", "gram"}),
+                     grad_exact=True, gram_capable=False, needs_tpu=False))
+register(BackendSpec("pallas", frozenset(OPS), grad_exact=True,
+                     gram_capable=False, needs_tpu=True))
+register(BackendSpec("pallas_fused", frozenset({"sigkernel", "gram"}),
+                     grad_exact=True, gram_capable=True, needs_tpu=True,
+                     fused=True))
+
+
+# ---------------------------------------------------------------------------
+# legacy-kwarg shims
+# ---------------------------------------------------------------------------
+
+def _validate(backend: str, op: str) -> str:
+    """Check a concrete backend name exists and implements ``op``."""
+    spec = get(backend)
+    if op not in spec.ops:
+        raise ValueError(
+            f"backend {backend!r} does not implement op {op!r}; "
+            f"options: {backends_for(op)}")
+    return backend
+
+
+def canonicalize(backend: str, *, op: str, use_pallas=UNSET,
+                 solver=UNSET) -> str:
+    """Map legacy ``use_pallas``/``solver`` kwargs onto a backend name.
+
+    ``backend`` wins when it is not ``"auto"`` (validated against ``op``;
+    contradictory legacy kwargs are ignored with a warning).
+    ``use_pallas=True`` overrides ``solver=`` — the historical precedence of
+    ``sigkernel_gram_blocked``.  ``use_pallas=None`` is the historical
+    documented "auto" and stays silent; explicit bools and ``solver=``
+    strings emit a ``DeprecationWarning``.  Returns a backend name
+    (possibly still ``"auto"`` — resolve it with :func:`resolve`).
+    """
+    legacy_given = ((use_pallas is not UNSET and use_pallas is not None)
+                    or (solver is not UNSET and solver is not None))
+    if backend != "auto":
+        if legacy_given:
+            warnings.warn(
+                f"deprecated use_pallas=/solver= ignored because "
+                f"backend={backend!r} was passed explicitly",
+                DeprecationWarning, stacklevel=3)
+        return _validate(backend, op)
+    if use_pallas is not UNSET and use_pallas is not None:
+        warnings.warn(
+            "use_pallas= is deprecated; pass backend='pallas' / "
+            "backend='reference' instead (docs/solver_guide.md)",
+            DeprecationWarning, stacklevel=3)
+        if use_pallas:  # historically overrode solver=
+            return "pallas"
+        if solver is UNSET or solver is None:
+            return "reference"
+    if solver is not UNSET and solver is not None:
+        warnings.warn(
+            "solver= is deprecated; pass backend='antidiag' / "
+            "backend='reference' instead (docs/solver_guide.md)",
+            DeprecationWarning, stacklevel=3)
+        return "antidiag" if solver == "antidiag" else "reference"
+    return "auto"
+
+
+# ---------------------------------------------------------------------------
+# auto-selection
+# ---------------------------------------------------------------------------
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve(backend: str, *, op: str,
+            grid_cells: Optional[int] = None) -> str:
+    """Resolve ``"auto"`` to a concrete backend name for ``op``.
+
+    ``grid_cells`` is the refined PDE cell count ``nx·ny`` (sig-kernel ops
+    only); small grids stay on the serial reference scan where the
+    wavefront's skew overhead is not worth paying.
+    """
+    if backend != "auto":
+        return _validate(backend, op)
+    if op in ("signature", "logsignature"):
+        return "pallas" if on_tpu() else "reference"
+    if on_tpu():
+        return "pallas_fused" if op == "gram" else "pallas"
+    if grid_cells is not None and grid_cells >= _ANTIDIAG_MIN_CELLS:
+        return "antidiag"
+    return "reference"
+
+
+# ---------------------------------------------------------------------------
+# pair-solve accounting (used by tests / the benchmark smoke job to verify
+# the symmetric-Gram fast path really does ~half the PDE solves)
+# ---------------------------------------------------------------------------
+
+_count_state = threading.local()
+
+
+class count_pair_solves:
+    """Context manager counting PDE pair-solves issued at *trace* time.
+
+    The engine reports the batch size it hands to each solver call (including
+    any padding), so ``with count_pair_solves() as c: ...; c.total`` is the
+    number of Goursat problems solved.  Counts are per-thread and only
+    reflect traces executed inside the context (jit cache hits recompute
+    nothing and therefore count nothing — call on fresh shapes).
+    """
+
+    def __init__(self):
+        self.total = 0
+
+    def __enter__(self):
+        self._prev = getattr(_count_state, "active", None)
+        _count_state.active = self
+        return self
+
+    def __exit__(self, *exc):
+        _count_state.active = self._prev
+        return False
+
+
+def record_pair_solves(n: int) -> None:
+    """Report ``n`` PDE pair-solves to the active counter (no-op otherwise)."""
+    active = getattr(_count_state, "active", None)
+    if active is not None:
+        active.total += int(n)

@@ -1,0 +1,180 @@
+"""The Gram engine: one entry point for every sig-kernel Gram variant.
+
+``sigkernel_gram(X, Y=None, ...)`` unifies what used to be three separate
+code paths (dense einsum, row-blocked ``lax.map``, fused-Δ Pallas) behind the
+backend registry in :mod:`repro.core.dispatch`:
+
+* **dense** — all ``Bx·By`` Δ matrices materialised at once (small batches);
+* **blocked** — ``row_block`` Gram rows live at a time; ``Bx`` is
+  zero-padded to the block granularity (zero increments ⇒ k = 1 rows that
+  are dropped, so padding is exact — same trick the PDE kernels use for
+  strips);
+* **fused** (``backend="pallas_fused"``) — Δ is built in VMEM from the
+  increments and never exists in HBM, now differentiable end-to-end via the
+  checkpointed exact backward;
+* **symmetric fast path** — when ``Y`` is omitted only the
+  ``Bx·(Bx+1)/2`` upper-triangle pairs are solved (≈2× fewer PDE solves for
+  the ``Kxx``/``Kyy`` terms of every loss) and the result is mirrored.
+
+Row blocks and the Gram tiling are annotated with the logical mesh axes of
+:mod:`repro.parallel.api` (rows → ``"batch"``, columns → ``"model"``), so
+under a mesh + ``logical_rules`` context a pod-scale Gram is one call; with
+no mesh the annotations are no-ops and the same code runs on a laptop.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dispatch
+from . import transforms as tf
+from .signature import path_increments
+from .sigkernel import _sigkernel_from_delta
+from repro.parallel.api import shard
+
+
+def _solve_pairs(dxa: jax.Array, dxb: jax.Array, backend: str,
+                 lam1: int, lam2: int) -> jax.Array:
+    """Solve one batch of increment pairs (P, Lx, d) × (P, Ly, d) -> (P,)."""
+    if backend == "pallas_fused":
+        from repro.kernels.sigkernel_pde import ops as pde_ops
+        return pde_ops.solve_fused(dxa, dxb, lam1, lam2)
+    delta = jnp.einsum("pid,pjd->pij", dxa, dxb)
+    return _sigkernel_from_delta(delta, lam1, lam2, backend)
+
+
+def _gram_block(dxb: jax.Array, dY: jax.Array, backend: str,
+                lam1: int, lam2: int) -> jax.Array:
+    """Gram block from increments (r, Lx, d) × (By, Ly, d) -> (r, By)."""
+    if backend == "pallas_fused":
+        from repro.kernels.sigkernel_pde import ops as pde_ops
+        return pde_ops.gram_fused(dxb, dY, lam1, lam2)
+    delta = jnp.einsum("aid,bjd->abij", dxb, dY)
+    return _sigkernel_from_delta(delta, lam1, lam2, backend)
+
+
+def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
+                   backend: str = "auto", row_block: Optional[int] = None,
+                   symmetric: Optional[bool] = None,
+                   lam1: int = 0, lam2: int = 0,
+                   time_aug: bool = False, lead_lag: bool = False,
+                   use_pallas=dispatch.UNSET,
+                   solver=dispatch.UNSET) -> jax.Array:
+    """Signature-kernel Gram matrix ``K[a, b] = k(X_a, Y_b)``.
+
+    Args:
+      X: (Bx, L, d) batch of paths.
+      Y: (By, L', d) batch, or ``None`` for the symmetric Gram ``k(X_a, X_b)``
+        (solves only the upper triangle — ≈2× fewer PDE solves; large
+        batches are auto-chunked so the pair gather never exceeds a fixed
+        HBM budget).
+      backend: a name from :mod:`repro.core.dispatch` ("reference" |
+        "antidiag" | "pallas" | "pallas_fused") or ``"auto"`` (platform- and
+        shape-aware; "pallas_fused" on TPU).
+      row_block: if set, at most ``row_block`` Gram rows (or the equivalent
+        number of symmetric pairs) are in flight at once; ``Bx`` is
+        zero-padded to the block granularity, padded rows are dropped.
+      symmetric: force/forbid the symmetric fast path.  Default: ``Y is
+        None``.  ``symmetric=True`` requires ``Y`` to be ``None`` or ``X``.
+      lam1 / lam2: dyadic refinement orders of the PDE grid.
+      time_aug / lead_lag: §4 path transforms, applied to increments.
+      use_pallas / solver: deprecated aliases (DeprecationWarning) mapped to
+        backend names — see docs/solver_guide.md.
+
+    Returns:
+      (Bx, By) Gram matrix (f32), differentiable end-to-end through the
+      exact one-pass backward on every backend.
+    """
+    if X.ndim != 3 or (Y is not None and Y.ndim != 3):
+        raise ValueError(
+            f"sigkernel_gram expects (B, L, d) paths, got X {X.shape}"
+            + ("" if Y is None else f", Y {Y.shape}"))
+    if symmetric is None:
+        symmetric = Y is None
+    if symmetric and not (Y is None or Y is X):
+        raise ValueError("symmetric=True requires Y to be None or X itself")
+    if not symmetric and Y is None:
+        raise ValueError("symmetric=False requires Y (pass Y=X for the "
+                         "full symmetric Gram without the fast path)")
+
+    backend = dispatch.canonicalize(backend, op="gram",
+                                    use_pallas=use_pallas, solver=solver)
+    Lx = X.shape[1] - 1
+    Ly = Lx if Y is None else Y.shape[1] - 1
+    backend = dispatch.resolve(backend, op="gram",
+                               grid_cells=(Lx << lam1) * (Ly << lam2))
+
+    dX = tf.transform_increments(path_increments(X), time_aug, lead_lag)
+    dX = shard(dX, "batch", None, None)
+    Bx = dX.shape[0]
+
+    if symmetric:
+        return _symmetric_gram(dX, backend, row_block, lam1, lam2)
+
+    dY = tf.transform_increments(path_increments(Y), time_aug, lead_lag)
+    dY = shard(dY, "model", None, None)
+    By = dY.shape[0]
+
+    if row_block is None:
+        dispatch.record_pair_solves(Bx * By)
+        K = _gram_block(dX, dY, backend, lam1, lam2)
+    else:
+        pad = (-Bx) % row_block
+        if pad:  # zero increments -> k = 1 rows, dropped below: exact
+            dX = jnp.pad(dX, ((0, pad), (0, 0), (0, 0)))
+        n_blocks = (Bx + pad) // row_block
+        dispatch.record_pair_solves(n_blocks * row_block * By)
+        dXb = dX.reshape(n_blocks, row_block, *dX.shape[1:])
+        K = jax.lax.map(
+            lambda dxb: _gram_block(dxb, dY, backend, lam1, lam2), dXb)
+        K = K.reshape(n_blocks * row_block, By)[:Bx]
+    return shard(K, "batch", "model")
+
+
+# the pair-gather replicates increments (2·chunk·L·d floats live at once);
+# above this budget an unset row_block is auto-chunked so the symmetric fast
+# path never costs more HBM than the dense Gram it replaces
+_SYM_GATHER_BUDGET = 64 * 1024 * 1024
+
+
+def _symmetric_gram(dX: jax.Array, backend: str, row_block: Optional[int],
+                    lam1: int, lam2: int) -> jax.Array:
+    """Upper-triangle pair solve + mirror: Bx·(Bx+1)/2 (+ pad) PDE solves."""
+    Bx = dX.shape[0]
+    a_idx, b_idx = np.triu_indices(Bx)
+    n_pairs = a_idx.size
+
+    if row_block is None and 8 * n_pairs * dX.shape[1] * dX.shape[2] \
+            > _SYM_GATHER_BUDGET:
+        row_block = max(1, _SYM_GATHER_BUDGET
+                        // (8 * Bx * dX.shape[1] * dX.shape[2]))
+
+    if row_block is None:
+        dispatch.record_pair_solves(n_pairs)
+        k = _solve_pairs(dX[a_idx], dX[b_idx], backend, lam1, lam2)
+    else:
+        # a block of `row_block` Gram rows ~ row_block·Bx pairs of live Δ.
+        # Only the (chunk,)-sized index arrays are materialised up front; the
+        # pair gather itself happens inside the mapped body, one chunk at a
+        # time, so live replicated increments stay at 2·chunk·L·d floats.
+        chunk = max(1, int(row_block)) * Bx
+        pad = (-n_pairs) % chunk
+        a_pad = np.concatenate([a_idx, np.zeros(pad, a_idx.dtype)])
+        b_pad = np.concatenate([b_idx, np.zeros(pad, b_idx.dtype)])
+        n_blocks = (n_pairs + pad) // chunk
+        dispatch.record_pair_solves(n_pairs + pad)
+        a_chunks = jnp.asarray(a_pad).reshape(n_blocks, chunk)
+        b_chunks = jnp.asarray(b_pad).reshape(n_blocks, chunk)
+        k = jax.lax.map(
+            lambda ab: _solve_pairs(dX[ab[0]], dX[ab[1]], backend,
+                                    lam1, lam2),
+            (a_chunks, b_chunks))
+        k = k.reshape(-1)[:n_pairs]
+
+    K = jnp.zeros((Bx, Bx), k.dtype).at[a_idx, b_idx].set(k)
+    K = K + jnp.triu(K, k=1).T
+    return shard(K, "batch", "model")

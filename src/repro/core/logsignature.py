@@ -99,7 +99,7 @@ def logsignature_from_increments(z: jax.Array, depth: int,
 
 def logsignature(path: jax.Array, depth: int, *, mode: str = "lyndon",
                  time_aug: bool = False, lead_lag: bool = False,
-                 use_pallas: Optional[bool] = None,
+                 backend: str = "auto", use_pallas=None,
                  stream: bool = False) -> jax.Array:
     """Truncated log-signature of a batch of piecewise-linear paths.
 
@@ -108,10 +108,13 @@ def logsignature(path: jax.Array, depth: int, *, mode: str = "lyndon",
       depth: truncation level N.
       mode: "lyndon" (default) | "brackets" | "expand" — see module docstring.
       time_aug / lead_lag: §4 transforms, applied on-the-fly to increments.
-      use_pallas: route the Horner recursion through the Pallas TPU kernel.
-        Default ``None`` means auto: ``repro.kernels.signature.ops.
-        default_use_pallas()`` decides from the active backend (True on TPU,
-        False elsewhere).  The Lyndon projection is a final gather either way.
+      backend: ``"reference"`` (pure-JAX Horner scan) | ``"pallas"`` (the TPU
+        kernel) | ``"auto"`` (default; the registry in
+        :mod:`repro.core.dispatch` picks "pallas" on TPU, "reference"
+        elsewhere).  The Lyndon projection is a final gather either way.
+      use_pallas: deprecated alias — explicit bools warn and map to
+        ``backend="pallas"`` / ``"reference"``; ``None`` keeps the
+        historical meaning of auto.
       stream: if True return log-signatures of all prefixes
         (..., L-1, logsig_dim).
 
@@ -119,6 +122,7 @@ def logsignature(path: jax.Array, depth: int, *, mode: str = "lyndon",
       (..., logsignature_dim(d', depth, mode)) where d' is the transformed
       channel count (``repro.core.signature.transformed_dim``).
     """
+    from . import dispatch
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     z = _effective_increments(path, time_aug, lead_lag)
@@ -127,10 +131,11 @@ def logsignature(path: jax.Array, depth: int, *, mode: str = "lyndon",
         sig_stream = _signature_stream_from_increments(z, depth)
         flat_log = ta.tensor_log(sig_stream, d, depth)
         return _project(flat_log, d, depth, mode)
-    if use_pallas is None:
-        from repro.kernels.signature import ops as sig_ops
-        use_pallas = sig_ops.default_use_pallas()
-    if use_pallas:
+    backend = dispatch.resolve(
+        dispatch.canonicalize(backend, op="logsignature",
+                              use_pallas=use_pallas),
+        op="logsignature")
+    if backend == "pallas":
         from repro.kernels.signature import ops as sig_ops
         return sig_ops.logsignature_from_increments(z, depth, mode)
     return logsignature_from_increments(z, depth, mode)

@@ -3,7 +3,10 @@
 The workload pySigLib exists to accelerate: sig-kernel scores for training
 generative models on time series (paper §1; refs [16, 21, 24]).  All losses
 are differentiable through the exact one-pass backward of
-``repro.core.sigkernel``.
+``repro.core.sigkernel`` and route their Gram matrices through the unified
+engine in ``repro.core.gram`` — the symmetric ``Kxx``/``Kyy`` terms solve
+only the upper triangle (≈2× fewer PDE solves), and ``backend=`` selects the
+solver via the registry in ``repro.core.dispatch``.
 """
 
 from __future__ import annotations
@@ -13,22 +16,34 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .sigkernel import sigkernel_gram
+from . import dispatch
+from .gram import sigkernel_gram
 
 
 def mmd2(X: jax.Array, Y: jax.Array, *, lam1: int = 0, lam2: int = 0,
          time_aug: bool = False, lead_lag: bool = False,
-         unbiased: bool = True, use_pallas: bool = False) -> jax.Array:
+         unbiased: bool = True, backend: str = "auto",
+         row_block: Optional[int] = None,
+         use_pallas=dispatch.UNSET) -> jax.Array:
     """Squared MMD between two path distributions under the signature kernel.
 
     X: (Bx, L, d) samples from P;  Y: (By, L', d) samples from Q.
+
+    The unbiased estimator divides by ``b·(b−1)`` and therefore needs at
+    least two samples on each side — a single-sample batch raises instead of
+    silently returning NaN; use ``unbiased=False`` for ``b = 1``.
     """
-    kw = dict(lam1=lam1, lam2=lam2, time_aug=time_aug, lead_lag=lead_lag,
-              use_pallas=use_pallas)
-    Kxx = sigkernel_gram(X, X, **kw)
-    Kyy = sigkernel_gram(Y, Y, **kw)
-    Kxy = sigkernel_gram(X, Y, **kw)
     bx, by = X.shape[0], Y.shape[0]
+    if unbiased and min(bx, by) < 2:
+        raise ValueError(
+            f"unbiased MMD needs >= 2 samples per side (got Bx={bx}, "
+            f"By={by}); the 1/(b·(b-1)) normaliser is NaN at b=1 — "
+            "pass unbiased=False")
+    kw = dict(lam1=lam1, lam2=lam2, time_aug=time_aug, lead_lag=lead_lag,
+              backend=backend, row_block=row_block, use_pallas=use_pallas)
+    Kxx = sigkernel_gram(X, **kw)            # symmetric: upper triangle only
+    Kyy = sigkernel_gram(Y, **kw)
+    Kxy = sigkernel_gram(X, Y, **kw)
     if unbiased:
         sxx = (Kxx.sum() - jnp.trace(Kxx)) / (bx * (bx - 1))
         syy = (Kyy.sum() - jnp.trace(Kyy)) / (by * (by - 1))
@@ -40,23 +55,31 @@ def mmd2(X: jax.Array, Y: jax.Array, *, lam1: int = 0, lam2: int = 0,
 
 def scoring_rule(X: jax.Array, y: jax.Array, *, lam1: int = 0, lam2: int = 0,
                  time_aug: bool = False, lead_lag: bool = False,
-                 use_pallas: bool = False) -> jax.Array:
+                 backend: str = "auto", row_block: Optional[int] = None,
+                 use_pallas=dispatch.UNSET) -> jax.Array:
     """Sig-kernel score  E[k(X,X')]/2 − E[k(X,y)]  for one observation y (L, d).
 
     A strictly proper scoring rule for path-valued prediction [24].
+    ``E[k(X,X')]`` averages over distinct pairs (divides by ``b·(b−1)``), so
+    the ensemble needs at least two members.
     """
-    kw = dict(lam1=lam1, lam2=lam2, time_aug=time_aug, lead_lag=lead_lag,
-              use_pallas=use_pallas)
-    Kxx = sigkernel_gram(X, X, **kw)
     b = X.shape[0]
+    if b < 2:
+        raise ValueError(
+            f"scoring_rule needs an ensemble of >= 2 paths (got B={b}); "
+            "the 1/(b·(b-1)) normaliser is NaN at b=1")
+    kw = dict(lam1=lam1, lam2=lam2, time_aug=time_aug, lead_lag=lead_lag,
+              backend=backend, row_block=row_block, use_pallas=use_pallas)
+    Kxx = sigkernel_gram(X, **kw)
     exx = (Kxx.sum() - jnp.trace(Kxx)) / (b * (b - 1))
     Kxy = sigkernel_gram(X, y[None], **kw)
     return 0.5 * exx - Kxy.mean()
 
 
 def sig_aux_loss(hidden: jax.Array, target: jax.Array, *, proj: jax.Array,
-                 lam1: int = 0, lam2: int = 0,
-                 use_pallas: bool = False) -> jax.Array:
+                 lam1: int = 0, lam2: int = 0, backend: str = "auto",
+                 row_block: Optional[int] = None,
+                 use_pallas=dispatch.UNSET) -> jax.Array:
     """Auxiliary sig-kernel loss between a model's hidden trajectory and a
     target path distribution (the glue attaching the paper's technique to any
     sequence architecture — DESIGN.md §5).
@@ -68,4 +91,4 @@ def sig_aux_loss(hidden: jax.Array, target: jax.Array, *, proj: jax.Array,
     # normalise scale so the PDE stays well-conditioned for wide layers
     path = path / jnp.sqrt(jnp.asarray(proj.shape[0], path.dtype))
     return mmd2(path, target, lam1=lam1, lam2=lam2, unbiased=False,
-                use_pallas=use_pallas)
+                backend=backend, row_block=row_block, use_pallas=use_pallas)

@@ -33,11 +33,12 @@ rotating 3-buffer in VMEM).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from . import dispatch
 from .signature import path_increments
 from . import transforms as tf
 
@@ -302,31 +303,65 @@ def solve_goursat_grad_pde_approx(delta: jax.Array, grid: jax.Array,
 # public API with custom VJP (exact gradients, §3.4)
 # ---------------------------------------------------------------------------
 
+def _normalize_backend(backend) -> str:
+    """Accept the historical bool (True = Pallas) alongside backend names."""
+    if backend is True:
+        return "pallas"
+    if backend is False:
+        return "reference"
+    return backend
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
 def _sigkernel_from_delta(delta: jax.Array, lam1: int, lam2: int,
-                          use_pallas: bool) -> jax.Array:
-    if use_pallas:
+                          backend="reference") -> jax.Array:
+    """Solve batched Goursat problems with the named (concrete) backend.
+
+    ``backend`` is a resolved name from :mod:`repro.core.dispatch`
+    ("reference" | "antidiag" | "pallas"; bools are accepted for
+    backwards compatibility).  The custom VJP is the exact one-pass
+    backward (Alg 4) for every backend.
+    """
+    backend = _normalize_backend(backend)
+    if backend == "pallas":
         from repro.kernels.sigkernel_pde import ops as pde_ops
         return pde_ops.solve(delta, lam1, lam2)
-    return solve_goursat(delta, lam1, lam2)
+    if backend == "antidiag":
+        return solve_goursat_antidiag(delta, lam1, lam2)
+    if backend == "reference":
+        return solve_goursat(delta, lam1, lam2)
+    raise ValueError(f"no Δ-solver implementation for backend {backend!r}")
 
 
-def _sk_fwd(delta, lam1, lam2, use_pallas):
-    if use_pallas:
+def _sk_fwd(delta, lam1, lam2, backend):
+    backend = _normalize_backend(backend)
+    if backend == "pallas":
         from repro.kernels.sigkernel_pde import ops as pde_ops
         k, grid = pde_ops.solve_with_grid(delta, lam1, lam2)
-    else:
+    elif backend == "antidiag":
+        # rematerialisation trade-off: save Δ only (Lx·Ly floats) and rebuild
+        # the refined grid serially in the backward, instead of holding the
+        # (nx+1)·(ny+1) grid — 4^λ larger — as residual like "reference" does.
+        # Gradient-dominated small-grid workloads that prefer time over
+        # memory should pass backend="reference" (docs/solver_guide.md).
+        k, grid = solve_goursat_antidiag(delta, lam1, lam2), None
+    elif backend == "reference":
         grid = solve_goursat(delta, lam1, lam2, return_grid=True)
         k = grid[..., -1, -1]
+    else:
+        raise ValueError(f"no Δ-solver implementation for backend {backend!r}")
     return k, (delta, grid)
 
 
-def _sk_bwd(lam1, lam2, use_pallas, res, gbar):
+def _sk_bwd(lam1, lam2, backend, res, gbar):
+    backend = _normalize_backend(backend)
     delta, grid = res
-    if use_pallas:
+    if backend == "pallas":
         from repro.kernels.sigkernel_pde import ops as pde_ops
         ddelta = pde_ops.solve_grad(delta, grid, gbar, lam1, lam2)
     else:
+        if grid is None:  # antidiag saves Δ only; rebuild the grid exactly
+            grid = solve_goursat(delta, lam1, lam2, return_grid=True)
         ddelta = solve_goursat_grad(delta, grid, gbar, lam1, lam2)
     return (ddelta,)
 
@@ -336,7 +371,8 @@ _sigkernel_from_delta.defvjp(_sk_fwd, _sk_bwd)
 
 def sigkernel(x: jax.Array, y: jax.Array, *, lam1: int = 0, lam2: int = 0,
               time_aug: bool = False, lead_lag: bool = False,
-              use_pallas: bool = False) -> jax.Array:
+              backend: str = "auto",
+              use_pallas=dispatch.UNSET) -> jax.Array:
     """Signature kernel k(x, y) = ⟨S(x), S(y)⟩ for batches of paths.
 
     x: (..., Lx, d), y: (..., Ly, d)  ->  (...,).
@@ -344,59 +380,54 @@ def sigkernel(x: jax.Array, y: jax.Array, *, lam1: int = 0, lam2: int = 0,
     Differentiable w.r.t. x and y with pySigLib's exact one-pass backward.
     ``lam1``/``lam2`` are the independent dyadic refinement orders.
 
-    ``use_pallas`` is a plain bool defaulting to False — it is NOT
-    auto-selected from the backend (unlike ``signature``/``logsignature``,
-    whose ``use_pallas=None`` means auto).  Set it explicitly on TPU; see
-    docs/solver_guide.md.
+    ``backend`` names a solver from :mod:`repro.core.dispatch`
+    ("reference" | "antidiag" | "pallas" | "pallas_fused"); the default
+    ``"auto"`` picks per platform and problem size.  ``use_pallas`` is a
+    deprecated alias (True -> "pallas", False -> "reference").
     """
+    backend = dispatch.canonicalize(backend, op="sigkernel",
+                                    use_pallas=use_pallas)
+    if backend in ("auto", "pallas_fused"):
+        Lx, Ly = x.shape[-2] - 1, y.shape[-2] - 1
+        cells = (Lx << lam1) * (Ly << lam2)
+        backend = dispatch.resolve(backend, op="sigkernel", grid_cells=cells)
+    if backend == "pallas_fused":
+        if x.shape[:-2] != y.shape[:-2]:
+            raise ValueError("backend='pallas_fused' needs matching batch "
+                             f"shapes, got {x.shape[:-2]} vs {y.shape[:-2]}")
+        from repro.kernels.sigkernel_pde import ops as pde_ops
+        dx = tf.transform_increments(path_increments(x), time_aug, lead_lag)
+        dy = tf.transform_increments(path_increments(y), time_aug, lead_lag)
+        batch_shape = dx.shape[:-2]
+        dispatch.record_pair_solves(
+            functools.reduce(lambda a, b: a * b, batch_shape, 1))
+        k = pde_ops.solve_fused(dx.reshape((-1,) + dx.shape[-2:]),
+                                dy.reshape((-1,) + dy.shape[-2:]),
+                                lam1, lam2)
+        return k.reshape(batch_shape)
     delta = delta_matrix(x, y, time_aug=time_aug, lead_lag=lead_lag)
-    return _sigkernel_from_delta(delta, lam1, lam2, use_pallas)
+    dispatch.record_pair_solves(
+        functools.reduce(lambda a, b: a * b, delta.shape[:-2], 1))
+    return _sigkernel_from_delta(delta, lam1, lam2, backend)
 
 
-def sigkernel_gram(X: jax.Array, Y: jax.Array, *, lam1: int = 0, lam2: int = 0,
-                   time_aug: bool = False, lead_lag: bool = False,
-                   use_pallas: bool = False) -> jax.Array:
-    """Gram matrix K[a, b] = k(X_a, Y_b).  X: (Bx, L, d), Y: (By, L', d) -> (Bx, By).
-
-    Materialises all Bx·By Δ matrices at once — use
-    :func:`sigkernel_gram_blocked` when that does not fit in memory.
-    ``use_pallas`` defaults to False and is never auto (docs/solver_guide.md).
+def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, **kw) -> jax.Array:
+    """Gram matrix K[a, b] = k(X_a, Y_b) — delegates to the unified engine
+    :func:`repro.core.gram.sigkernel_gram` (dense / blocked / fused variants,
+    symmetric fast path when ``Y`` is omitted).  Kept here so existing
+    ``from repro.core.sigkernel import sigkernel_gram`` call sites keep
+    working; see docs/solver_guide.md.
     """
-    dX = tf.transform_increments(path_increments(X), time_aug, lead_lag)
-    dY = tf.transform_increments(path_increments(Y), time_aug, lead_lag)
-    # one big matmul for all pairs: (Bx, Lx, By, Ly) — batched per pair after
-    delta = jnp.einsum("aid,bjd->abij", dX, dY)
-    return _sigkernel_from_delta(delta, lam1, lam2, use_pallas)
+    from . import gram as gram_engine
+    return gram_engine.sigkernel_gram(X, Y, **kw)
 
 
-def sigkernel_gram_blocked(X: jax.Array, Y: jax.Array, *, row_block: int = 8,
-                           lam1: int = 0, lam2: int = 0,
-                           time_aug: bool = False, lead_lag: bool = False,
-                           use_pallas: bool = False,
-                           solver: str = "antidiag") -> jax.Array:
-    """Memory-bounded Gram: rows processed in blocks of ``row_block`` so only
-    (row_block × By) Δ matrices are live at once — required when Bx·By·L²
-    would not fit HBM (the pod-scale Gram workload).
+def sigkernel_gram_blocked(X: jax.Array, Y: Optional[jax.Array] = None, *,
+                           row_block: int = 8, **kw) -> jax.Array:
+    """Deprecated alias for the engine with ``row_block`` set.
 
-    Differentiable (the per-block solve uses autodiff through the selected
-    solver; the exact custom backward handles use_pallas=True).
-    ``solver="antidiag"`` is the fast CPU path (any other value falls back to
-    the row-major reference); ``use_pallas`` defaults to False and is never
-    auto — see docs/solver_guide.md.
+    ``Bx`` no longer needs to divide by ``row_block`` — the engine zero-pads
+    the row batch (padded rows are dropped; Δ = 0 padding is exact).
     """
-    dX = tf.transform_increments(path_increments(X), time_aug, lead_lag)
-    dY = tf.transform_increments(path_increments(Y), time_aug, lead_lag)
-    Bx = dX.shape[0]
-    assert Bx % row_block == 0, (Bx, row_block)
-    dXb = dX.reshape(Bx // row_block, row_block, *dX.shape[1:])
-
-    def one_block(dxb):
-        delta = jnp.einsum("aid,bjd->abij", dxb, dY)
-        if use_pallas:
-            return _sigkernel_from_delta(delta, lam1, lam2, True)
-        if solver == "antidiag":
-            return solve_goursat_antidiag(delta, lam1, lam2)
-        return solve_goursat(delta, lam1, lam2)
-
-    K = jax.lax.map(one_block, dXb)              # (Bx/rb, rb, By)
-    return K.reshape(Bx, dY.shape[0])
+    from . import gram as gram_engine
+    return gram_engine.sigkernel_gram(X, Y, row_block=row_block, **kw)

@@ -21,7 +21,7 @@ in path length.  Implemented as a ``jax.custom_vjp``.
 from __future__ import annotations
 
 import functools
-from typing import List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -162,33 +162,36 @@ _signature_core.defvjp(_signature_core_fwd, _signature_core_bwd)
 
 
 def signature(path: jax.Array, depth: int, *, time_aug: bool = False,
-              lead_lag: bool = False, use_pallas: Optional[bool] = None,
-              stream: bool = False) -> jax.Array:
+              lead_lag: bool = False, backend: str = "auto",
+              use_pallas=None, stream: bool = False) -> jax.Array:
     """Truncated signature of a batch of piecewise-linear paths.
 
     Args:
       path: (..., L, d) discrete stream; linearly interpolated.
       depth: truncation level N.
       time_aug / lead_lag: §4 transforms, applied on-the-fly to increments.
-      use_pallas: route the hot loop through the Pallas TPU kernel.  Default
-        ``None`` means auto: ``repro.kernels.signature.ops.default_use_pallas``
-        decides from the active backend (True on TPU, False elsewhere —
-        on CPU/GPU the kernel would run in interpret mode).  Pass an explicit
-        bool to override; see docs/solver_guide.md.  Ignored when
-        ``stream=True`` (the streamed scan is pure JAX).
+      backend: ``"reference"`` (pure-JAX Horner scan), ``"pallas"`` (the TPU
+        kernel; interpret mode — slow — elsewhere), or ``"auto"`` (default):
+        the registry in :mod:`repro.core.dispatch` picks "pallas" on TPU and
+        "reference" on CPU/GPU.  Ignored when ``stream=True`` (the streamed
+        scan is pure JAX).
+      use_pallas: deprecated alias — ``True`` -> ``backend="pallas"``,
+        ``False`` -> ``backend="reference"`` (with a DeprecationWarning);
+        ``None`` keeps the historical meaning of auto.
       stream: if True return signatures of all prefixes (..., L-1, sig_dim).
 
     Returns:
       (..., sig_dim(d', depth)) flat signature (levels 1..depth), where d' is
       the transformed channel count.
     """
+    from . import dispatch
     z = _effective_increments(path, time_aug, lead_lag)
     if stream:
         return _signature_stream_from_increments(z, depth)
-    if use_pallas is None:
-        from repro.kernels.signature import ops as sig_ops
-        use_pallas = sig_ops.default_use_pallas()
-    if use_pallas:
+    backend = dispatch.resolve(
+        dispatch.canonicalize(backend, op="signature", use_pallas=use_pallas),
+        op="signature")
+    if backend == "pallas":
         from repro.kernels.signature import ops as sig_ops
         return sig_ops.signature_from_increments(z, depth)
     return _signature_core(z, depth)

@@ -163,7 +163,7 @@ def build_fwd(batch: int, Lx: int, Ly: int, *, T: int, lam1: int, lam2: int,
     assert R >= 1 and R << lam1 == T, (T, lam1)
     assert Lx % R == 0, (Lx, R)
     n_strips = Lx // R
-    nx, ny = Lx << lam1, Ly << lam2
+    ny = Ly << lam2
 
     if save_cps:
         kern = functools.partial(fwd_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny,
@@ -194,12 +194,11 @@ def build_fwd(batch: int, Lx: int, Ly: int, *, T: int, lam1: int, lam2: int,
 def build_fwd_fused(batch: int, Lx: int, Ly: int, d: int, *, T: int,
                     lam1: int, lam2: int, interpret: bool):
     """Fused-Δ forward: inputs are increments dx (B, Lx, d), dy (B, Ly, d)."""
-    import functools as _ft
     R = T >> lam1
     assert R >= 1 and R << lam1 == T and Lx % R == 0
     n_strips = Lx // R
-    nx, ny = Lx << lam1, Ly << lam2
-    kern = _ft.partial(fused_fwd_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny)
+    ny = Ly << lam2
+    kern = functools.partial(fused_fwd_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny)
     return pl.pallas_call(
         kern,
         grid=(batch, n_strips),
@@ -232,12 +231,11 @@ def build_gram_fused(Bx: int, By: int, Lx: int, Ly: int, d: int, *, T: int,
     """Fused-Δ Gram: grid over (row path, col path, strip); dx/dy blocks are
     fetched from the ORIGINAL increment arrays by index map — neither Δ nor
     any pairwise replication of the paths ever exists in HBM."""
-    import functools as _ft
     R = T >> lam1
     assert R >= 1 and R << lam1 == T and Lx % R == 0
     n_strips = Lx // R
     ny = Ly << lam2
-    kern = _ft.partial(fused_gram_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny)
+    kern = functools.partial(fused_gram_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny)
     return pl.pallas_call(
         kern,
         grid=(Bx, By, n_strips),

@@ -103,12 +103,16 @@ def solve_grad(delta: jax.Array, cps: jax.Array, gbar: jax.Array,
 
 # ---------------------------------------------------------------------------
 # fused-Δ variants (beyond-paper: Δ never exists in HBM — see kernel.py)
+#
+# Both are differentiable: the forward never materialises Δ, and the
+# custom_vjp backward falls back to the checkpointed exact scheme (Alg 4) —
+# Δ is rebuilt for the reverse sweep only, and the backward kernel itself
+# recomputes strip interiors from the forward's checkpoint rows.
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnums=(2, 3))
-def solve_fused(dx: jax.Array, dy: jax.Array, lam1: int = 0,
-                lam2: int = 0) -> jax.Array:
-    """k̂ final values from increments directly. dx: (B, Lx, d), dy: (B, Ly, d)."""
+def _solve_fused_impl(dx: jax.Array, dy: jax.Array, lam1: int,
+                      lam2: int) -> jax.Array:
     from .kernel import build_fwd_fused
     B, Lx, d = dx.shape
     Ly = dy.shape[1]
@@ -122,10 +126,39 @@ def solve_fused(dx: jax.Array, dy: jax.Array, lam1: int = 0,
     return call(dx.astype(jnp.float32), dy.astype(jnp.float32))
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def solve_fused(dx: jax.Array, dy: jax.Array, lam1: int = 0,
+                lam2: int = 0) -> jax.Array:
+    """k̂ final values from increments directly. dx: (B, Lx, d), dy: (B, Ly, d)."""
+    return _solve_fused_impl(dx, dy, lam1, lam2)
+
+
+def _solve_fused_fwd(dx, dy, lam1, lam2):
+    return _solve_fused_impl(dx, dy, lam1, lam2), (dx, dy)
+
+
+def _delta_pullback(dd, dx, dy):
+    """Pull ∂F/∂Δ back through Δ = dx · dyᵀ onto the increments."""
+    ddx = jnp.einsum("...ij,...jd->...id", dd, dy.astype(dd.dtype))
+    ddy = jnp.einsum("...ij,...id->...jd", dd, dx.astype(dd.dtype))
+    return ddx.astype(dx.dtype), ddy.astype(dy.dtype)
+
+
+def _solve_fused_bwd(lam1, lam2, res, gbar):
+    dx, dy = res
+    delta = jnp.einsum("bid,bjd->bij", dx.astype(jnp.float32),
+                       dy.astype(jnp.float32))
+    _, cps = solve_with_grid(delta, lam1, lam2)
+    dd = solve_grad(delta, cps, gbar, lam1, lam2)
+    return _delta_pullback(dd, dx, dy)
+
+
+solve_fused.defvjp(_solve_fused_fwd, _solve_fused_bwd)
+
+
 @functools.partial(jax.jit, static_argnums=(2, 3))
-def gram_fused(dX: jax.Array, dY: jax.Array, lam1: int = 0,
-               lam2: int = 0) -> jax.Array:
-    """Full Gram from increments. dX: (Bx, Lx, d), dY: (By, Ly, d) -> (Bx, By)."""
+def _gram_fused_impl(dX: jax.Array, dY: jax.Array, lam1: int,
+                     lam2: int) -> jax.Array:
     from .kernel import build_gram_fused
     Bx, Lx, d = dX.shape
     By, Ly = dY.shape[0], dY.shape[1]
@@ -137,3 +170,31 @@ def gram_fused(dX: jax.Array, dY: jax.Array, lam1: int = 0,
     call = build_gram_fused(Bx, By, Lx + pad, Ly, d, T=T, lam1=lam1,
                             lam2=lam2, interpret=_on_cpu())
     return call(dX.astype(jnp.float32), dY.astype(jnp.float32))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def gram_fused(dX: jax.Array, dY: jax.Array, lam1: int = 0,
+               lam2: int = 0) -> jax.Array:
+    """Full Gram from increments. dX: (Bx, Lx, d), dY: (By, Ly, d) -> (Bx, By)."""
+    return _gram_fused_impl(dX, dY, lam1, lam2)
+
+
+def _gram_fused_fwd(dX, dY, lam1, lam2):
+    return _gram_fused_impl(dX, dY, lam1, lam2), (dX, dY)
+
+
+def _gram_fused_bwd(lam1, lam2, res, gbar):
+    # The reverse sweep materialises the Bx·By pairwise Δ block — bound it by
+    # row-blocking the Gram (repro.core.gram), which confines this to one
+    # block at a time.
+    dX, dY = res
+    delta = jnp.einsum("aid,bjd->abij", dX.astype(jnp.float32),
+                       dY.astype(jnp.float32))
+    _, cps = solve_with_grid(delta, lam1, lam2)
+    dd = solve_grad(delta, cps, gbar, lam1, lam2)
+    ddX = jnp.einsum("abij,bjd->aid", dd, dY.astype(dd.dtype))
+    ddY = jnp.einsum("abij,aid->bjd", dd, dX.astype(dd.dtype))
+    return ddX.astype(dX.dtype), ddY.astype(dY.dtype)
+
+
+gram_fused.defvjp(_gram_fused_fwd, _gram_fused_bwd)

@@ -44,9 +44,8 @@ def build_sig_cell(shape, multi_pod: bool):
     import functools
     from jax.sharding import NamedSharding, PartitionSpec as P
     from jax.experimental.shard_map import shard_map
-    from repro.core.sigkernel import (sigkernel_gram, sigkernel_gram_blocked,
-                                      solve_goursat_antidiag, delta_matrix)
-    from repro.core.signature import path_increments
+    from repro.core.gram import sigkernel_gram
+    from repro.configs.sigkernel_workload import GRAM_ENGINE_DEFAULTS
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     data_axes = ("pod", "data") if multi_pod else ("data",)
@@ -57,7 +56,7 @@ def build_sig_cell(shape, multi_pod: bool):
         # forward Gram, embarrassingly parallel: local blocked solves only
         def gram(X, Y):
             def local(Xl, Yl):
-                return sigkernel_gram_blocked(Xl, Yl, row_block=2)
+                return sigkernel_gram(Xl, Yl, **GRAM_ENGINE_DEFAULTS)
             fn = shard_map(local, mesh=mesh,
                            in_specs=(P(data_axes), P("model")),
                            out_specs=P(data_axes, "model"), check_rep=False)
@@ -74,11 +73,7 @@ def build_sig_cell(shape, multi_pod: bool):
         # differentiated MMD via the exact one-pass backward (paper §3.4)
         def mmd_grad(X, Y):
             def loss(X):
-                from repro.core.sigkernel import _sigkernel_from_delta
-                dX = path_increments(X)
-                dY = path_increments(Y)
-                delta = jnp.einsum("aid,bjd->abij", dX, dY)
-                K = _sigkernel_from_delta(delta, 0, 0, False)
+                K = sigkernel_gram(X, Y, backend="reference")
                 return K.mean()
             return jax.value_and_grad(loss)(X)
 
@@ -178,6 +173,8 @@ def _make_runner(arch, shape_name, multi_pod, mesh, rules, jitted, args, meta):
         t1 = time.time()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):  # older jax returns [dict] per device
+            cost = cost[0] if cost else {}
         hlo = analyze_hlo(compiled.as_text())
         coll = hlo.collective
         n_chips = 512 if multi_pod else 256

@@ -1,0 +1,193 @@
+"""Backend registry: capability flags, auto-resolution, deprecation shims,
+and the cross-backend agreement contract (every registered backend computes
+the same sigkernel / Gram forward AND gradient within f32 tolerance)."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # the registry tests below run without hypothesis; only the
+    # random-shape property sweep needs it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="property tests need hypothesis: pip install -r requirements-dev.txt")
+
+from repro.core import dispatch
+from repro.core.gram import sigkernel_gram
+from repro.core.sigkernel import sigkernel
+
+jax.config.update("jax_platform_name", "cpu")
+
+SIGKERNEL_BACKENDS = dispatch.backends_for("sigkernel")
+GRAM_BACKENDS = dispatch.backends_for("gram")
+
+
+def paths(seed, B, L, d, scale=0.2):
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, L, d)) * scale
+
+
+# ---------------------------------------------------------------------------
+# registry mechanics
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    assert set(SIGKERNEL_BACKENDS) == {"reference", "antidiag", "pallas",
+                                       "pallas_fused"}
+    assert set(GRAM_BACKENDS) == set(SIGKERNEL_BACKENDS)
+    assert dispatch.backends_for("signature") == ("pallas", "reference")
+    spec = dispatch.get("pallas_fused")
+    assert spec.fused and spec.gram_capable and spec.needs_tpu
+    assert dispatch.get("reference").grad_exact
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        dispatch.get("cuda")
+    with pytest.raises(ValueError, match="unknown backend"):
+        sigkernel_gram(paths(0, 2, 5, 2), backend="nope")
+
+
+def test_op_capability_enforced():
+    # antidiag has no signature implementation
+    with pytest.raises(ValueError, match="does not implement"):
+        dispatch.resolve("antidiag", op="signature")
+
+
+def test_auto_resolution_on_cpu():
+    assert dispatch.resolve("auto", op="signature") == "reference"
+    assert dispatch.resolve("auto", op="sigkernel", grid_cells=16) == "reference"
+    assert dispatch.resolve("auto", op="sigkernel",
+                            grid_cells=1 << 20) == "antidiag"
+    # explicit names pass through untouched
+    assert dispatch.resolve("pallas", op="sigkernel") == "pallas"
+
+
+def test_deprecation_shims_warn_and_route():
+    X = paths(1, 2, 5, 2)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        k_dep = sigkernel(X, X, use_pallas=False)
+        K_dep = sigkernel_gram(X, X, solver="antidiag")
+    cats = [x.category for x in w]
+    assert cats.count(DeprecationWarning) == 2
+    np.testing.assert_allclose(k_dep, sigkernel(X, X, backend="reference"),
+                               rtol=1e-6)
+    np.testing.assert_allclose(K_dep, sigkernel_gram(X, X, symmetric=False,
+                                                     backend="antidiag"),
+                               rtol=1e-6)
+
+
+def test_use_pallas_none_stays_silent():
+    X = paths(2, 2, 5, 2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        sigkernel(X, X, use_pallas=None)  # historical documented auto
+
+
+# ---------------------------------------------------------------------------
+# cross-backend agreement (the dispatch contract)
+# ---------------------------------------------------------------------------
+
+def _agree_sigkernel(seed, l1, l2, Lx, Ly, d, time_aug, lead_lag):
+    x = paths(seed, 2, Lx, d)
+    y = paths(seed + 100, 2, Ly, d)
+    kw = dict(lam1=l1, lam2=l2, time_aug=time_aug, lead_lag=lead_lag)
+
+    k_ref = sigkernel(x, y, backend="reference", **kw)
+    g_ref = jax.grad(
+        lambda q: sigkernel(q, y, backend="reference", **kw).sum())(x)
+    for b in SIGKERNEL_BACKENDS:
+        if b == "reference":
+            continue
+        if b == "pallas_fused" and x.shape[:-2] != y.shape[:-2]:
+            continue
+        k = sigkernel(x, y, backend=b, **kw)
+        np.testing.assert_allclose(k, k_ref, rtol=5e-4, atol=1e-5,
+                                   err_msg=f"forward mismatch: {b}")
+        g = jax.grad(lambda q: sigkernel(q, y, backend=b, **kw).sum())(x)
+        np.testing.assert_allclose(g, g_ref, rtol=5e-4, atol=1e-5,
+                                   err_msg=f"grad mismatch: {b}")
+
+
+def _agree_gram(seed, l1, l2, Bx, By, L, d):
+    X = paths(seed, Bx, L, d)
+    Y = paths(seed + 100, By, L, d)
+    kw = dict(lam1=l1, lam2=l2)
+
+    K_ref = sigkernel_gram(X, Y, backend="reference", **kw)
+    g_ref = jax.grad(
+        lambda q: sigkernel_gram(q, Y, backend="reference", **kw).sum())(X)
+    for b in GRAM_BACKENDS:
+        if b == "reference":
+            continue
+        K = sigkernel_gram(X, Y, backend=b, **kw)
+        np.testing.assert_allclose(K, K_ref, rtol=5e-4, atol=1e-5,
+                                   err_msg=f"gram forward mismatch: {b}")
+        g = jax.grad(
+            lambda q: sigkernel_gram(q, Y, backend=b, **kw).sum())(X)
+        np.testing.assert_allclose(g, g_ref, rtol=5e-4, atol=1e-5,
+                                   err_msg=f"gram grad mismatch: {b}")
+
+
+def _agree_symmetric(seed, Bx):
+    X = paths(seed, Bx, 6, 2)
+    K_full = sigkernel_gram(X, X, symmetric=False, backend="reference")
+    for b in GRAM_BACKENDS:
+        K = sigkernel_gram(X, backend=b)
+        np.testing.assert_allclose(K, K_full, rtol=5e-4, atol=1e-5,
+                                   err_msg=f"symmetric mismatch: {b}")
+
+
+# fixed cells so the contract is exercised even without hypothesis
+@pytest.mark.parametrize("seed,l1,l2,Lx,Ly,d,ta,ll", [
+    (0, 0, 0, 5, 7, 2, False, False),
+    (1, 1, 2, 6, 4, 3, True, False),
+    (2, 2, 0, 8, 8, 1, False, True),
+])
+def test_backends_agree_sigkernel_cases(seed, l1, l2, Lx, Ly, d, ta, ll):
+    _agree_sigkernel(seed, l1, l2, Lx, Ly, d, ta, ll)
+
+
+@pytest.mark.parametrize("seed,l1,l2,Bx,By,L,d", [
+    (0, 0, 0, 3, 4, 6, 2), (1, 1, 1, 2, 5, 5, 3), (2, 0, 1, 4, 1, 7, 2),
+])
+def test_backends_agree_gram_cases(seed, l1, l2, Bx, By, L, d):
+    _agree_gram(seed, l1, l2, Bx, By, L, d)
+
+
+def test_backends_agree_symmetric_case():
+    _agree_symmetric(3, 4)
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 99), l1=st.integers(0, 2),
+           l2=st.integers(0, 2), Lx=st.integers(4, 8), Ly=st.integers(4, 8),
+           d=st.integers(1, 3), time_aug=st.booleans(),
+           lead_lag=st.booleans())
+    def test_all_backends_agree_sigkernel_property(seed, l1, l2, Lx, Ly, d,
+                                                   time_aug, lead_lag):
+        _agree_sigkernel(seed, l1, l2, Lx, Ly, d, time_aug, lead_lag)
+
+    @needs_hypothesis
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 99), l1=st.integers(0, 1),
+           l2=st.integers(0, 1), Bx=st.integers(1, 4), By=st.integers(1, 4),
+           L=st.integers(4, 7), d=st.integers(1, 3))
+    def test_all_backends_agree_gram_property(seed, l1, l2, Bx, By, L, d):
+        _agree_gram(seed, l1, l2, Bx, By, L, d)
+
+    @needs_hypothesis
+    @settings(max_examples=4, deadline=None)
+    @given(seed=st.integers(0, 99), Bx=st.integers(2, 4))
+    def test_all_backends_agree_symmetric_property(seed, Bx):
+        _agree_symmetric(seed, Bx)

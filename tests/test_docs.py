@@ -20,14 +20,15 @@ def test_no_broken_markdown_links():
 def test_docs_cover_required_pages():
     for page in ["docs/index.md", "docs/solver_guide.md",
                  "docs/api/core.signature.md", "docs/api/core.logsignature.md",
-                 "docs/api/core.sigkernel.md", "docs/api/kernels.md"]:
+                 "docs/api/core.sigkernel.md", "docs/api/core.dispatch.md",
+                 "docs/api/kernels.md"]:
         assert os.path.exists(os.path.join(ROOT, page)), page
 
 
 @pytest.mark.parametrize("module", [
     "repro.core.signature", "repro.core.logsignature", "repro.core.lyndon",
-    "repro.core.sigkernel", "repro.kernels.signature.ops",
-    "repro.kernels.sigkernel_pde.ops",
+    "repro.core.sigkernel", "repro.core.dispatch", "repro.core.gram",
+    "repro.kernels.signature.ops", "repro.kernels.sigkernel_pde.ops",
 ])
 def test_documented_modules_import(module):
     importlib.import_module(module)
@@ -40,8 +41,15 @@ def test_documented_symbols_exist():
     ls = importlib.import_module("repro.core.logsignature")
     ly = importlib.import_module("repro.core.lyndon")
     sk = importlib.import_module("repro.core.sigkernel")
+    dp = importlib.import_module("repro.core.dispatch")
+    gm = importlib.import_module("repro.core.gram")
     ops = importlib.import_module("repro.kernels.signature.ops")
+    pde_ops = importlib.import_module("repro.kernels.sigkernel_pde.ops")
     for obj, names in [
+        (dp, ["BackendSpec", "register", "get", "backends_for", "resolve",
+              "canonicalize", "count_pair_solves", "on_tpu"]),
+        (gm, ["sigkernel_gram"]),
+        (pde_ops, ["solve_fused", "gram_fused"]),
         (ls, ["logsignature", "logsignature_combine", "logsignature_dim"]),
         (ly, ["lyndon_words", "witt_dims", "logsig_dim", "compress",
               "expand", "standard_bracketing", "bracket_string",

@@ -42,7 +42,7 @@ def test_dtypes(dtype):
 def test_gradients_exact():
     from repro.core.signature import signature, signature_direct
     p = jax.random.normal(jax.random.PRNGKey(2), (3, 8, 3)) * 0.3
-    g1 = jax.grad(lambda q: signature(q, 4, use_pallas=True).sum())(p)
+    g1 = jax.grad(lambda q: signature(q, 4, backend="pallas").sum())(p)
     g2 = jax.grad(lambda q: signature_direct(q, 4).sum())(p)
     np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
 
@@ -87,8 +87,8 @@ def test_logsignature_fused_vs_pure(mode):
 def test_logsignature_fused_gradients():
     from repro.core.logsignature import logsignature
     p = jax.random.normal(jax.random.PRNGKey(6), (2, 7, 3)) * 0.3
-    g1 = jax.grad(lambda q: logsignature(q, 3, use_pallas=True).sum())(p)
-    g2 = jax.grad(lambda q: logsignature(q, 3, use_pallas=False).sum())(p)
+    g1 = jax.grad(lambda q: logsignature(q, 3, backend="pallas").sum())(p)
+    g2 = jax.grad(lambda q: logsignature(q, 3, backend="reference").sum())(p)
     np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
 
 

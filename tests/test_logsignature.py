@@ -46,7 +46,7 @@ def oracle(p, d, depth, mode):
 @pytest.mark.parametrize("depth", [1, 2, 3, 4, 5])
 def test_matches_tensor_log_oracle(d, depth, mode):
     p = paths(depth * 10 + d, B=2, L=6, d=d)
-    got = logsignature(p, depth, mode=mode, use_pallas=False)
+    got = logsignature(p, depth, mode=mode, backend="reference")
     np.testing.assert_allclose(got, oracle(p, d, depth, mode),
                                rtol=1e-6, atol=1e-6)
     assert got.shape[-1] == logsignature_dim(d, depth, mode)
@@ -55,7 +55,7 @@ def test_matches_tensor_log_oracle(d, depth, mode):
 @pytest.mark.parametrize("d,depth", [(2, 4), (3, 3)])
 def test_output_width_is_witt_dimension(d, depth):
     p = paths(0, d=d)
-    assert logsignature(p, depth, use_pallas=False).shape[-1] == \
+    assert logsignature(p, depth, backend="reference").shape[-1] == \
         sum(ly.witt_dims(d, depth))
 
 
@@ -71,7 +71,7 @@ def test_transforms_on_the_fly(time_aug, lead_lag):
         q = tf.time_augment(q)
     d_eff = transformed_dim(2, time_aug, lead_lag)
     got = logsignature(p, 3, time_aug=time_aug, lead_lag=lead_lag,
-                       use_pallas=False)
+                       backend="reference")
     np.testing.assert_allclose(got, oracle(q, d_eff, 3, "lyndon"),
                                rtol=1e-6, atol=1e-6)
 
@@ -80,7 +80,7 @@ def test_transforms_on_the_fly(time_aug, lead_lag):
 def test_grad_finite_differences(mode):
     p = np.asarray(paths(2, B=1, L=5, d=2))
     f = lambda q: logsignature(jnp.asarray(q), 4, mode=mode,
-                               use_pallas=False).sum()
+                               backend="reference").sum()
     g = jax.grad(f)(jnp.asarray(p))
     eps = 1e-6
     for idx in [(0, 0, 0), (0, 2, 1), (0, 4, 0)]:
@@ -93,7 +93,7 @@ def test_grad_finite_differences(mode):
 
 def test_grad_matches_autodiff_through_oracle():
     p = paths(3, B=2, L=6, d=3)
-    g1 = jax.grad(lambda q: logsignature(q, 4, use_pallas=False).sum())(p)
+    g1 = jax.grad(lambda q: logsignature(q, 4, backend="reference").sum())(p)
     g2 = jax.grad(lambda q: oracle(q, 3, 4, "lyndon").sum())(p)
     np.testing.assert_allclose(g1, g2, rtol=1e-8, atol=1e-10)
 
@@ -102,28 +102,28 @@ def test_grad_matches_autodiff_through_oracle():
 def test_combine_is_chen_compatible(mode):
     d, depth = 3, 4
     p = paths(4, B=2, L=8, d=d)
-    a = logsignature(p[:, :5], depth, mode=mode, use_pallas=False)
-    b = logsignature(p[:, 4:], depth, mode=mode, use_pallas=False)
-    full = logsignature(p, depth, mode=mode, use_pallas=False)
+    a = logsignature(p[:, :5], depth, mode=mode, backend="reference")
+    b = logsignature(p[:, 4:], depth, mode=mode, backend="reference")
+    full = logsignature(p, depth, mode=mode, backend="reference")
     np.testing.assert_allclose(logsignature_combine(a, b, d, depth, mode),
                                full, rtol=1e-8, atol=1e-10)
 
 
 def test_stream_mode():
     p = paths(5, B=2, L=6, d=3)
-    stream = logsignature(p, 3, stream=True, use_pallas=False)
+    stream = logsignature(p, 3, stream=True, backend="reference")
     assert stream.shape[-2] == 5
     np.testing.assert_allclose(stream[:, -1],
-                               logsignature(p, 3, use_pallas=False),
+                               logsignature(p, 3, backend="reference"),
                                rtol=1e-10, atol=1e-12)
     np.testing.assert_allclose(stream[:, 0],
-                               logsignature(p[:, :2], 3, use_pallas=False),
+                               logsignature(p[:, :2], 3, backend="reference"),
                                rtol=1e-10, atol=1e-12)
 
 
 def test_depth_one_is_total_increment():
     p = paths(6, B=2, L=7, d=4)
-    np.testing.assert_allclose(logsignature(p, 1, use_pallas=False),
+    np.testing.assert_allclose(logsignature(p, 1, backend="reference"),
                                p[:, -1] - p[:, 0], rtol=1e-12, atol=1e-12)
 
 
@@ -131,7 +131,7 @@ def test_from_increments_matches_path_api():
     p = paths(7, B=3, L=6, d=2)
     np.testing.assert_allclose(
         logsignature_from_increments(path_increments(p), 4),
-        logsignature(p, 4, use_pallas=False), rtol=1e-12, atol=1e-12)
+        logsignature(p, 4, backend="reference"), rtol=1e-12, atol=1e-12)
 
 
 def test_bad_mode_raises():

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import losses
 from repro.data.synthetic import gbm_paths, fbm_paths
@@ -32,6 +33,21 @@ def test_mmd_gradient_flows():
     g = jax.grad(lambda q: losses.mmd2(q, Y, unbiased=False))(X)
     assert np.isfinite(np.asarray(g)).all()
     assert float(jnp.abs(g).sum()) > 0
+
+
+def test_batch_of_one_raises_instead_of_nan():
+    """Regression: the unbiased 1/(b·(b−1)) normaliser used to return NaN
+    silently for b = 1; now it raises, and the biased estimator still works."""
+    X1 = gbm_paths(jax.random.PRNGKey(0), 1, 8, 2)
+    Y = gbm_paths(jax.random.PRNGKey(1), 4, 8, 2)
+    with pytest.raises(ValueError, match="unbiased"):
+        losses.mmd2(X1, Y)
+    with pytest.raises(ValueError, match="NaN"):
+        losses.mmd2(Y, X1)
+    with pytest.raises(ValueError, match="ensemble"):
+        losses.scoring_rule(X1, Y[0])
+    m = float(losses.mmd2(X1, Y, unbiased=False))
+    assert np.isfinite(m)
 
 
 def test_scoring_rule_finite():
