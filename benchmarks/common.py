@@ -1,29 +1,20 @@
-"""Benchmark utilities: min-over-repeats timing (paper §5 methodology)."""
+"""Benchmark utilities — thin compatibility shims over ``repro.bench``.
+
+The real timing implementation (paper §5 min-over-repeats methodology plus
+a machine fingerprint) lives in :mod:`repro.bench.timer`; this module only
+keeps the historical ``bench``/``row`` names for the legacy CSV wrappers.
+"""
 
 from __future__ import annotations
 
-import time
-
-import jax
-
-
-def bench(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
-    """Minimum wall time (seconds) over ``repeats`` runs, after jit warmup.
-
-    The paper takes the minimum over 50 runs; on CPU we default to 5 to keep
-    the suite fast — pass repeats=50 for paper-exact methodology.
-    """
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return best
+from repro.bench.timer import bench  # noqa: F401  (re-export)
 
 
 def row(name: str, seconds: float, derived: str = "") -> str:
     return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def entry_row(entry: dict) -> str:
+    """One ``name,us_per_call,derived`` CSV line from a suite entry dict."""
+    seconds = entry.get("seconds") or 0.0
+    return row(entry["name"], seconds, entry.get("derived", ""))

@@ -1,25 +1,17 @@
-"""Paper Figure 1: signature runtime vs truncation level (B=32, L=1024, d=5)."""
+"""Paper Figure 1 CSV wrapper — the workload lives in ``repro.bench``.
+
+Signature runtime vs truncation level:
+:func:`repro.bench.workloads.fig1_truncation_sweep`.
+"""
 
 from __future__ import annotations
 
-import jax
+from repro.bench import workloads
 
-from repro.core.signature import signature, signature_direct
-from .common import bench, row
+from .common import entry_row
 
 
 def run(quick: bool = True, repeats: int = 3):
-    B, L, d = (8, 128, 5) if quick else (32, 1024, 5)
-    path = jax.random.normal(jax.random.PRNGKey(0), (B, L, d)) * 0.2
-    lines = []
-    for N in range(2, 8):
-        f_h = jax.jit(lambda p, N=N: signature(p, N))
-        f_d = jax.jit(lambda p, N=N: signature_direct(p, N))
-        g_h = jax.jit(jax.grad(lambda p, N=N: signature(p, N).sum()))
-        t_h = bench(f_h, path, repeats=repeats)
-        t_d = bench(f_d, path, repeats=repeats)
-        t_g = bench(g_h, path, repeats=repeats)
-        lines.append(row(f"fig1_N{N}_fwd_horner", t_h,
-                         f"direct/horner={t_d / t_h:.2f}"))
-        lines.append(row(f"fig1_N{N}_bwd", t_g))
-    return lines
+    entries = workloads.fig1_truncation_sweep(
+        mode="quick" if quick else "full", repeats=repeats)
+    return [entry_row(e) for e in entries]

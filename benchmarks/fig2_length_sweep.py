@@ -1,26 +1,17 @@
-"""Paper Figure 2: signature-kernel runtime vs stream length (B=32, d=5)."""
+"""Paper Figure 2 CSV wrapper — the workload lives in ``repro.bench``.
+
+Signature-kernel runtime vs stream length:
+:func:`repro.bench.workloads.fig2_length_sweep`.
+"""
 
 from __future__ import annotations
 
-import jax
+from repro.bench import workloads
 
-from repro.core.sigkernel import (sigkernel, delta_matrix, solve_goursat,
-                                  solve_goursat_antidiag)
-from .common import bench, row
+from .common import entry_row
 
 
 def run(quick: bool = True, repeats: int = 3):
-    B, d = (8, 5) if quick else (32, 5)
-    lengths = [32, 64, 128, 256] if quick else [128, 256, 512, 1024, 2048]
-    lines = []
-    for L in lengths:
-        kx = jax.random.normal(jax.random.PRNGKey(0), (B, L, d)) * 0.1
-        ky = jax.random.normal(jax.random.PRNGKey(1), (B, L, d)) * 0.1
-        f_wave = jax.jit(
-            lambda x, y: solve_goursat_antidiag(delta_matrix(x, y)))
-        g_exact = jax.jit(jax.grad(lambda x, y: sigkernel(x, y).sum()))
-        t_f = bench(f_wave, kx, ky, repeats=repeats)
-        t_g = bench(g_exact, kx, ky, repeats=repeats)
-        lines.append(row(f"fig2_L{L}_fwd", t_f, f"per_pair_us={t_f/B*1e6:.1f}"))
-        lines.append(row(f"fig2_L{L}_bwd_exact", t_g))
-    return lines
+    entries = workloads.fig2_length_sweep(
+        mode="quick" if quick else "full", repeats=repeats)
+    return [entry_row(e) for e in entries]

@@ -1,38 +1,18 @@
-"""pySigLib §3.4 headline claim: exact gradients vs the second-PDE
-approximation of [30], as a function of path length and dyadic order.
+"""§3.4 gradient-accuracy CSV wrapper — the workload lives in ``repro.bench``.
 
-The exact one-pass backward matches autodiff to float precision everywhere;
-the PDE-approximation error is large for short paths / low dyadic order and
-shrinks as the grid refines — exactly the failure mode the paper reports.
+Exact one-pass backward vs the second-PDE approximation of [30], as a
+function of path length and dyadic order:
+:func:`repro.bench.workloads.grad_accuracy`.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from repro.bench import workloads
 
-from repro.core.sigkernel import (delta_matrix, solve_goursat,
-                                  solve_goursat_grad,
-                                  solve_goursat_grad_pde_approx)
 from .common import row
 
 
 def run(quick: bool = True, repeats: int = 0):
-    lines = []
-    for L in ([4, 8, 16] if quick else [4, 8, 16, 32, 64]):
-        for lam in ([0, 1] if quick else [0, 1, 2]):
-            x = jax.random.normal(jax.random.PRNGKey(0), (4, L, 3)) * 0.3
-            y = jax.random.normal(jax.random.PRNGKey(1), (4, L, 3)) * 0.3
-            delta = delta_matrix(x, y)
-            grid = solve_goursat(delta, lam, lam, return_grid=True)
-            gbar = jnp.ones(delta.shape[:-2])
-            d_true = jax.grad(lambda d: solve_goursat(d, lam, lam).sum())(delta)
-            d_exact = solve_goursat_grad(delta, grid, gbar, lam, lam)
-            d_approx = solve_goursat_grad_pde_approx(delta, grid, gbar, lam, lam)
-            scale = float(jnp.abs(d_true).max())
-            e_exact = float(jnp.abs(d_exact - d_true).max()) / scale
-            e_approx = float(jnp.abs(d_approx - d_true).max()) / scale
-            lines.append(row(
-                f"gradacc_L{L}_lam{lam}", 0.0,
-                f"rel_err_exact={e_exact:.2e};rel_err_pde_approx={e_approx:.2e}"))
-    return lines
+    entries = workloads.grad_accuracy(
+        mode="quick" if quick else "full", repeats=repeats)
+    return [row(e["name"], 0.0, e["derived"]) for e in entries]

@@ -1,34 +1,31 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark harness entry point.
+"""DEPRECATED entry point — forwards to ``python -m repro.bench``.
+
+The benchmark harness moved to :mod:`repro.bench` (persistent BENCH JSONs,
+machine fingerprints, autotuning, a CI regression gate — see
+docs/benchmarks.md).  This stub keeps old command lines working:
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--repeats N]
 
---full uses the paper's exact (B, L, d, N) cells (slow on CPU); the default
-quick mode scales them down but keeps the comparisons intact.
+now runs the suite and writes ``BENCH_quick.json`` / ``BENCH_full.json``
+(``BENCH_PR3.json`` with ``--smoke``) exactly like ``python -m
+repro.bench`` with the same flags.
 """
 
 from __future__ import annotations
 
-import argparse
 import sys
+import warnings
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--repeats", type=int, default=3)
-    args, _ = ap.parse_known_args()
-
-    from . import (table1_signatures, table2_sigkernels,
-                   table3_logsignatures, fig1_truncation_sweep,
-                   fig2_length_sweep, grad_accuracy)
-
-    print("name,us_per_call,derived")
-    for mod in (table1_signatures, table2_sigkernels, table3_logsignatures,
-                fig1_truncation_sweep, fig2_length_sweep, grad_accuracy):
-        for line in mod.run(quick=not args.full, repeats=args.repeats):
-            print(line, flush=True)
+def main() -> int:
+    warnings.warn(
+        "python -m benchmarks.run is deprecated; use python -m repro.bench "
+        "(docs/benchmarks.md)", DeprecationWarning, stacklevel=2)
+    print("benchmarks.run is deprecated; forwarding to "
+          "`python -m repro.bench` ...", file=sys.stderr)
+    from repro.bench.__main__ import main as bench_main
+    return bench_main()
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

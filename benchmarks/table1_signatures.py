@@ -1,43 +1,18 @@
-"""Paper Table 1: truncated-signature forward/backward runtimes.
+"""Paper Table 1 CSV wrapper — the workload lives in ``repro.bench``.
 
-Compares the two algorithms the paper implements — the direct scheme (Alg 1,
-iisignature-style baseline) and Horner's scheme (Alg 2, pySigLib) — plus the
-Pallas kernel path (interpret mode on CPU; compiled on TPU).  The paper's
-(B, L, d, N) cells are used, scaled by --quick for CI.
+Direct scheme (Alg 1, iisignature-style baseline) vs Horner's scheme
+(Alg 2, pySigLib), forward and backward.  Cells and timing methodology:
+:func:`repro.bench.workloads.table1_signatures`.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from repro.bench import workloads
 
-from repro.core.signature import signature, signature_direct
-from .common import bench, row
-
-PAPER_CELLS = [(128, 256, 4, 6), (128, 512, 8, 5), (128, 1024, 16, 4)]
-QUICK_CELLS = [(16, 64, 4, 6), (16, 128, 8, 5), (16, 256, 16, 4)]
+from .common import entry_row
 
 
 def run(quick: bool = True, repeats: int = 5):
-    cells = QUICK_CELLS if quick else PAPER_CELLS
-    lines = []
-    for (B, L, d, N) in cells:
-        path = jax.random.normal(jax.random.PRNGKey(0), (B, L, d)) * 0.2
-        tag = f"table1_B{B}_L{L}_d{d}_N{N}"
-
-        f_direct = jax.jit(lambda p: signature_direct(p, N))
-        f_horner = jax.jit(lambda p: signature(p, N))
-        t_dir = bench(f_direct, path, repeats=repeats)
-        t_hor = bench(f_horner, path, repeats=repeats)
-        lines.append(row(f"{tag}_fwd_direct", t_dir))
-        lines.append(row(f"{tag}_fwd_horner", t_hor,
-                         f"speedup_vs_direct={t_dir / t_hor:.2f}x"))
-
-        g_auto = jax.jit(jax.grad(lambda p: signature_direct(p, N).sum()))
-        g_rev = jax.jit(jax.grad(lambda p: signature(p, N).sum()))
-        t_ga = bench(g_auto, path, repeats=repeats)
-        t_gr = bench(g_rev, path, repeats=repeats)
-        lines.append(row(f"{tag}_bwd_autodiff", t_ga))
-        lines.append(row(f"{tag}_bwd_timereversed", t_gr,
-                         f"speedup_vs_autodiff={t_ga / t_gr:.2f}x"))
-    return lines
+    entries = workloads.table1_signatures(
+        mode="quick" if quick else "full", repeats=repeats)
+    return [entry_row(e) for e in entries]

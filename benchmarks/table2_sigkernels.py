@@ -1,130 +1,40 @@
-"""Paper Table 2: signature-kernel forward/backward runtimes.
+"""Paper Table 2 CSV wrapper — the workload lives in ``repro.bench``.
 
-Forward: row-scan Goursat solver (serial baseline, sigkernel-package-style)
-vs the vectorised anti-diagonal wavefront (pySigLib's parallel scheme — SIMD
-on CPU, the Pallas kernel on TPU).
+Row-scan Goursat baseline vs the vectorised anti-diagonal wavefront
+(forward), autodiff-through-the-solver vs pySigLib's exact one-pass
+backward (Alg 4), plus the Gram engine through every usable backend:
+:func:`repro.bench.workloads.table2_sigkernels`.
 
-Backward: autodiff-through-the-solver (baseline) vs pySigLib's exact one-pass
-backward (Alg 4) wired through custom_vjp.
-
-Gram section (beyond-paper): the unified engine of ``repro.core.gram``
-through every registered backend — dense, fused-Δ, and the symmetric
-upper-triangle fast path.  ``--smoke`` runs tiny shapes through every
-backend (forward + grad) so dispatch regressions fail fast in CI.
+``--smoke`` pushes tiny shapes through EVERY registered backend (forward +
+grad + the symmetric pair-solve budget) and asserts agreement — the CI
+``bench-smoke`` job runs it on every push
+(:func:`repro.bench.workloads.smoke_checks`).
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from repro.bench import workloads
 
-from repro.core import dispatch
-from repro.core.gram import sigkernel_gram
-from repro.core.sigkernel import (sigkernel, delta_matrix, solve_goursat,
-                                  solve_goursat_antidiag)
-from .common import bench, row
-
-PAPER_CELLS = [(128, 256, 8), (128, 512, 16), (128, 1024, 32)]
-QUICK_CELLS = [(16, 64, 8), (16, 128, 16), (8, 256, 32)]
-GRAM_CELLS_QUICK = [(8, 32, 4)]
-GRAM_CELLS_PAPER = [(32, 128, 8)]
+from .common import entry_row
 
 
 def run(quick: bool = True, repeats: int = 5):
-    cells = QUICK_CELLS if quick else PAPER_CELLS
-    lines = []
-    for (B, L, d) in cells:
-        kx = jax.random.normal(jax.random.PRNGKey(0), (B, L, d)) * 0.1
-        ky = jax.random.normal(jax.random.PRNGKey(1), (B, L, d)) * 0.1
-        tag = f"table2_B{B}_L{L}_d{d}"
-
-        f_scan = jax.jit(lambda x, y: solve_goursat(delta_matrix(x, y)))
-        f_wave = jax.jit(lambda x, y: solve_goursat_antidiag(delta_matrix(x, y)))
-        t_scan = bench(f_scan, kx, ky, repeats=repeats)
-        t_wave = bench(f_wave, kx, ky, repeats=repeats)
-        lines.append(row(f"{tag}_fwd_rowscan", t_scan))
-        lines.append(row(f"{tag}_fwd_wavefront", t_wave,
-                         f"speedup_vs_rowscan={t_scan / t_wave:.2f}x"))
-
-        g_auto = jax.jit(jax.grad(
-            lambda x, y: solve_goursat(delta_matrix(x, y)).sum()))
-        g_exact = jax.jit(jax.grad(
-            lambda x, y: sigkernel(x, y).sum()))
-        t_ga = bench(g_auto, kx, ky, repeats=repeats)
-        t_ge = bench(g_exact, kx, ky, repeats=repeats)
-        lines.append(row(f"{tag}_bwd_autodiff", t_ga))
-        lines.append(row(f"{tag}_bwd_exact_alg4", t_ge,
-                         f"speedup_vs_autodiff={t_ga / t_ge:.2f}x"))
-
-    lines.extend(run_gram(quick=quick, repeats=repeats))
-    return lines
+    entries = workloads.table2_sigkernels(
+        mode="quick" if quick else "full", repeats=repeats)
+    return [entry_row(e) for e in entries]
 
 
-def run_gram(quick: bool = True, repeats: int = 5,
-             backends=None):
-    """Gram engine rows: every backend × {dense, symmetric} (+ fused)."""
-    cells = GRAM_CELLS_QUICK if quick else GRAM_CELLS_PAPER
-    if backends is None:
-        backends = dispatch.backends_for("gram")
-        if not dispatch.on_tpu():
-            # interpret-mode Pallas timings measure nothing meaningful and
-            # dominate CPU wall-clock; --smoke covers those for correctness
-            backends = [b for b in backends if not dispatch.get(b).needs_tpu]
-    # reference first so the other rows can report their speedup against it
-    backends = (["reference"] if "reference" in backends else []) + \
-        [b for b in backends if b != "reference"]
-    lines = []
-    for (B, L, d) in cells:
-        X = jax.random.normal(jax.random.PRNGKey(2), (B, L, d)) * 0.1
-        Y = jax.random.normal(jax.random.PRNGKey(3), (B, L, d)) * 0.1
-        tag = f"table2_gram_B{B}_L{L}_d{d}"
-        t_ref = None
-        for b in backends:
-            f = jax.jit(lambda x, y, b=b: sigkernel_gram(x, y, backend=b))
-            t = bench(f, X, Y, repeats=repeats)
-            extra = "" if t_ref is None else f"speedup_vs_reference={t_ref / t:.2f}x"
-            if b == "reference":
-                t_ref = t
-            lines.append(row(f"{tag}_dense_{b}", t, extra))
-        # symmetric fast path: ~half the PDE solves of the dense Kxx
-        for b in backends:
-            f_sym = jax.jit(lambda x, b=b: sigkernel_gram(x, backend=b))
-            t_sym = bench(f_sym, X, repeats=repeats)
-            lines.append(row(f"{tag}_symmetric_{b}", t_sym))
-    return lines
+def run_gram(quick: bool = True, repeats: int = 5, backends=None):
+    entries = workloads.gram_backends(
+        mode="quick" if quick else "full", repeats=repeats,
+        backends=backends)
+    return [entry_row(e) for e in entries]
 
 
 def run_smoke(repeats: int = 1):
-    """Tiny shapes through EVERY backend, forward and grad — the CI smoke
-    job.  Any dispatch/registry regression fails here in seconds."""
-    import numpy as np
-    B, L, d = 3, 8, 2
-    X = jax.random.normal(jax.random.PRNGKey(0), (B, L, d)) * 0.1
-    Y = jax.random.normal(jax.random.PRNGKey(1), (B, L, d)) * 0.1
-    lines = []
-    K_ref = sigkernel_gram(X, Y, backend="reference")
-    for b in dispatch.backends_for("gram"):
-        t = bench(lambda: sigkernel_gram(X, Y, backend=b), repeats=repeats,
-                  warmup=1)
-        K = sigkernel_gram(X, Y, backend=b)
-        np.testing.assert_allclose(K, K_ref, rtol=5e-4, atol=1e-5,
-                                   err_msg=f"smoke: {b} disagrees")
-        g = jax.grad(lambda q: sigkernel_gram(q, Y, backend=b).sum())(X)
-        assert np.isfinite(np.asarray(g)).all(), f"smoke: {b} grad not finite"
-        lines.append(row(f"smoke_gram_{b}", t, "ok"))
-    with dispatch.count_pair_solves() as c:
-        sigkernel_gram(X, backend="pallas_fused")
-    budget = B * (B + 1) // 2
-    assert c.total <= budget, (c.total, budget)
-    lines.append(row("smoke_symmetric_pair_solves", 0.0,
-                     f"solves={c.total}<=budget={budget}"))
-    for b in dispatch.backends_for("sigkernel"):
-        k = sigkernel(X, Y, backend=b)
-        np.testing.assert_allclose(
-            k, sigkernel(X, Y, backend="reference"), rtol=5e-4, atol=1e-5,
-            err_msg=f"smoke: sigkernel {b} disagrees")
-        lines.append(row(f"smoke_sigkernel_{b}", 0.0, "ok"))
-    return lines
+    entries = workloads.smoke_checks(repeats=repeats)
+    entries += workloads.gram_backends(mode="smoke", repeats=max(repeats, 1))
+    return [entry_row(e) for e in entries]
 
 
 if __name__ == "__main__":

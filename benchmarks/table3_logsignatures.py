@@ -1,46 +1,18 @@
-"""Log-signature runtimes: Horner + log/Lyndon epilogue vs plain signatures.
+"""Paper Table 3 CSV wrapper — the workload lives in ``repro.bench``.
 
-Measures (a) the overhead of the tensor-log + Lyndon projection on top of
-the shared Horner recursion, (b) mode cost ("lyndon" gather vs "brackets"
-triangular matmul vs "expand"), and (c) the achieved compression ratio
-(Witt dimension vs full tensor dimension) — the reason to ship log-sigs.
+Horner + log/Lyndon epilogue vs plain signatures: per-mode epilogue cost
+and the achieved compression ratio.  Cells and timing methodology:
+:func:`repro.bench.workloads.table3_logsignatures`.
 """
 
 from __future__ import annotations
 
-import jax
+from repro.bench import workloads
 
-from repro.core.lyndon import logsig_dim
-from repro.core.signature import signature
-from repro.core.logsignature import logsignature
-from repro.core.tensoralg import sig_dim
-from .common import bench, row
-
-PAPER_CELLS = [(128, 256, 4, 6), (128, 512, 8, 5), (128, 1024, 16, 4)]
-QUICK_CELLS = [(16, 64, 4, 6), (16, 128, 8, 5), (16, 256, 16, 4)]
+from .common import entry_row
 
 
 def run(quick: bool = True, repeats: int = 5):
-    cells = QUICK_CELLS if quick else PAPER_CELLS
-    lines = []
-    for (B, L, d, N) in cells:
-        path = jax.random.normal(jax.random.PRNGKey(0), (B, L, d)) * 0.2
-        tag = f"table3_B{B}_L{L}_d{d}_N{N}"
-        ratio = f"compress={logsig_dim(d, N)}/{sig_dim(d, N)}"
-
-        f_sig = jax.jit(lambda p: signature(p, N, backend="reference"))
-        t_sig = bench(f_sig, path, repeats=repeats)
-        lines.append(row(f"{tag}_signature", t_sig, ratio))
-
-        for mode in ("lyndon", "brackets", "expand"):
-            f_ls = jax.jit(lambda p, m=mode: logsignature(
-                p, N, mode=m, backend="reference"))
-            t_ls = bench(f_ls, path, repeats=repeats)
-            lines.append(row(f"{tag}_logsig_{mode}", t_ls,
-                             f"epilogue_x{t_ls / max(t_sig, 1e-12):.2f}"))
-
-        f_grad = jax.jit(jax.grad(
-            lambda p: logsignature(p, N, backend="reference").sum()))
-        lines.append(row(f"{tag}_logsig_grad",
-                         bench(f_grad, path, repeats=repeats)))
-    return lines
+    entries = workloads.table3_logsignatures(
+        mode="quick" if quick else "full", repeats=repeats)
+    return [entry_row(e) for e in entries]

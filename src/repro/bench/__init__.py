@@ -1,0 +1,39 @@
+"""Persistent benchmark + autotuning subsystem.
+
+The paper's core claim is raw speed, so this package makes performance a
+first-class, *recorded* artifact instead of a side effect:
+
+``timer``
+    Steady-state timing (jit warmup + ``block_until_ready``, min over
+    repeats — paper §5 methodology) and a machine fingerprint.
+``autotune``
+    Measures every capable backend from :mod:`repro.core.dispatch` for a
+    given (op, shape, dtype, platform) key, caches the winner in an on-disk
+    JSON cache, and backs ``backend="auto"`` when the cache is warm.
+``workloads``
+    The paper-aligned workload cells (signature Table 1, sig-kernel Table 2
+    + Gram rows, log-signature Table 3, §3.4 gradient accuracy) at smoke /
+    quick / full sizes, plus the CI smoke checks.
+``suite``
+    Runs a set of workloads and emits a schema-versioned BENCH JSON
+    (``BENCH_PR3.json`` at the repo root is the committed baseline) and a
+    markdown summary.  CLI: ``python -m repro.bench [--smoke|--full]``.
+``compare``
+    Diffs two BENCH JSONs with machine-speed normalisation and per-entry
+    tolerances; exits nonzero on regression.  CLI:
+    ``python -m repro.bench.compare OLD NEW``.
+
+See docs/benchmarks.md for the JSON schema and the CI perf gate.
+"""
+
+import importlib
+
+__all__ = ["autotune", "compare", "suite", "timer", "workloads"]
+
+
+def __getattr__(name):
+    # lazy submodule access (PEP 562): keeps `import repro.bench` light and
+    # avoids runpy's double-import warning for `python -m repro.bench.compare`
+    if name in __all__:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,269 @@
+"""Measurement-driven backend selection for ``backend="auto"``.
+
+:func:`tune` benchmarks every backend from :mod:`repro.core.dispatch` that
+can serve an op on the current platform (TPU-only backends are skipped off
+TPU — interpret mode measures nothing meaningful), and persists the winner
+in an on-disk JSON cache keyed by ``(op, platform, dtype, shape-bucket)``.
+:func:`lookup` is the read side: :func:`repro.core.dispatch.resolve`
+consults it when resolving ``"auto"`` and falls back to the static shape
+heuristics whenever the answer is ``None`` (cache cold, autotuning
+disabled, or a stale/corrupt cache file).
+
+Design points:
+
+* **Shape buckets** — batch/length-like dimensions of the key shape are
+  rounded up to the next power of two, so nearby problem sizes share one
+  cache entry and one tuning run; channel count and truncation depth stay
+  exact (cost is exponential in depth — bucketing it would tune a
+  different problem).  :func:`tune` measures at the *bucketed* shape, so
+  the entry is honest for the whole bucket.
+* **Lookups never time anything** — a warm cache costs one (memoised) JSON
+  read per process; ``tune`` on a warm key returns the cached winner
+  without running a single measurement unless ``force=True``.
+* **Fail open** — a corrupted cache file, an unknown schema version, or an
+  entry naming a backend that no longer exists are all treated as a cold
+  cache, never an error.
+
+Environment variables:
+
+``REPRO_DISABLE_AUTOTUNE=1``
+    Disables the cache entirely: ``lookup`` returns ``None`` (so ``auto``
+    uses the static heuristics) and ``tune`` still measures when called
+    explicitly but does not persist.
+``REPRO_AUTOTUNE_CACHE=/path/to/cache.json``
+    Overrides the cache location (default ``~/.cache/repro/autotune.json``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch
+from . import timer
+
+SCHEMA = 1
+
+ENV_DISABLE = "REPRO_DISABLE_AUTOTUNE"
+ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+_DEFAULT_CACHE = os.path.join("~", ".cache", "repro", "autotune.json")
+
+#: batch size tuning runners use for ops whose key shape carries no batch dim
+_TUNE_BATCH = 8
+
+
+def enabled() -> bool:
+    """Autotuning is on unless REPRO_DISABLE_AUTOTUNE is truthy."""
+    return os.environ.get(ENV_DISABLE, "").strip().lower() not in (
+        "1", "true", "yes", "on")
+
+
+def cache_path() -> str:
+    return os.path.expanduser(os.environ.get(ENV_CACHE) or _DEFAULT_CACHE)
+
+
+# ---------------------------------------------------------------------------
+# keys
+# ---------------------------------------------------------------------------
+
+def bucket(shape) -> Tuple[int, ...]:
+    """Round every dimension up to the next power of two (min 1)."""
+    return tuple(1 if s <= 1 else 1 << (int(s) - 1).bit_length()
+                 for s in shape)
+
+
+#: how many leading dims of each op's key shape are batch/length-like and
+#: safe to bucket to powers of two.  The trailing dims (channel count d,
+#: truncation depth) stay EXACT: cost is exponential in depth and
+#: polynomial of high degree in d, so bucketing them would tune a wildly
+#: different problem (e.g. depth 5 -> 8 is ~d^3 more work).
+_BUCKETED_DIMS = {"signature": 1, "logsignature": 1, "sigkernel": 2,
+                  "gram": 4}
+
+
+def key_shape(op: str, shape) -> Tuple[int, ...]:
+    """Canonical (bucketed) key shape for ``op``; tuning measures this.
+
+    The per-op meaning of ``shape`` (what the dispatch call sites pass):
+
+    * ``signature`` / ``logsignature``: ``(L, d, depth)`` — increments per
+      path, *transformed* channel count, truncation level;
+    * ``sigkernel``: ``(nx, ny, d)`` — the *refined* PDE grid
+      ``(Lx<<lam1, Ly<<lam2)`` and transformed channel count;
+    * ``gram``: ``(Bx, By, nx, ny, d)``.
+    """
+    if op not in dispatch.OPS:
+        raise ValueError(f"unknown op {op!r}; known: {dispatch.OPS}")
+    n = _BUCKETED_DIMS[op]
+    return bucket(shape[:n]) + tuple(int(s) for s in shape[n:])
+
+
+def cache_key(op: str, shape, dtype="float32") -> str:
+    """``op|platform|dtype|b1xb2x...`` — the on-disk cache key."""
+    dims = "x".join(str(s) for s in key_shape(op, shape))
+    return f"{op}|{jax.default_backend()}|{jnp.dtype(dtype).name}|{dims}"
+
+
+# ---------------------------------------------------------------------------
+# cache I/O (memoised by mtime; fail-open on anything unexpected)
+# ---------------------------------------------------------------------------
+
+_memo: Dict[str, Tuple[Optional[float], Dict]] = {}
+
+
+def invalidate_memo() -> None:
+    """Drop the in-process cache-file memo (tests, post-write refresh)."""
+    _memo.clear()
+
+
+def _entries(path: str) -> Dict[str, dict]:
+    """Entries dict from ``path``; {} for missing/corrupt/stale-schema."""
+    try:
+        mtime: Optional[float] = os.stat(path).st_mtime
+    except OSError:
+        mtime = None
+    hit = _memo.get(path)
+    if hit is not None and hit[0] == mtime:
+        return hit[1]
+    entries: Dict[str, dict] = {}
+    if mtime is not None:
+        try:
+            with open(path, encoding="utf-8") as f:
+                doc = json.load(f)
+            if (isinstance(doc, dict) and doc.get("schema") == SCHEMA
+                    and isinstance(doc.get("entries"), dict)):
+                entries = doc["entries"]
+        except (OSError, ValueError):
+            entries = {}
+    _memo[path] = (mtime, entries)
+    return entries
+
+
+def _store(key: str, entry: dict) -> None:
+    path = cache_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    entries = dict(_entries(path))
+    entries[key] = entry
+    doc = {"schema": SCHEMA, "entries": entries}
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               prefix=".autotune-")
+    try:
+        with os.fdopen(fd, "w", encoding="utf-8") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    invalidate_memo()
+
+
+def cache_entry(op: str, shape, dtype="float32") -> Optional[dict]:
+    """Full cached record (backend, timings, tuned_at) or None."""
+    if not enabled():
+        return None
+    entry = _entries(cache_path()).get(cache_key(op, shape, dtype))
+    return entry if isinstance(entry, dict) else None
+
+
+def lookup(op: str, shape, dtype="float32") -> Optional[str]:
+    """Cached winning backend name for this key, or None (cold/disabled).
+
+    Never runs a measurement.  The caller (``dispatch.resolve``) validates
+    the name against the live registry, so stale entries degrade to the
+    static heuristics rather than erroring.
+    """
+    entry = cache_entry(op, shape, dtype)
+    if entry is None:
+        return None
+    name = entry.get("backend")
+    return name if isinstance(name, str) else None
+
+
+# ---------------------------------------------------------------------------
+# tuning
+# ---------------------------------------------------------------------------
+
+def candidates(op: str) -> Tuple[str, ...]:
+    """Backends worth measuring for ``op`` on the current platform."""
+    names = dispatch.backends_for(op)
+    if not dispatch.on_tpu():
+        names = tuple(n for n in names if not dispatch.get(n).needs_tpu)
+    return names or dispatch.backends_for(op)
+
+
+def _runner(op: str, shape, dtype, backend: str):
+    """Zero-arg jitted callable exercising ``op`` at the bucketed shape."""
+    from repro.core.gram import sigkernel_gram
+    from repro.core.logsignature import logsignature
+    from repro.core.signature import signature
+    from repro.core.sigkernel import sigkernel
+
+    key = jax.random.PRNGKey(0)
+    if op in ("signature", "logsignature"):
+        L, d, depth = shape
+        path = (jax.random.normal(key, (_TUNE_BATCH, max(L, 2) + 1, d))
+                * 0.2).astype(dtype)
+        if op == "signature":
+            f = jax.jit(lambda p: signature(p, depth, backend=backend))
+        else:
+            f = jax.jit(lambda p: logsignature(p, depth, backend=backend))
+        return lambda: f(path)
+    if op == "sigkernel":
+        nx, ny, d = shape
+        x = (jax.random.normal(key, (_TUNE_BATCH, nx + 1, d)) * 0.1
+             ).astype(dtype)
+        y = (jax.random.normal(jax.random.PRNGKey(1),
+                               (_TUNE_BATCH, ny + 1, d)) * 0.1).astype(dtype)
+        f = jax.jit(lambda a, b: sigkernel(a, b, backend=backend))
+        return lambda: f(x, y)
+    if op == "gram":
+        Bx, By, nx, ny, d = shape
+        X = (jax.random.normal(key, (Bx, nx + 1, d)) * 0.1).astype(dtype)
+        Y = (jax.random.normal(jax.random.PRNGKey(1), (By, ny + 1, d)) * 0.1
+             ).astype(dtype)
+        f = jax.jit(lambda a, b: sigkernel_gram(
+            a, b, backend=backend, symmetric=False))
+        return lambda: f(X, Y)
+    raise ValueError(f"no tuning runner for op {op!r}")
+
+
+def measure(op: str, shape, dtype="float32", *, repeats: int = 3,
+            warmup: int = 1) -> Dict[str, float]:
+    """Steady-state seconds per call for every candidate backend."""
+    shape = key_shape(op, shape)
+    return {b: timer.bench(_runner(op, shape, dtype, b),
+                           repeats=repeats, warmup=warmup)
+            for b in candidates(op)}
+
+
+def tune(op: str, shape, dtype="float32", *, repeats: int = 3,
+         warmup: int = 1, force: bool = False) -> str:
+    """Measure candidates, persist the winner, return its name.
+
+    A warm cache key returns the stored winner with **zero** timed runs
+    unless ``force=True``.  With autotuning disabled the measurement still
+    happens (this is an explicit call) but nothing is persisted.
+    """
+    if not force:
+        cached = lookup(op, shape, dtype)
+        if cached is not None and cached in candidates(op):
+            return cached
+    times = measure(op, shape, dtype, repeats=repeats, warmup=warmup)
+    winner = min(times, key=times.get)
+    if enabled():
+        _store(cache_key(op, shape, dtype), {
+            "backend": winner,
+            "timings": times,
+            "tuned_at": time.time(),
+            "repeats": repeats,
+        })
+    return winner

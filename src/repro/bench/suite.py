@@ -1,0 +1,105 @@
+"""Run the benchmark workloads and emit a schema-versioned BENCH JSON.
+
+The JSON document (schema 1):
+
+``{"schema": 1, "mode": "smoke" | "quick" | "full", "repeats": int,
+   "created_unix": float, "fingerprint": {...},  # timer.fingerprint()
+   "entries": [ ... ]}                            # workloads entry dicts
+
+``BENCH_PR3.json`` at the repo root is the committed baseline, produced by
+``python -m repro.bench --smoke``; CI re-runs the same mode and gates on
+:mod:`repro.bench.compare`.  See docs/benchmarks.md.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Callable, Dict, List, Tuple
+
+from . import timer, workloads
+
+SCHEMA = 1
+
+#: workloads per mode, in run order (smoke adds the CI correctness checks
+#: and the autotune round-trip on top of scaled-down paper tables)
+WORKLOAD_SETS: Dict[str, Tuple[Callable, ...]] = {
+    "smoke": (workloads.calibration, workloads.smoke_checks,
+              workloads.autotune_auto, workloads.table1_signatures,
+              workloads.table2_sigkernels, workloads.table3_logsignatures,
+              workloads.grad_accuracy),
+    "quick": (workloads.calibration, workloads.table1_signatures,
+              workloads.table2_sigkernels, workloads.table3_logsignatures,
+              workloads.fig1_truncation_sweep, workloads.fig2_length_sweep,
+              workloads.grad_accuracy),
+    "full": (workloads.calibration, workloads.table1_signatures,
+             workloads.table2_sigkernels, workloads.table3_logsignatures,
+             workloads.fig1_truncation_sweep, workloads.fig2_length_sweep,
+             workloads.grad_accuracy),
+}
+
+_DEFAULT_REPEATS = {"smoke": 2, "quick": 3, "full": 5}
+
+
+def run_suite(mode: str = "quick", repeats: int = None,
+              progress: Callable[[str], None] = None) -> dict:
+    """Run every workload for ``mode`` and return the BENCH document."""
+    if mode not in WORKLOAD_SETS:
+        raise ValueError(
+            f"mode must be one of {sorted(WORKLOAD_SETS)}, got {mode!r}")
+    if repeats is None:
+        repeats = _DEFAULT_REPEATS[mode]
+    entries: List[dict] = []
+    for fn in WORKLOAD_SETS[mode]:
+        if progress is not None:
+            progress(f"running {fn.__name__} ...")
+        entries.extend(fn(mode, repeats))
+    names = [e["name"] for e in entries]
+    dupes = {n for n in names if names.count(n) > 1}
+    if dupes:  # names are the compare join key; duplicates poison the gate
+        raise RuntimeError(f"duplicate benchmark entry names: {sorted(dupes)}")
+    return {
+        "schema": SCHEMA,
+        "mode": mode,
+        "repeats": repeats,
+        "created_unix": time.time(),
+        "fingerprint": timer.fingerprint(),
+        "entries": entries,
+    }
+
+
+def write_json(doc: dict, path: str) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1, sort_keys=False)
+        f.write("\n")
+
+
+def load_json(path: str) -> dict:
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or doc.get("schema") != SCHEMA:
+        raise ValueError(
+            f"{path}: not a schema-{SCHEMA} BENCH JSON "
+            f"(schema={doc.get('schema') if isinstance(doc, dict) else '?'})")
+    return doc
+
+
+def markdown_summary(doc: dict) -> str:
+    """Human-readable summary of one BENCH document."""
+    fp = doc.get("fingerprint", {})
+    head = [
+        f"## bench — mode `{doc.get('mode')}`, repeats {doc.get('repeats')}",
+        "",
+        f"platform `{fp.get('platform')}` ({fp.get('device_kind')}), "
+        f"jax {fp.get('jax')}, python {fp.get('python')}, "
+        f"{fp.get('cpu_count')} cpus",
+        "",
+        "| entry | µs/call | value | notes |",
+        "|---|---:|---:|---|",
+    ]
+    rows = []
+    for e in doc["entries"]:
+        us = f"{e['seconds'] * 1e6:.1f}" if e["kind"] == "time" else ""
+        val = f"{e['value']:.2e}" if e["kind"] == "accuracy" else ""
+        rows.append(f"| {e['name']} | {us} | {val} | {e.get('derived', '')} |")
+    return "\n".join(head + rows)

@@ -1,0 +1,57 @@
+"""Steady-state timing and machine fingerprinting.
+
+``bench`` is the paper §5 methodology: jit-warm the callable, then take the
+minimum wall time over ``repeats`` runs with ``jax.block_until_ready`` so
+async dispatch never hides work.  The paper takes min-over-50; CPU callers
+default to far fewer to keep suites fast — pass ``repeats=50`` for
+paper-exact numbers.
+
+``fingerprint`` records enough about the machine that a committed BENCH
+JSON can be compared against a run from a different box with eyes open
+(compare.py normalises away uniform machine-speed differences; the
+fingerprint is for humans reading the artifact).
+"""
+
+from __future__ import annotations
+
+import os
+import platform as _platform
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+
+def bench(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Minimum wall time (seconds) of ``fn(*args)`` over ``repeats`` runs.
+
+    ``warmup`` untimed calls first absorb jit compilation; every timed call
+    is fenced with ``jax.block_until_ready``.
+    """
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def fingerprint() -> Dict[str, object]:
+    """Machine/runtime identity stamped into every BENCH JSON."""
+    dev = jax.devices()[0]
+    return {
+        "platform": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", "unknown"),
+        "n_devices": jax.device_count(),
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "python": _platform.python_version(),
+        "system": _platform.system(),
+        "machine": _platform.machine(),
+        "cpu_count": os.cpu_count(),
+    }

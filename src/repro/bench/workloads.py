@@ -1,0 +1,439 @@
+"""Paper-aligned benchmark workloads at smoke / quick / full sizes.
+
+Every workload returns a list of *entries* — plain dicts the suite
+serialises into the BENCH JSON:
+
+``{"name": str, "kind": "time" | "accuracy" | "check",
+   "seconds": float,          # kind == "time"
+   "value": float,            # kind == "accuracy" (relative error)
+   "derived": str,            # human-readable extras
+   "meta": {...}}             # shape/op context; meta["gate"] = False
+                              # excludes an entry from the CI perf gate
+
+Names are stable across runs — :mod:`repro.bench.compare` matches entries
+by name.  The cells are the paper's Tables 1–3 and the §3.4
+gradient-accuracy study; ``full`` uses the paper's exact (B, L, d, N)
+cells, ``quick`` scales them down but keeps every comparison intact, and
+``smoke`` is the tiny CI gate.
+
+The legacy ``benchmarks/`` scripts are thin CSV wrappers over this module.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dispatch
+from repro.core.gram import sigkernel_gram
+from repro.core.logsignature import logsignature
+from repro.core.lyndon import logsig_dim
+from repro.core.signature import signature, signature_direct
+from repro.core.sigkernel import (delta_matrix, sigkernel, solve_goursat,
+                                  solve_goursat_antidiag, solve_goursat_grad,
+                                  solve_goursat_grad_pde_approx)
+from repro.core.tensoralg import sig_dim
+
+from . import autotune, timer
+
+MODES = ("smoke", "quick", "full")
+
+
+def _check_mode(mode: str) -> str:
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    return mode
+
+
+def _t(name: str, seconds: float, derived: str = "", **meta) -> dict:
+    return {"name": name, "kind": "time", "seconds": float(seconds),
+            "derived": derived, "meta": meta}
+
+
+def _acc(name: str, value: float, derived: str = "", **meta) -> dict:
+    return {"name": name, "kind": "accuracy", "value": float(value),
+            "derived": derived, "meta": meta}
+
+
+def _chk(name: str, derived: str = "ok", **meta) -> dict:
+    return {"name": name, "kind": "check", "derived": derived, "meta": meta}
+
+
+def _paths(seed: int, B: int, L: int, d: int, scale: float) -> jax.Array:
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, L, d)) * scale
+
+
+# ---------------------------------------------------------------------------
+# calibration — a fixed machine-speed probe every BENCH JSON carries, so
+# compare.py can normalise away uniform box-speed differences
+# ---------------------------------------------------------------------------
+
+def calibration(mode: str = "smoke", repeats: int = 3) -> List[dict]:
+    _check_mode(mode)
+    x = jnp.full((256, 256), 1.0 / 256.0, jnp.float32)
+
+    @jax.jit
+    def probe(x):
+        def body(c, _):
+            return c @ x, None
+        c, _ = jax.lax.scan(body, x, None, length=32)
+        return c.sum()
+
+    t = timer.bench(probe, x, repeats=max(repeats, 3))
+    return [_t("calibration_matmul_scan", t,
+               "fixed 256x256 matmul scan (machine-speed probe)",
+               gate=False)]
+
+
+# ---------------------------------------------------------------------------
+# Table 1 — truncated signatures: direct (Alg 1) vs Horner (Alg 2),
+# autodiff vs time-reversed exact backward
+# ---------------------------------------------------------------------------
+
+_TABLE1_CELLS = {
+    "smoke": [(4, 32, 3, 4)],
+    "quick": [(16, 64, 4, 6), (16, 128, 8, 5), (16, 256, 16, 4)],
+    "full": [(128, 256, 4, 6), (128, 512, 8, 5), (128, 1024, 16, 4)],
+}
+
+
+def table1_signatures(mode: str = "quick", repeats: int = 5) -> List[dict]:
+    entries = []
+    for (B, L, d, N) in _TABLE1_CELLS[_check_mode(mode)]:
+        path = _paths(0, B, L, d, 0.2)
+        tag = f"table1_B{B}_L{L}_d{d}_N{N}"
+        meta = dict(op="signature", B=B, L=L, d=d, depth=N)
+
+        f_direct = jax.jit(lambda p: signature_direct(p, N))
+        f_horner = jax.jit(lambda p: signature(p, N, backend="reference"))
+        t_dir = timer.bench(f_direct, path, repeats=repeats)
+        t_hor = timer.bench(f_horner, path, repeats=repeats)
+        entries.append(_t(f"{tag}_fwd_direct", t_dir, **meta))
+        entries.append(_t(f"{tag}_fwd_horner", t_hor,
+                          f"speedup_vs_direct={t_dir / t_hor:.2f}x", **meta))
+
+        g_auto = jax.jit(jax.grad(lambda p: signature_direct(p, N).sum()))
+        g_rev = jax.jit(jax.grad(
+            lambda p: signature(p, N, backend="reference").sum()))
+        t_ga = timer.bench(g_auto, path, repeats=repeats)
+        t_gr = timer.bench(g_rev, path, repeats=repeats)
+        entries.append(_t(f"{tag}_bwd_autodiff", t_ga, **meta))
+        entries.append(_t(f"{tag}_bwd_timereversed", t_gr,
+                          f"speedup_vs_autodiff={t_ga / t_gr:.2f}x", **meta))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Table 2 — signature kernels: row-scan vs wavefront forward, autodiff vs
+# exact one-pass backward, plus the Gram engine through every usable backend
+# ---------------------------------------------------------------------------
+
+_TABLE2_CELLS = {
+    "smoke": [(4, 16, 4)],
+    "quick": [(16, 64, 8), (16, 128, 16), (8, 256, 32)],
+    "full": [(128, 256, 8), (128, 512, 16), (128, 1024, 32)],
+}
+
+_GRAM_CELLS = {
+    "smoke": [(4, 12, 3)],
+    "quick": [(8, 32, 4)],
+    "full": [(32, 128, 8)],
+}
+
+
+def _usable_gram_backends() -> List[str]:
+    backends = list(dispatch.backends_for("gram"))
+    if not dispatch.on_tpu():
+        # interpret-mode Pallas timings measure nothing meaningful and
+        # dominate CPU wall-clock; smoke_checks covers those for correctness
+        backends = [b for b in backends if not dispatch.get(b).needs_tpu]
+    # reference first so the other rows can report their speedup against it
+    return (["reference"] if "reference" in backends else []) + \
+        [b for b in backends if b != "reference"]
+
+
+def table2_sigkernels(mode: str = "quick", repeats: int = 5) -> List[dict]:
+    entries = []
+    for (B, L, d) in _TABLE2_CELLS[_check_mode(mode)]:
+        kx = _paths(0, B, L, d, 0.1)
+        ky = _paths(1, B, L, d, 0.1)
+        tag = f"table2_B{B}_L{L}_d{d}"
+        meta = dict(op="sigkernel", B=B, L=L, d=d)
+
+        f_scan = jax.jit(lambda x, y: solve_goursat(delta_matrix(x, y)))
+        f_wave = jax.jit(
+            lambda x, y: solve_goursat_antidiag(delta_matrix(x, y)))
+        t_scan = timer.bench(f_scan, kx, ky, repeats=repeats)
+        t_wave = timer.bench(f_wave, kx, ky, repeats=repeats)
+        entries.append(_t(f"{tag}_fwd_rowscan", t_scan, **meta))
+        entries.append(_t(f"{tag}_fwd_wavefront", t_wave,
+                          f"speedup_vs_rowscan={t_scan / t_wave:.2f}x",
+                          **meta))
+
+        g_auto = jax.jit(jax.grad(
+            lambda x, y: solve_goursat(delta_matrix(x, y)).sum()))
+        g_exact = jax.jit(jax.grad(lambda x, y: sigkernel(x, y).sum()))
+        t_ga = timer.bench(g_auto, kx, ky, repeats=repeats)
+        t_ge = timer.bench(g_exact, kx, ky, repeats=repeats)
+        entries.append(_t(f"{tag}_bwd_autodiff", t_ga, **meta))
+        entries.append(_t(f"{tag}_bwd_exact_alg4", t_ge,
+                          f"speedup_vs_autodiff={t_ga / t_ge:.2f}x", **meta))
+
+    entries.extend(gram_backends(mode=mode, repeats=repeats))
+    return entries
+
+
+def gram_backends(mode: str = "quick", repeats: int = 5,
+                  backends=None) -> List[dict]:
+    """Gram engine entries: every usable backend × {dense, symmetric}."""
+    if backends is None:
+        backends = _usable_gram_backends()
+    entries = []
+    for (B, L, d) in _GRAM_CELLS[_check_mode(mode)]:
+        X = _paths(2, B, L, d, 0.1)
+        Y = _paths(3, B, L, d, 0.1)
+        tag = f"table2_gram_B{B}_L{L}_d{d}"
+        meta = dict(op="gram", B=B, L=L, d=d)
+        t_ref = None
+        for b in backends:
+            f = jax.jit(lambda x, y, b=b: sigkernel_gram(
+                x, y, backend=b, symmetric=False))
+            t = timer.bench(f, X, Y, repeats=repeats)
+            derived = "" if t_ref is None else \
+                f"speedup_vs_reference={t_ref / t:.2f}x"
+            if b == "reference":
+                t_ref = t
+            entries.append(_t(f"{tag}_dense_{b}", t, derived,
+                              backend=b, **meta))
+        # symmetric fast path: ~half the PDE solves of the dense Kxx
+        for b in backends:
+            f_sym = jax.jit(lambda x, b=b: sigkernel_gram(x, backend=b))
+            t_sym = timer.bench(f_sym, X, repeats=repeats)
+            entries.append(_t(f"{tag}_symmetric_{b}", t_sym,
+                              backend=b, **meta))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Table 3 — log-signatures: epilogue cost per mode + compression ratio
+# ---------------------------------------------------------------------------
+
+_TABLE3_CELLS = {
+    "smoke": [(4, 32, 3, 3)],
+    "quick": [(16, 64, 4, 6), (16, 128, 8, 5), (16, 256, 16, 4)],
+    "full": [(128, 256, 4, 6), (128, 512, 8, 5), (128, 1024, 16, 4)],
+}
+
+
+def table3_logsignatures(mode: str = "quick", repeats: int = 5) -> List[dict]:
+    entries = []
+    for (B, L, d, N) in _TABLE3_CELLS[_check_mode(mode)]:
+        path = _paths(0, B, L, d, 0.2)
+        tag = f"table3_B{B}_L{L}_d{d}_N{N}"
+        meta = dict(op="logsignature", B=B, L=L, d=d, depth=N)
+        ratio = f"compress={logsig_dim(d, N)}/{sig_dim(d, N)}"
+
+        f_sig = jax.jit(lambda p: signature(p, N, backend="reference"))
+        t_sig = timer.bench(f_sig, path, repeats=repeats)
+        entries.append(_t(f"{tag}_signature", t_sig, ratio, **meta))
+
+        for lmode in ("lyndon", "brackets", "expand"):
+            f_ls = jax.jit(lambda p, m=lmode: logsignature(
+                p, N, mode=m, backend="reference"))
+            t_ls = timer.bench(f_ls, path, repeats=repeats)
+            entries.append(_t(
+                f"{tag}_logsig_{lmode}", t_ls,
+                f"epilogue_x{t_ls / max(t_sig, 1e-12):.2f}", **meta))
+
+        f_grad = jax.jit(jax.grad(
+            lambda p: logsignature(p, N, backend="reference").sum()))
+        entries.append(_t(f"{tag}_logsig_grad",
+                          timer.bench(f_grad, path, repeats=repeats), **meta))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Figure 1 / Figure 2 sweeps — runtime vs truncation level / stream length
+# ---------------------------------------------------------------------------
+
+def fig1_truncation_sweep(mode: str = "quick", repeats: int = 3
+                          ) -> List[dict]:
+    """Signature runtime vs truncation level (paper: B=32, L=1024, d=5)."""
+    if _check_mode(mode) == "smoke":
+        return []
+    B, L, d = (8, 128, 5) if mode == "quick" else (32, 1024, 5)
+    path = _paths(0, B, L, d, 0.2)
+    entries = []
+    for N in range(2, 8):
+        f_h = jax.jit(lambda p, N=N: signature(p, N, backend="reference"))
+        f_d = jax.jit(lambda p, N=N: signature_direct(p, N))
+        g_h = jax.jit(jax.grad(
+            lambda p, N=N: signature(p, N, backend="reference").sum()))
+        t_h = timer.bench(f_h, path, repeats=repeats)
+        t_d = timer.bench(f_d, path, repeats=repeats)
+        t_g = timer.bench(g_h, path, repeats=repeats)
+        meta = dict(op="signature", B=B, L=L, d=d, depth=N)
+        entries.append(_t(f"fig1_N{N}_fwd_horner", t_h,
+                          f"direct/horner={t_d / t_h:.2f}", **meta))
+        entries.append(_t(f"fig1_N{N}_bwd", t_g, **meta))
+    return entries
+
+
+def fig2_length_sweep(mode: str = "quick", repeats: int = 3) -> List[dict]:
+    """Sig-kernel runtime vs stream length (paper: B=32, d=5)."""
+    if _check_mode(mode) == "smoke":
+        return []
+    B, d = (8, 5) if mode == "quick" else (32, 5)
+    lengths = [32, 64, 128, 256] if mode == "quick" else \
+        [128, 256, 512, 1024, 2048]
+    entries = []
+    for L in lengths:
+        kx = _paths(0, B, L, d, 0.1)
+        ky = _paths(1, B, L, d, 0.1)
+        f_wave = jax.jit(
+            lambda x, y: solve_goursat_antidiag(delta_matrix(x, y)))
+        g_exact = jax.jit(jax.grad(lambda x, y: sigkernel(x, y).sum()))
+        t_f = timer.bench(f_wave, kx, ky, repeats=repeats)
+        t_g = timer.bench(g_exact, kx, ky, repeats=repeats)
+        meta = dict(op="sigkernel", B=B, L=L, d=d)
+        entries.append(_t(f"fig2_L{L}_fwd", t_f,
+                          f"per_pair_us={t_f / B * 1e6:.1f}", **meta))
+        entries.append(_t(f"fig2_L{L}_bwd_exact", t_g, **meta))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# §3.4 gradient accuracy — exact one-pass backward vs the second-PDE
+# approximation of [30]
+# ---------------------------------------------------------------------------
+
+_GRADACC_CELLS = {
+    "smoke": ([4, 8], [0, 1]),
+    "quick": ([4, 8, 16], [0, 1]),
+    "full": ([4, 8, 16, 32, 64], [0, 1, 2]),
+}
+
+
+def grad_accuracy(mode: str = "quick", repeats: int = 0) -> List[dict]:
+    del repeats  # deterministic accuracy study, nothing to repeat
+    lengths, lams = _GRADACC_CELLS[_check_mode(mode)]
+    entries = []
+    for L in lengths:
+        for lam in lams:
+            x = _paths(0, 4, L, 3, 0.3)
+            y = _paths(1, 4, L, 3, 0.3)
+            delta = delta_matrix(x, y)
+            grid = solve_goursat(delta, lam, lam, return_grid=True)
+            gbar = jnp.ones(delta.shape[:-2])
+            d_true = jax.grad(
+                lambda d: solve_goursat(d, lam, lam).sum())(delta)
+            d_exact = solve_goursat_grad(delta, grid, gbar, lam, lam)
+            d_approx = solve_goursat_grad_pde_approx(
+                delta, grid, gbar, lam, lam)
+            scale = float(jnp.abs(d_true).max())
+            e_exact = float(jnp.abs(d_exact - d_true).max()) / scale
+            e_approx = float(jnp.abs(d_approx - d_true).max()) / scale
+            meta = dict(op="sigkernel_grad", L=L, lam=lam)
+            entries.append(_acc(f"gradacc_L{L}_lam{lam}_exact", e_exact,
+                                f"rel_err={e_exact:.2e}", **meta))
+            entries.append(_acc(
+                f"gradacc_L{L}_lam{lam}_pde_approx", e_approx,
+                f"rel_err={e_approx:.2e}", gate=False, **meta))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# smoke checks — tiny shapes through EVERY registered backend (forward +
+# grad + the symmetric pair-solve budget); any dispatch regression fails
+# here in seconds.  Correctness only: no timing entries.
+# ---------------------------------------------------------------------------
+
+def smoke_checks(mode: str = "smoke", repeats: int = 1) -> List[dict]:
+    del mode, repeats
+    B, L, d = 3, 8, 2
+    X = _paths(0, B, L, d, 0.1)
+    Y = _paths(1, B, L, d, 0.1)
+    entries = []
+    K_ref = sigkernel_gram(X, Y, backend="reference", symmetric=False)
+    for b in dispatch.backends_for("gram"):
+        K = sigkernel_gram(X, Y, backend=b, symmetric=False)
+        np.testing.assert_allclose(K, K_ref, rtol=5e-4, atol=1e-5,
+                                   err_msg=f"smoke: {b} disagrees")
+        g = jax.grad(
+            lambda q: sigkernel_gram(q, Y, backend=b,
+                                     symmetric=False).sum())(X)
+        assert np.isfinite(np.asarray(g)).all(), \
+            f"smoke: {b} grad not finite"
+        entries.append(_chk(f"smoke_gram_{b}", backend=b))
+    with dispatch.count_pair_solves() as c:
+        sigkernel_gram(X, backend="pallas_fused")
+    budget = B * (B + 1) // 2
+    assert c.total <= budget, (c.total, budget)
+    entries.append(_chk("smoke_symmetric_pair_solves",
+                        f"solves={c.total}<=budget={budget}"))
+    for b in dispatch.backends_for("sigkernel"):
+        k = sigkernel(X, Y, backend=b)
+        np.testing.assert_allclose(
+            k, sigkernel(X, Y, backend="reference"), rtol=5e-4, atol=1e-5,
+            err_msg=f"smoke: sigkernel {b} disagrees")
+        entries.append(_chk(f"smoke_sigkernel_{b}", backend=b))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# autotune round-trip — tune the smoke shapes, then verify backend="auto"
+# with a warm cache is never slower than the worst fixed backend
+# ---------------------------------------------------------------------------
+
+#: per-op key shapes the smoke suite tunes (see autotune.cache_key)
+_AUTOTUNE_SMOKE_SHAPES: Dict[str, tuple] = {
+    "sigkernel": (24, 24, 3),
+    "gram": (4, 4, 12, 12, 3),
+}
+
+
+def autotune_auto(mode: str = "smoke", repeats: int = 2) -> List[dict]:
+    del mode
+    if not autotune.enabled():
+        return [_chk("autotune_disabled",
+                     "REPRO_DISABLE_AUTOTUNE set; skipped", gate=False)]
+    entries = []
+    for op, shape in _AUTOTUNE_SMOKE_SHAPES.items():
+        winner = autotune.tune(op, shape, repeats=repeats, force=True)
+        record = autotune.cache_entry(op, shape)
+        times = record["timings"]
+        bshape = autotune.key_shape(op, shape)
+        for b, t in sorted(times.items()):
+            entries.append(_t(f"autotune_{op}_{b}", t, op=op,
+                              shape=list(bshape), backend=b))
+
+        key = jax.random.PRNGKey(7)
+        if op == "gram":
+            Bx, By, nx, ny, d = bshape
+            Xa = jax.random.normal(key, (Bx, nx + 1, d)) * 0.1
+            Ya = jax.random.normal(jax.random.PRNGKey(8),
+                                   (By, ny + 1, d)) * 0.1
+            f = jax.jit(lambda x, y: sigkernel_gram(
+                x, y, backend="auto", symmetric=False))
+        else:
+            nx, ny, d = bshape
+            Xa = jax.random.normal(key, (8, nx + 1, d)) * 0.1
+            Ya = jax.random.normal(jax.random.PRNGKey(8),
+                                   (8, ny + 1, d)) * 0.1
+            f = jax.jit(lambda x, y: sigkernel(x, y, backend="auto"))
+        t_auto = timer.bench(f, Xa, Ya, repeats=repeats)
+        worst = max(times.values())
+        # the acceptance contract: warm-cache auto never loses to the worst
+        # fixed backend (2x + 5ms of slack absorbs CI timer noise)
+        assert t_auto <= worst * 2.0 + 5e-3, (
+            f"auto ({t_auto * 1e6:.1f}us) slower than worst fixed backend "
+            f"({worst * 1e6:.1f}us) for op={op} despite a warm cache")
+        entries.append(_t(f"autotune_{op}_auto", t_auto,
+                          f"winner={winner};worst_fixed={worst * 1e6:.1f}us",
+                          op=op, shape=list(bshape)))
+        entries.append(_chk(f"autotune_{op}_winner", f"winner={winner}",
+                            op=op))
+    return entries

@@ -23,16 +23,20 @@ Registered backends:
     never exists in HBM.  Gram-capable; differentiable via the checkpointed
     exact backward (which re-materialises Δ for the reverse sweep only).
 ``"auto"``
-    Shape/platform-aware choice of the above.
+    Measured winner from the on-disk autotune cache when one exists for the
+    (op, shape, dtype, platform) key (:mod:`repro.bench.autotune`);
+    shape/platform heuristics when the cache is cold or autotuning is
+    disabled (``REPRO_DISABLE_AUTOTUNE=1``).
 
 The legacy ``use_pallas=``/``solver=`` kwargs survive as thin deprecation
 shims: :func:`canonicalize` maps them onto backend names with a
-``DeprecationWarning``.
+``DeprecationWarning`` (once per call-site).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import sys
 import threading
 import warnings
 from typing import Dict, FrozenSet, Optional, Tuple
@@ -109,6 +113,40 @@ register(BackendSpec("pallas_fused", frozenset({"sigkernel", "gram"}),
 # legacy-kwarg shims
 # ---------------------------------------------------------------------------
 
+#: user call-sites that already got their DeprecationWarning this process
+_warned_sites: set = set()
+
+
+def reset_warned_sites() -> None:
+    """Forget which call-sites have warned (tests)."""
+    _warned_sites.clear()
+
+
+def _warn_deprecated(message: str) -> None:
+    """Emit ``DeprecationWarning`` once per *user call-site*.
+
+    The warning is attributed to the first stack frame outside the
+    ``repro`` package (so internal shims — ``sigkernel.sigkernel_gram``,
+    ``sigkernel_gram_blocked``, the losses — never absorb it) and
+    deduplicated on that frame's (filename, lineno): a training loop
+    passing ``use_pallas=`` every step warns once, not once per call,
+    while distinct call-sites each get their own warning.
+    """
+    depth = 1  # sys._getframe index; 0 is this helper
+    frame = sys._getframe(1)
+    while frame is not None and \
+            frame.f_globals.get("__name__", "").split(".", 1)[0] == "repro":
+        frame = frame.f_back
+        depth += 1
+    if frame is not None:
+        site = (frame.f_code.co_filename, frame.f_lineno, message)
+        if site in _warned_sites:
+            return
+        _warned_sites.add(site)
+    # warnings stacklevel n attributes to sys._getframe(n - 1) from here
+    warnings.warn(message, DeprecationWarning, stacklevel=depth + 1)
+
+
 def _validate(backend: str, op: str) -> str:
     """Check a concrete backend name exists and implements ``op``."""
     spec = get(backend)
@@ -128,32 +166,30 @@ def canonicalize(backend: str, *, op: str, use_pallas=UNSET,
     ``use_pallas=True`` overrides ``solver=`` — the historical precedence of
     ``sigkernel_gram_blocked``.  ``use_pallas=None`` is the historical
     documented "auto" and stays silent; explicit bools and ``solver=``
-    strings emit a ``DeprecationWarning``.  Returns a backend name
-    (possibly still ``"auto"`` — resolve it with :func:`resolve`).
+    strings emit a ``DeprecationWarning`` once per call-site.  Returns a
+    backend name (possibly still ``"auto"`` — resolve it with
+    :func:`resolve`).
     """
     legacy_given = ((use_pallas is not UNSET and use_pallas is not None)
                     or (solver is not UNSET and solver is not None))
     if backend != "auto":
         if legacy_given:
-            warnings.warn(
+            _warn_deprecated(
                 f"deprecated use_pallas=/solver= ignored because "
-                f"backend={backend!r} was passed explicitly",
-                DeprecationWarning, stacklevel=3)
+                f"backend={backend!r} was passed explicitly")
         return _validate(backend, op)
     if use_pallas is not UNSET and use_pallas is not None:
-        warnings.warn(
+        _warn_deprecated(
             "use_pallas= is deprecated; pass backend='pallas' / "
-            "backend='reference' instead (docs/solver_guide.md)",
-            DeprecationWarning, stacklevel=3)
+            "backend='reference' instead (docs/solver_guide.md)")
         if use_pallas:  # historically overrode solver=
             return "pallas"
         if solver is UNSET or solver is None:
             return "reference"
     if solver is not UNSET and solver is not None:
-        warnings.warn(
+        _warn_deprecated(
             "solver= is deprecated; pass backend='antidiag' / "
-            "backend='reference' instead (docs/solver_guide.md)",
-            DeprecationWarning, stacklevel=3)
+            "backend='reference' instead (docs/solver_guide.md)")
         return "antidiag" if solver == "antidiag" else "reference"
     return "auto"
 
@@ -166,16 +202,51 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def resolve(backend: str, *, op: str,
-            grid_cells: Optional[int] = None) -> str:
+def _autotuned(op: str, shape, dtype) -> Optional[str]:
+    """Winning backend from the on-disk autotune cache, or None.
+
+    None (→ static heuristics) whenever the cache is cold, autotuning is
+    disabled (``REPRO_DISABLE_AUTOTUNE=1``), the cache file is unreadable,
+    or the cached name no longer denotes a live backend serving ``op``.
+    Lookups never run a measurement — tuning happens only through
+    :func:`repro.bench.autotune.tune` (the bench suite does this).
+    """
+    if shape is None:
+        return None
+    try:
+        from repro.bench import autotune
+    except ImportError:
+        return None
+    if not autotune.enabled():
+        return None
+    try:
+        name = autotune.lookup(op, shape, dtype or "float32")
+    except (ValueError, TypeError):
+        return None
+    spec = _REGISTRY.get(name)
+    if spec is None or op not in spec.ops:
+        return None  # stale entry: backend renamed/removed since tuning
+    if spec.needs_tpu and not on_tpu():
+        return None  # never let a stale entry force interpret mode
+    return name
+
+
+def resolve(backend: str, *, op: str, grid_cells: Optional[int] = None,
+            shape=None, dtype=None) -> str:
     """Resolve ``"auto"`` to a concrete backend name for ``op``.
 
-    ``grid_cells`` is the refined PDE cell count ``nx·ny`` (sig-kernel ops
-    only); small grids stay on the serial reference scan where the
-    wavefront's skew overhead is not worth paying.
+    When ``shape`` is given (the per-op cache-key shape documented in
+    :func:`repro.bench.autotune.cache_key`) and the autotune cache holds a
+    measured winner for it, that wins.  Otherwise the static heuristics
+    apply: ``grid_cells`` is the refined PDE cell count ``nx·ny``
+    (sig-kernel ops only); small grids stay on the serial reference scan
+    where the wavefront's skew overhead is not worth paying.
     """
     if backend != "auto":
         return _validate(backend, op)
+    tuned = _autotuned(op, shape, dtype)
+    if tuned is not None:
+        return tuned
     if op in ("signature", "logsignature"):
         return "pallas" if on_tpu() else "reference"
     if on_tpu():

@@ -32,7 +32,7 @@ import numpy as np
 
 from . import dispatch
 from . import transforms as tf
-from .signature import path_increments
+from .signature import path_increments, transformed_dim
 from .sigkernel import _sigkernel_from_delta
 from repro.parallel.api import shard
 
@@ -105,8 +105,12 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
                                     use_pallas=use_pallas, solver=solver)
     Lx = X.shape[1] - 1
     Ly = Lx if Y is None else Y.shape[1] - 1
-    backend = dispatch.resolve(backend, op="gram",
-                               grid_cells=(Lx << lam1) * (Ly << lam2))
+    By = X.shape[0] if Y is None else Y.shape[0]
+    backend = dispatch.resolve(
+        backend, op="gram", grid_cells=(Lx << lam1) * (Ly << lam2),
+        shape=(X.shape[0], By, Lx << lam1, Ly << lam2,
+               transformed_dim(X.shape[-1], time_aug, lead_lag)),
+        dtype=X.dtype)
 
     dX = tf.transform_increments(path_increments(X), time_aug, lead_lag)
     dX = shard(dX, "batch", None, None)

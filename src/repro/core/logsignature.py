@@ -134,7 +134,8 @@ def logsignature(path: jax.Array, depth: int, *, mode: str = "lyndon",
     backend = dispatch.resolve(
         dispatch.canonicalize(backend, op="logsignature",
                               use_pallas=use_pallas),
-        op="logsignature")
+        op="logsignature", shape=(z.shape[-2], z.shape[-1], depth),
+        dtype=z.dtype)
     if backend == "pallas":
         from repro.kernels.signature import ops as sig_ops
         return sig_ops.logsignature_from_increments(z, depth, mode)

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from . import dispatch
-from .signature import path_increments
+from .signature import path_increments, transformed_dim
 from . import transforms as tf
 
 
@@ -388,9 +388,21 @@ def sigkernel(x: jax.Array, y: jax.Array, *, lam1: int = 0, lam2: int = 0,
     backend = dispatch.canonicalize(backend, op="sigkernel",
                                     use_pallas=use_pallas)
     if backend in ("auto", "pallas_fused"):
+        was_auto = backend == "auto"
         Lx, Ly = x.shape[-2] - 1, y.shape[-2] - 1
         cells = (Lx << lam1) * (Ly << lam2)
-        backend = dispatch.resolve(backend, op="sigkernel", grid_cells=cells)
+        backend = dispatch.resolve(
+            backend, op="sigkernel", grid_cells=cells,
+            shape=(Lx << lam1, Ly << lam2,
+                   transformed_dim(x.shape[-1], time_aug, lead_lag)),
+            dtype=x.dtype)
+        if was_auto and backend == "pallas_fused" \
+                and x.shape[:-2] != y.shape[:-2]:
+            # the autotune key carries no batch info, so a tuned winner can
+            # be fused even for broadcastable batches it cannot serve;
+            # auto must degrade to the static heuristic, not raise below
+            backend = dispatch.resolve("auto", op="sigkernel",
+                                       grid_cells=cells)
     if backend == "pallas_fused":
         if x.shape[:-2] != y.shape[:-2]:
             raise ValueError("backend='pallas_fused' needs matching batch "

@@ -190,7 +190,8 @@ def signature(path: jax.Array, depth: int, *, time_aug: bool = False,
         return _signature_stream_from_increments(z, depth)
     backend = dispatch.resolve(
         dispatch.canonicalize(backend, op="signature", use_pallas=use_pallas),
-        op="signature")
+        op="signature", shape=(z.shape[-2], z.shape[-1], depth),
+        dtype=z.dtype)
     if backend == "pallas":
         from repro.kernels.signature import ops as sig_ops
         return sig_ops.signature_from_increments(z, depth)

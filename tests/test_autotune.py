@@ -1,0 +1,152 @@
+"""Autotune cache contract: cold-cache tunes and persists, warm-cache does
+zero timed runs, corrupted/stale caches fail open to the static heuristics,
+and ``REPRO_DISABLE_AUTOTUNE=1`` bypasses the cache entirely."""
+
+import json
+
+import jax
+import pytest
+
+from repro.bench import autotune, timer
+from repro.core import dispatch
+
+jax.config.update("jax_platform_name", "cpu")
+
+#: tiny sig-kernel key shape (buckets to (8, 8, 2)) — tuning it measures
+#: both CPU candidates in well under a second each
+SHAPE = (6, 6, 2)
+
+
+@pytest.fixture
+def cache(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.ENV_CACHE, str(path))
+    monkeypatch.delenv(autotune.ENV_DISABLE, raising=False)
+    autotune.invalidate_memo()
+    yield path
+    autotune.invalidate_memo()
+
+
+def test_candidates_skip_tpu_only_backends_on_cpu():
+    names = autotune.candidates("gram")
+    assert "reference" in names
+    assert all(not dispatch.get(n).needs_tpu for n in names)
+
+
+def test_cold_cache_tunes_and_persists(cache):
+    assert autotune.lookup("sigkernel", SHAPE) is None
+    winner = autotune.tune("sigkernel", SHAPE, repeats=1)
+    assert winner in autotune.candidates("sigkernel")
+    assert cache.exists()
+    doc = json.loads(cache.read_text())
+    assert doc["schema"] == autotune.SCHEMA
+    entry = doc["entries"][autotune.cache_key("sigkernel", SHAPE)]
+    assert entry["backend"] == winner
+    assert set(entry["timings"]) == set(autotune.candidates("sigkernel"))
+    assert autotune.lookup("sigkernel", SHAPE) == winner
+    # auto-resolution consults the warm cache
+    assert dispatch.resolve("auto", op="sigkernel", shape=SHAPE) == winner
+
+
+def test_shapes_share_power_of_two_buckets(cache):
+    assert autotune.key_shape("sigkernel", (6, 6, 2)) == (8, 8, 2)
+    winner = autotune.tune("sigkernel", SHAPE, repeats=1)
+    assert autotune.lookup("sigkernel", (7, 5, 2)) == winner  # same bucket
+    assert autotune.lookup("sigkernel", (100, 100, 2)) is None
+    assert autotune.lookup("sigkernel", (6, 6, 3)) is None  # d is exact
+    assert autotune.lookup("gram", (2, 2, 6, 6, 2)) is None  # other op
+
+
+def test_channels_and_depth_never_bucketed():
+    # cost is exponential in depth / polynomial in d: only batch- and
+    # length-like leading dims may share power-of-two buckets
+    assert autotune.key_shape("signature", (30, 3, 5)) == (32, 3, 5)
+    assert autotune.key_shape("logsignature", (100, 7, 6)) == (128, 7, 6)
+    assert autotune.key_shape("gram", (4, 4, 12, 12, 3)) == (4, 4, 16, 16, 3)
+
+
+def test_warm_cache_performs_zero_timed_runs(cache, monkeypatch):
+    winner = autotune.tune("sigkernel", SHAPE, repeats=1)
+    timed = []
+    monkeypatch.setattr(timer, "bench",
+                        lambda *a, **k: timed.append(a) or 0.0)
+    assert autotune.tune("sigkernel", SHAPE, repeats=1) == winner
+    assert autotune.lookup("sigkernel", SHAPE) == winner
+    assert dispatch.resolve("auto", op="sigkernel", shape=SHAPE) == winner
+    assert timed == []
+
+
+def test_corrupted_cache_file_is_ignored_not_crashed_on(cache):
+    cache.write_text("{ this is not json", encoding="utf-8")
+    autotune.invalidate_memo()
+    assert autotune.lookup("sigkernel", SHAPE) is None
+    assert dispatch.resolve("auto", op="sigkernel", shape=SHAPE,
+                            grid_cells=16) == "reference"
+    # tuning recovers by rewriting the file
+    winner = autotune.tune("sigkernel", SHAPE, repeats=1)
+    assert autotune.lookup("sigkernel", SHAPE) == winner
+
+
+def test_stale_schema_cache_is_ignored(cache):
+    key = autotune.cache_key("sigkernel", SHAPE)
+    cache.write_text(json.dumps({"schema": autotune.SCHEMA + 1,
+                                 "entries": {key: {"backend": "antidiag"}}}),
+                     encoding="utf-8")
+    autotune.invalidate_memo()
+    assert autotune.lookup("sigkernel", SHAPE) is None
+    assert dispatch.resolve("auto", op="sigkernel", shape=SHAPE,
+                            grid_cells=16) == "reference"
+
+
+def test_stale_backend_name_falls_back_to_heuristics(cache):
+    key = autotune.cache_key("sigkernel", SHAPE)
+    cache.write_text(json.dumps({
+        "schema": autotune.SCHEMA,
+        "entries": {key: {"backend": "renamed_away"}}}), encoding="utf-8")
+    autotune.invalidate_memo()
+    # lookup reports the raw entry; resolve validates it against the live
+    # registry and quietly degrades to the static heuristic
+    assert autotune.lookup("sigkernel", SHAPE) == "renamed_away"
+    assert dispatch.resolve("auto", op="sigkernel", shape=SHAPE,
+                            grid_cells=16) == "reference"
+
+
+def test_disable_env_restores_static_heuristics(cache, monkeypatch):
+    winner = autotune.tune("sigkernel", SHAPE, repeats=1)
+    monkeypatch.setenv(autotune.ENV_DISABLE, "1")
+    assert not autotune.enabled()
+    assert autotune.lookup("sigkernel", SHAPE) is None
+    assert dispatch.resolve("auto", op="sigkernel", shape=SHAPE,
+                            grid_cells=16) == "reference"
+    assert dispatch.resolve("auto", op="sigkernel", shape=SHAPE,
+                            grid_cells=1 << 20) == "antidiag"
+    monkeypatch.delenv(autotune.ENV_DISABLE)
+    assert dispatch.resolve("auto", op="sigkernel", shape=SHAPE) == winner
+
+
+def test_auto_fused_winner_degrades_on_broadcast_batches(monkeypatch):
+    """A tuned 'pallas_fused' sigkernel winner (the key carries no batch
+    info) must fall back, not crash, when auto meets broadcastable batches
+    the fused kernel cannot serve."""
+    import numpy as np
+    from repro.core.sigkernel import sigkernel
+    monkeypatch.setattr(
+        dispatch, "_autotuned",
+        lambda op, shape, dtype: "pallas_fused" if shape is not None
+        else None)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 2)) * 0.1
+    y = jax.random.normal(jax.random.PRNGKey(1), (5, 6, 2)) * 0.1
+    k = sigkernel(x, y, backend="auto")  # must not raise
+    np.testing.assert_allclose(k, sigkernel(x, y, backend="reference"),
+                               rtol=5e-4, atol=1e-5)
+    # an *explicit* fused request still fails loudly
+    with pytest.raises(ValueError, match="matching batch"):
+        sigkernel(x, y, backend="pallas_fused")
+
+
+def test_cache_key_includes_op_platform_dtype():
+    k = autotune.cache_key("sigkernel", SHAPE, "float32")
+    assert k == "sigkernel|cpu|float32|8x8x2"
+    assert autotune.cache_key("sigkernel", SHAPE, "float64") != k
+    with pytest.raises(ValueError, match="unknown op"):
+        autotune.cache_key("conv", SHAPE)

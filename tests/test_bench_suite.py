@@ -1,0 +1,148 @@
+"""Bench suite + compare gate: the smoke suite produces a well-formed,
+schema-versioned document; self-comparison is green; slowdowns, accuracy
+losses, and missing entries are flagged with a nonzero exit."""
+
+import copy
+import json
+import os
+
+import jax
+import pytest
+
+from repro.bench import autotune, compare, suite
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def smoke_doc(tmp_path_factory):
+    """One smoke-suite run shared by every test in this module.
+
+    module-scoped, so env handling is manual (monkeypatch is per-test);
+    the autotune cache goes to a temp dir to keep the user's real cache
+    untouched.
+    """
+    path = tmp_path_factory.mktemp("bench") / "autotune.json"
+    saved = os.environ.get(autotune.ENV_CACHE)
+    os.environ[autotune.ENV_CACHE] = str(path)
+    autotune.invalidate_memo()
+    try:
+        doc = suite.run_suite("smoke", repeats=1)
+    finally:
+        if saved is None:
+            os.environ.pop(autotune.ENV_CACHE, None)
+        else:
+            os.environ[autotune.ENV_CACHE] = saved
+        autotune.invalidate_memo()
+    return doc
+
+
+def _gated_time_entry(doc):
+    for e in doc["entries"]:
+        if e["kind"] == "time" and e.get("meta", {}).get("gate", True) \
+                and e["seconds"] > 0:
+            return e
+    raise AssertionError("no gated timing entry in the smoke document")
+
+
+def test_smoke_document_shape(smoke_doc):
+    assert smoke_doc["schema"] == suite.SCHEMA
+    assert smoke_doc["mode"] == "smoke"
+    assert smoke_doc["fingerprint"]["platform"] == "cpu"
+    names = [e["name"] for e in smoke_doc["entries"]]
+    assert len(names) == len(set(names))
+    kinds = {e["kind"] for e in smoke_doc["entries"]}
+    assert kinds == {"time", "accuracy", "check"}
+    # the acceptance-critical sections are present
+    assert "calibration_matmul_scan" in names
+    assert any(n.startswith("smoke_gram_") for n in names)
+    assert any(n.startswith("autotune_") and n.endswith("_auto")
+               for n in names)
+    assert any(n.startswith("gradacc_") for n in names)
+
+
+def test_write_load_roundtrip(smoke_doc, tmp_path):
+    path = tmp_path / "bench.json"
+    suite.write_json(smoke_doc, str(path))
+    assert suite.load_json(str(path))["entries"] == smoke_doc["entries"]
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema": 999, "entries": []}))
+    with pytest.raises(ValueError, match="schema"):
+        suite.load_json(str(bad))
+
+
+def test_markdown_summary_lists_entries(smoke_doc):
+    md = suite.markdown_summary(smoke_doc)
+    assert "calibration_matmul_scan" in md
+    assert "µs/call" in md
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError, match="mode"):
+        suite.run_suite("warp")
+
+
+def test_compare_self_is_green(smoke_doc):
+    regressions, _ = compare.compare_docs(smoke_doc, smoke_doc)
+    assert regressions == []
+
+
+def test_compare_flags_big_slowdown(smoke_doc):
+    slow = copy.deepcopy(smoke_doc)
+    victim = _gated_time_entry(slow)
+    victim["seconds"] = victim["seconds"] * 1000 + 1.0
+    regressions, _ = compare.compare_docs(smoke_doc, slow)
+    assert any(r.startswith("SLOWER " + victim["name"]) for r in regressions)
+    # ...but generous tolerances swallow plausible shared-runner noise
+    noisy = copy.deepcopy(smoke_doc)
+    _gated_time_entry(noisy)["seconds"] *= 1.5
+    regressions, _ = compare.compare_docs(smoke_doc, noisy)
+    assert regressions == []
+
+
+def test_compare_normalizes_uniform_machine_speed(smoke_doc):
+    slower_box = copy.deepcopy(smoke_doc)
+    for e in slower_box["entries"]:
+        if e["kind"] == "time":
+            e["seconds"] *= 4.0  # a uniformly 4x slower machine
+    regressions, notes = compare.compare_docs(smoke_doc, slower_box)
+    assert regressions == []
+    assert any("machine-speed factor" in n for n in notes)
+    # the same 4x, compared raw, would trip the 2.5x gate somewhere
+    regressions, _ = compare.compare_docs(smoke_doc, slower_box,
+                                          normalize=False)
+    assert regressions != []
+
+
+def test_compare_flags_accuracy_regression(smoke_doc):
+    worse = copy.deepcopy(smoke_doc)
+    victim = next(e for e in worse["entries"]
+                  if e["kind"] == "accuracy"
+                  and e.get("meta", {}).get("gate", True))
+    victim["value"] = 0.5
+    regressions, _ = compare.compare_docs(smoke_doc, worse)
+    assert any(r.startswith("LESS-ACCURATE " + victim["name"])
+               for r in regressions)
+
+
+def test_compare_flags_missing_entries(smoke_doc):
+    shrunk = copy.deepcopy(smoke_doc)
+    dropped = shrunk["entries"].pop()
+    regressions, _ = compare.compare_docs(smoke_doc, shrunk)
+    assert any(dropped["name"] in r for r in regressions)
+    regressions, notes = compare.compare_docs(smoke_doc, shrunk,
+                                              allow_missing=True)
+    assert regressions == []
+    assert any(dropped["name"] in n for n in notes)
+
+
+def test_compare_cli_exit_codes(smoke_doc, tmp_path):
+    base = tmp_path / "base.json"
+    suite.write_json(smoke_doc, str(base))
+    assert compare.main([str(base), str(base), "--quiet"]) == 0
+    slow = copy.deepcopy(smoke_doc)
+    victim = _gated_time_entry(slow)
+    victim["seconds"] = victim["seconds"] * 1000 + 1.0
+    slow_path = tmp_path / "slow.json"
+    suite.write_json(slow, str(slow_path))
+    assert compare.main([str(base), str(slow_path), "--quiet"]) == 1

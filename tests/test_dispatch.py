@@ -71,6 +71,7 @@ def test_auto_resolution_on_cpu():
 
 
 def test_deprecation_shims_warn_and_route():
+    dispatch.reset_warned_sites()
     X = paths(1, 2, 5, 2)
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
@@ -90,6 +91,48 @@ def test_use_pallas_none_stays_silent():
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         sigkernel(X, X, use_pallas=None)  # historical documented auto
+
+
+def test_deprecation_warns_once_per_call_site():
+    dispatch.reset_warned_sites()
+    X = paths(7, 2, 5, 2)
+
+    def legacy_call():  # one fixed call-site, invoked repeatedly
+        return sigkernel(X, X, use_pallas=False)
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy_call()
+        legacy_call()
+        legacy_call()
+    assert [x.category for x in w] == [DeprecationWarning]
+    assert "use_pallas= is deprecated" in str(w[0].message)
+    # a *different* call-site still gets its own warning
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        sigkernel(X, X, use_pallas=False)
+    assert [x.category for x in w] == [DeprecationWarning]
+    # resetting the registry re-arms the original site
+    dispatch.reset_warned_sites()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy_call()
+    assert [x.category for x in w] == [DeprecationWarning]
+
+
+def test_deprecation_attributed_outside_repro_even_through_shims():
+    import os
+    from repro.core.sigkernel import sigkernel_gram as alias  # delegator
+    dispatch.reset_warned_sites()
+    X = paths(8, 2, 5, 2)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        alias(X, X, solver="antidiag")  # two distinct call-sites reached
+        alias(X, X, solver="antidiag")  # through the same internal shim
+    assert [x.category for x in w] == [DeprecationWarning] * 2
+    # the warning (and the dedup key) lands on THIS file, not the shim
+    assert all(os.path.basename(x.filename) == os.path.basename(__file__)
+               for x in w)
 
 
 # ---------------------------------------------------------------------------
