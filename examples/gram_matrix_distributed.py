@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.config import GridConfig
 from repro.core.gram import sigkernel_gram
 from repro.data.synthetic import gbm_paths
 from repro.parallel.api import DEFAULT_RULES, logical_rules
@@ -29,7 +30,7 @@ X = gbm_paths(jax.random.PRNGKey(0), B, L, d)
 Y = gbm_paths(jax.random.PRNGKey(1), B, L, d)
 
 gram = jax.jit(
-    lambda x, y: sigkernel_gram(x, y, lam1=1, lam2=1),
+    lambda x, y: sigkernel_gram(x, y, grid=GridConfig(1, 1)),
     in_shardings=(NamedSharding(mesh, P("data")),
                   NamedSharding(mesh, P("model"))),
     out_shardings=NamedSharding(mesh, P("data", "model")))
@@ -50,7 +51,7 @@ print("E[k(X,Y)] =", mmd)
 
 # symmetric Gram (Y omitted): only the upper triangle is solved (~2x fewer
 # PDE solves), row-blocked so Bx need not divide the block size
-sym = jax.jit(lambda x: sigkernel_gram(x, lam1=1, lam2=1, row_block=8),
+sym = jax.jit(lambda x: sigkernel_gram(x, grid=GridConfig(1, 1), row_block=8),
               in_shardings=NamedSharding(mesh, P("data")),
               out_shardings=NamedSharding(mesh, P("data", "model")))
 with mesh, logical_rules(DEFAULT_RULES):

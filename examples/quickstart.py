@@ -6,6 +6,7 @@
 import jax
 import jax.numpy as jnp
 
+import repro
 from repro.core.signature import signature, signature_combine
 from repro.core.logsignature import logsignature, logsignature_combine
 from repro.core.sigkernel import sigkernel, sigkernel_gram
@@ -24,8 +25,11 @@ print("signature:", sig.shape)                 # (8, 3 + 9 + 27 + 81)
 left, right = signature(paths[:, :25], 4), signature(paths[:, 24:], 4)
 print("chen err:", float(jnp.abs(signature_combine(left, right, 3, 4) - sig).max()))
 
-# lead-lag + time augmentation, applied on the fly (paper §4)
-sig_ll = signature(paths, depth=3, lead_lag=True, time_aug=True)
+# lead-lag + time augmentation, applied on the fly (paper §4) — configured
+# with the API-v1 pytree TransformPipeline (old bool kwargs still work but
+# emit a DeprecationWarning; see docs/migration.md)
+sig_ll = signature(paths, depth=3, transforms=repro.TransformPipeline(
+    lead_lag=True, time_aug=True))
 print("lead-lag signature:", sig_ll.shape)
 
 # --- log-signatures: same information, Lyndon-compressed --------------------
@@ -43,7 +47,7 @@ print("logsig grad finite:", bool(jnp.isfinite(g_ls).all()))
 
 # --- signature kernels (Goursat PDE, paper §3) ------------------------------
 x, y = paths[:4], paths[4:]
-k = sigkernel(x, y, lam1=1, lam2=1)            # dyadic order (1,1)
+k = sigkernel(x, y, grid=repro.GridConfig(1, 1))   # dyadic order (1,1)
 print("k(x, y):", k.shape, k[:2])
 
 # Gram matrix + MMD loss between two path distributions
@@ -73,3 +77,23 @@ print("pallas signature err:", float(jnp.abs(sig_pallas - sig).max()))
 # the fused-Δ Gram backend (Δ never exists in HBM), differentiable too
 K_fused = sigkernel_gram(x, y, backend="pallas_fused")
 print("fused gram err:", float(jnp.abs(K_fused - K).max()))
+
+# --- API v1: composable kernel objects (repro top-level namespace) ----------
+# class entry points close over pytree configs, so they jit/vmap cleanly;
+# static_kernel= swaps the lift under the signature kernel (KSig-style)
+sk = repro.SigKernel(static_kernel=repro.RBF(sigma=1.0),
+                     transforms=repro.TransformPipeline(time_aug=True),
+                     grid=repro.GridConfig(1, 1))
+K_rbf = jax.jit(sk.gram)(x)                       # RBF-lift symmetric Gram
+print("RBF-lift gram:", K_rbf.shape)
+print("RBF-lift MMD^2:", float(sk.mmd2(x, y, unbiased=False)))
+
+# kernel hyper-parameters are pytree *leaves*: differentiate through sigma
+dsig = jax.grad(lambda s: repro.SigKernel(
+    static_kernel=repro.RBF(sigma=s)).gram(x).sum())(1.0)
+print("d gram.sum / d sigma:", float(dsig))
+
+# basepoint transform (translation sensitivity), on the fly as well
+sig_bp = repro.Signature(depth=3,
+                         transforms=repro.TransformPipeline(basepoint=True))
+print("basepoint signature:", sig_bp(paths).shape)

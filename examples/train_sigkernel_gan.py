@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import losses
+from repro.core.config import GridConfig, TransformPipeline
 from repro.data.synthetic import gbm_paths
 from repro.models import get_config
 from repro.models import layers as L
@@ -81,13 +82,17 @@ def main():
                 weight_decay=0.0)
     opt_state = opt.init(params)
 
+    # API v1 config objects: one kernel spec shared by train + eval
+    KERNEL_GRID = GridConfig(lam1=args.dyadic, lam2=args.dyadic)
+    KERNEL_TRANSFORMS = TransformPipeline(time_aug=True)
+
     def loss_fn(params, key, step):
         noise = jax.random.normal(key, (args.batch, args.length, noise_dim))
         fake = apply(params, noise)
         real = gbm_paths(jax.random.fold_in(jax.random.PRNGKey(1), step),
                          args.batch, args.length, args.dim)
-        return losses.mmd2(fake, real, lam1=args.dyadic, lam2=args.dyadic,
-                           unbiased=False, time_aug=True)
+        return losses.mmd2(fake, real, grid=KERNEL_GRID,
+                           transforms=KERNEL_TRANSFORMS, unbiased=False)
 
     @jax.jit
     def train_step(params, opt_state, key, step):
@@ -103,8 +108,8 @@ def main():
     @jax.jit
     def eval_mmd(params):
         return losses.mmd2(apply(params, eval_noise), eval_real,
-                           lam1=args.dyadic, lam2=args.dyadic, unbiased=False,
-                           time_aug=True)
+                           grid=KERNEL_GRID, transforms=KERNEL_TRANSFORMS,
+                           unbiased=False)
 
     first = float(eval_mmd(params))
     print(f"initial eval sig-MMD^2: {first:.5f}")

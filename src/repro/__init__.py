@@ -1,3 +1,39 @@
-"""repro — multi-pod JAX framework reproducing pySigLib (signatures + signature kernels)."""
+"""repro — fast signature-based computations in JAX (pySigLib reproduction).
 
-__version__ = "0.1.0"
+The blessed public surface (API v1, see docs/api/public.md):
+
+* **Config objects** — :class:`TransformPipeline`, :class:`GridConfig`,
+  and the static-kernel lifts :class:`Linear` / :class:`RBF`
+  (:class:`StaticKernel` base).  All frozen pytree dataclasses.
+* **Class entry points** — :class:`Signature`, :class:`LogSignature`,
+  :class:`SigKernel` close over a config and are jit/vmap-friendly.
+* **Functional API** — :func:`signature`, :func:`logsignature`,
+  :func:`sigkernel`, :func:`sigkernel_gram`, :func:`mmd2`,
+  :func:`scoring_rule` for one-off calls; ``repro.core`` holds the full
+  implementation surface.
+"""
+
+from .api import LogSignature, SigKernel, Signature
+from .core.config import (GridConfig, Linear, RBF, StaticKernel,
+                          TransformPipeline)
+from .core.gram import sigkernel_gram
+from .core.logsignature import logsignature
+from .core.losses import mmd2, scoring_rule
+from .core.signature import signature
+from .core.sigkernel import sigkernel
+from . import core
+
+__version__ = "0.2.0"
+
+__all__ = [
+    # config objects
+    "TransformPipeline", "GridConfig", "StaticKernel", "Linear", "RBF",
+    # class entry points
+    "Signature", "LogSignature", "SigKernel",
+    # functional API
+    "signature", "logsignature", "sigkernel", "sigkernel_gram",
+    "mmd2", "scoring_rule",
+    # namespaces
+    "core",
+    "__version__",
+]

@@ -1,0 +1,122 @@
+"""Class-style entry points — the stable ``repro`` surface (API v1).
+
+KSig-shaped composable kernel objects: each class closes over a config
+(:class:`TransformPipeline`, :class:`GridConfig`, a :class:`StaticKernel`
+lift) and is itself a **pytree-registered frozen dataclass**, so instances
+pass transparently through ``jax.jit`` / ``jax.vmap`` / ``jax.grad``
+boundaries — static metadata (depth, backend, flags) partitions the trace
+cache, kernel hyper-parameters (``sigma``, ``scale``, ``t0``/``t1``) stay
+traceable leaves::
+
+    import jax, repro
+
+    sk = repro.SigKernel(static_kernel=repro.RBF(sigma=1.0),
+                         transforms=repro.TransformPipeline(time_aug=True))
+    K = jax.jit(sk.gram)(X)                   # bound methods jit directly
+    K = jax.jit(lambda k, X: k.gram(X))(sk, X)  # or pass the object itself
+
+The functional API (``repro.core.signature`` & co) remains the underlying
+implementation; these classes add no logic beyond argument binding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from .core.config import (GridConfig, Linear, RBF, StaticKernel,
+                          TransformPipeline, _pytree_dataclass as _pytree)
+from .core import gram as _gram
+from .core import losses as _losses
+from .core.logsignature import logsignature as _logsignature
+from .core.signature import signature as _signature
+from .core.sigkernel import sigkernel as _sigkernel
+
+
+@dataclasses.dataclass(frozen=True)
+class Signature:
+    """Truncated path signature as a configured callable.
+
+    ``Signature(depth, transforms=..., backend=..., stream=...)`` —
+    ``__call__(path)`` maps (..., L, d) paths to flat signatures.
+    """
+
+    depth: int
+    transforms: TransformPipeline = TransformPipeline()
+    backend: str = "auto"
+    stream: bool = False
+
+    def __call__(self, path: jax.Array) -> jax.Array:
+        return _signature(path, self.depth, transforms=self.transforms,
+                          backend=self.backend, stream=self.stream)
+
+
+@dataclasses.dataclass(frozen=True)
+class LogSignature:
+    """Truncated log-signature (Lyndon-compressed) as a configured callable."""
+
+    depth: int
+    mode: str = "lyndon"
+    transforms: TransformPipeline = TransformPipeline()
+    backend: str = "auto"
+    stream: bool = False
+
+    def __call__(self, path: jax.Array) -> jax.Array:
+        return _logsignature(path, self.depth, mode=self.mode,
+                             transforms=self.transforms,
+                             backend=self.backend, stream=self.stream)
+
+
+@dataclasses.dataclass(frozen=True)
+class SigKernel:
+    """Signature kernel with a swappable static-kernel lift.
+
+    ``SigKernel(static_kernel=Linear()|RBF(...), transforms=...,
+    grid=GridConfig(lam1, lam2), backend=...)`` exposes:
+
+    * ``__call__(x, y)`` — k(x, y) for batched path pairs;
+    * ``gram(X, Y=None, ...)`` — the Gram matrix (symmetric fast path when
+      ``Y`` is omitted);
+    * ``mmd2(X, Y, ...)`` / ``scoring_rule(X, y, ...)`` — the training
+      losses, routed through the same engine.
+
+    Differentiable end-to-end: the Goursat solve uses the exact one-pass
+    §3.4 backward, the static-kernel Gram its (exact) autodiff.
+    """
+
+    static_kernel: StaticKernel = Linear()
+    transforms: TransformPipeline = TransformPipeline()
+    grid: GridConfig = GridConfig()
+    backend: str = "auto"
+
+    def _kw(self):
+        return dict(transforms=self.transforms, grid=self.grid,
+                    static_kernel=self.static_kernel, backend=self.backend)
+
+    def __call__(self, x: jax.Array, y: jax.Array) -> jax.Array:
+        return _sigkernel(x, y, **self._kw())
+
+    def gram(self, X: jax.Array, Y: Optional[jax.Array] = None, *,
+             row_block: Optional[int] = None,
+             symmetric: Optional[bool] = None) -> jax.Array:
+        return _gram.sigkernel_gram(X, Y, row_block=row_block,
+                                    symmetric=symmetric, **self._kw())
+
+    def mmd2(self, X: jax.Array, Y: jax.Array, *, unbiased: bool = True,
+             row_block: Optional[int] = None) -> jax.Array:
+        return _losses.mmd2(X, Y, unbiased=unbiased, row_block=row_block,
+                            **self._kw())
+
+    def scoring_rule(self, X: jax.Array, y: jax.Array, *,
+                     row_block: Optional[int] = None) -> jax.Array:
+        return _losses.scoring_rule(X, y, row_block=row_block, **self._kw())
+
+
+_pytree(Signature, data_fields=("transforms",),
+        meta_fields=("depth", "backend", "stream"))
+_pytree(LogSignature, data_fields=("transforms",),
+        meta_fields=("depth", "mode", "backend", "stream"))
+_pytree(SigKernel, data_fields=("static_kernel", "transforms"),
+        meta_fields=("grid", "backend"))

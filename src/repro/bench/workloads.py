@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dispatch
+from repro.core.config import RBF, delta_from_gram
 from repro.core.gram import sigkernel_gram
 from repro.core.logsignature import logsignature
 from repro.core.lyndon import logsig_dim
@@ -214,6 +215,46 @@ def gram_backends(mode: str = "quick", repeats: int = 5,
             t_sym = timer.bench(f_sym, X, repeats=repeats)
             entries.append(_t(f"{tag}_symmetric_{b}", t_sym,
                               backend=b, **meta))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# RBF static-kernel lift — the Δ-from-Gram path (API v1), regression-gated
+# from day one: one timed Gram entry per mode + an oracle agreement check
+# ---------------------------------------------------------------------------
+
+_RBF_CELLS = {
+    "smoke": [(4, 12, 3)],
+    "quick": [(8, 32, 4)],
+    "full": [(32, 128, 8)],
+}
+
+
+def rbf_lift(mode: str = "smoke", repeats: int = 3) -> List[dict]:
+    entries = []
+    for (B, L, d) in _RBF_CELLS[_check_mode(mode)]:
+        X = _paths(4, B, L, d, 0.3)
+        Y = _paths(5, B, L, d, 0.3)
+        kernel = RBF(sigma=1.0)
+        tag = f"rbf_lift_B{B}_L{L}_d{d}"
+        meta = dict(op="gram", B=B, L=L, d=d, static_kernel="rbf")
+
+        f = jax.jit(lambda x, y: sigkernel_gram(
+            x, y, static_kernel=kernel, symmetric=False))
+        t = timer.bench(f, X, Y, repeats=repeats)
+        entries.append(_t(f"{tag}_gram", t, **meta))
+        g = jax.jit(jax.grad(lambda x, y: sigkernel_gram(
+            x, y, static_kernel=kernel, symmetric=False).sum()))
+        entries.append(_t(f"{tag}_gram_grad",
+                          timer.bench(g, X, Y, repeats=repeats), **meta))
+
+        # oracle: Δ as the double increment of the pointwise RBF Gram,
+        # solved pairwise by the reference row scan
+        G = kernel.gram(X[:, None], Y[None, :])
+        K_oracle = solve_goursat(delta_from_gram(G))
+        np.testing.assert_allclose(f(X, Y), K_oracle, rtol=5e-4, atol=1e-5,
+                                   err_msg="rbf lift disagrees with oracle")
+        entries.append(_chk(f"{tag}_agreement", **meta))
     return entries
 
 

@@ -1,8 +1,11 @@
 """Core signature computations — the paper's contribution as composable JAX ops."""
 
+from . import config
 from . import dispatch
 from . import lyndon
 from . import tensoralg
+from .config import (GridConfig, Linear, RBF, StaticKernel,
+                     TransformPipeline, delta_from_gram)
 from .signature import (signature, signature_direct, signature_combine,
                         path_increments, transformed_dim)
 from .logsignature import (logsignature, logsignature_combine,
@@ -11,16 +14,20 @@ from .sigkernel import (sigkernel, solve_goursat,
                         solve_goursat_grad, delta_matrix)
 from .gram import sigkernel_gram
 from .sigkernel import sigkernel_gram_blocked
-from .transforms import time_augment, lead_lag, basepoint, transform_increments
+from .transforms import (time_augment, lead_lag, basepoint,
+                         transform_increments, transform_path)
 from . import gram
 from . import losses
 
 __all__ = [
-    "dispatch", "gram", "lyndon", "tensoralg", "signature",
-    "signature_direct",
+    "config", "dispatch", "gram", "lyndon", "tensoralg",
+    "TransformPipeline", "GridConfig", "StaticKernel", "Linear", "RBF",
+    "delta_from_gram",
+    "signature", "signature_direct",
     "signature_combine", "path_increments", "transformed_dim",
     "logsignature", "logsignature_combine", "logsignature_dim",
     "sigkernel", "sigkernel_gram", "sigkernel_gram_blocked",
     "solve_goursat", "solve_goursat_grad", "delta_matrix", "time_augment",
-    "lead_lag", "basepoint", "transform_increments", "losses",
+    "lead_lag", "basepoint", "transform_increments", "transform_path",
+    "losses",
 ]

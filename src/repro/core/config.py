@@ -1,0 +1,327 @@
+"""Composable kernel API v1 — pytree-registered config dataclasses.
+
+The public surface of :mod:`repro` used to be a kwarg soup: ``time_aug=`` /
+``lead_lag=`` bools, ``lam1``/``lam2`` ints and a deprecated ``use_pallas``
+sprinkled over every entry point.  This module replaces them with three
+small frozen dataclasses, all registered as JAX pytrees so they pass
+cleanly through ``jax.jit`` / ``jax.vmap`` / ``jax.grad`` boundaries:
+
+``TransformPipeline(time_aug, lead_lag, basepoint, t0, t1)``
+    The §4 path transforms, applied on-the-fly to increments in the
+    canonical order **basepoint → lead-lag → time-aug** (matching the
+    materialised ``time_augment(lead_lag(basepoint(x)), t0, t1)``).
+    ``t0``/``t1`` are *data* leaves (traceable floats); the booleans are
+    static metadata because they change output shapes.
+
+``GridConfig(lam1, lam2)``
+    The independent dyadic refinement orders of the Goursat PDE grid.
+    Both static (they enter shapes via bit-shifts).
+
+``StaticKernel`` — ``Linear(scale)`` / ``RBF(sigma)``
+    The static-kernel *lift* under the signature kernel (KSig-style).
+    ``Linear`` keeps the paper's one-matmul Δ from increments; ``RBF``
+    feeds the same Goursat solver through the Δ-from-Gram path
+    (:func:`delta_from_gram`), so ``jax.grad`` still uses the exact
+    one-pass §3.4 backward through ``_sigkernel_from_delta`` and plain
+    autodiff (exact) through the RBF Gram itself.  ``scale``/``sigma``
+    are data leaves — differentiable kernel hyper-parameters.
+
+The legacy kwargs survive as shims: :func:`resolve_transforms` and
+:func:`resolve_grid` map them onto config objects with a
+``DeprecationWarning`` once per call-site (via
+:func:`repro.core.dispatch._warn_deprecated`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .dispatch import UNSET, _warn_deprecated
+
+
+def _pytree_dataclass(cls, data_fields, meta_fields):
+    """Register a frozen dataclass as a pytree with static metadata."""
+    jax.tree_util.register_dataclass(cls, data_fields=list(data_fields),
+                                     meta_fields=list(meta_fields))
+    return cls
+
+
+# ---------------------------------------------------------------------------
+# TransformPipeline — §4 path transforms as one value
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransformPipeline:
+    """On-the-fly §4 path transforms, in order basepoint → lead-lag → time-aug.
+
+    Attributes:
+      time_aug: append a uniform time channel over ``[t0, t1]``.
+      lead_lag: interleave lead/lag copies (2d channels, 2L-1 points).
+      basepoint: prepend the origin, making translations visible to S(x).
+      t0 / t1: endpoints of the time-augmentation grid (data leaves —
+        traceable under ``jit``; only used when ``time_aug=True``).
+    """
+
+    time_aug: bool = False
+    lead_lag: bool = False
+    basepoint: bool = False
+    t0: float = 0.0
+    t1: float = 1.0
+
+    @property
+    def identity(self) -> bool:
+        """True when the pipeline changes nothing (fast-path check)."""
+        return not (self.time_aug or self.lead_lag or self.basepoint)
+
+    def transformed_dim(self, d: int) -> int:
+        """Channel count after the pipeline (basepoint adds points, not
+        channels)."""
+        if self.lead_lag:
+            d = 2 * d
+        if self.time_aug:
+            d = d + 1
+        return d
+
+    def transformed_steps(self, L: int) -> int:
+        """Increment count after the pipeline for an L-point path."""
+        n = L - 1
+        if self.basepoint:
+            n += 1
+        if self.lead_lag:
+            n *= 2
+        return n
+
+
+_pytree_dataclass(TransformPipeline, data_fields=("t0", "t1"),
+                  meta_fields=("time_aug", "lead_lag", "basepoint"))
+
+
+# ---------------------------------------------------------------------------
+# GridConfig — dyadic refinement of the PDE grid
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GridConfig:
+    """Independent dyadic refinement orders (λ1, λ2) of the Goursat grid.
+
+    Static metadata: a refined grid has ``(Lx << lam1) · (Ly << lam2)``
+    cells, so these enter shapes and must be Python ints.
+    """
+
+    lam1: int = 0
+    lam2: int = 0
+
+    def __post_init__(self):
+        for name in ("lam1", "lam2"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                raise ValueError(
+                    f"GridConfig.{name} must be a non-negative Python int "
+                    f"(it sets static grid shapes), got {v!r}")
+
+    @property
+    def cells_scale(self) -> int:
+        return 1 << (self.lam1 + self.lam2)
+
+
+_pytree_dataclass(GridConfig, data_fields=(), meta_fields=("lam1", "lam2"))
+
+
+# ---------------------------------------------------------------------------
+# static-kernel lifts (KSig-style)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StaticKernel:
+    """Base class for static-kernel lifts κ under the signature kernel.
+
+    Subclasses implement :meth:`gram` — pointwise κ between path *points*.
+    ``lifts_increments = True`` (only :class:`Linear`) means Δ can be built
+    directly from increment streams with one matmul (the paper's design
+    choice (2), and what the fused Pallas kernels consume); every other
+    kernel goes through the Δ-from-Gram path (:func:`delta_from_gram`).
+    """
+
+    #: Δ is a plain increment matmul — usable by the fused Pallas kernels
+    lifts_increments = False
+
+    def gram(self, x: jax.Array, y: jax.Array) -> jax.Array:
+        """κ(x_i, y_j) pointwise: (..., Lx, d) × (..., Ly, d) -> (..., Lx, Ly).
+
+        Leading batch dims broadcast, so ``gram(x[:, None], y[None])`` gives
+        all pairwise point-Grams of two path batches.
+        """
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear(StaticKernel):
+    """κ(x, y) = scale · ⟨x, y⟩ — the paper's plain signature kernel."""
+
+    scale: float = 1.0
+    lifts_increments = True
+
+    def gram(self, x, y):
+        return _maybe_scale(jnp.einsum("...id,...jd->...ij", x, y),
+                            self.scale)
+
+    def delta_from_increments(self, dx: jax.Array, dy: jax.Array) -> jax.Array:
+        """Δ[i,j] = scale · ⟨dx_i, dy_j⟩ — one batched matmul."""
+        return _maybe_scale(jnp.einsum("...id,...jd->...ij", dx, dy),
+                            self.scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class RBF(StaticKernel):
+    """κ(x, y) = exp(−‖x−y‖² / (2σ²)) — the Gaussian static-kernel lift."""
+
+    sigma: float = 1.0
+
+    def gram(self, x, y):
+        sq = (jnp.sum(x * x, axis=-1)[..., :, None]
+              + jnp.sum(y * y, axis=-1)[..., None, :]
+              - 2.0 * jnp.einsum("...id,...jd->...ij", x, y))
+        sq = jnp.maximum(sq, 0.0)        # clamp catastrophic cancellation
+        return jnp.exp(-sq / (2.0 * jnp.asarray(self.sigma) ** 2))
+
+
+for _cls, _data in ((StaticKernel, ()), (Linear, ("scale",)),
+                    (RBF, ("sigma",))):
+    _pytree_dataclass(_cls, data_fields=_data, meta_fields=())
+
+
+def _maybe_scale(v: jax.Array, scale) -> jax.Array:
+    """Multiply by ``scale`` unless it is concretely 1 (bitwise no-op)."""
+    if isinstance(scale, (int, float)) and scale == 1.0:
+        return v
+    return v * scale
+
+
+def delta_from_gram(G: jax.Array) -> jax.Array:
+    """Δ from a pointwise static-kernel Gram: the double increment
+
+        Δ[i,j] = G[i+1,j+1] − G[i+1,j] − G[i,j+1] + G[i,j]
+
+    (..., Lx, Ly) -> (..., Lx-1, Ly-1).  For κ = ⟨·,·⟩ this reduces exactly
+    to the increment matmul; for any other κ it is the discrete mixed
+    second derivative the Goursat scheme integrates.
+    """
+    return (G[..., 1:, 1:] - G[..., 1:, :-1]
+            - G[..., :-1, 1:] + G[..., :-1, :-1])
+
+
+# ---------------------------------------------------------------------------
+# legacy-kwarg resolution (deprecation shims shared by every entry point)
+# ---------------------------------------------------------------------------
+
+def _legacy_names(**kwargs) -> list:
+    return [name for name, v in kwargs.items() if v is not UNSET]
+
+
+def resolve_transforms(transforms: Optional[TransformPipeline],
+                       time_aug=UNSET, lead_lag=UNSET,
+                       _warn: bool = True) -> TransformPipeline:
+    """Merge the legacy ``time_aug=``/``lead_lag=`` bools into a config.
+
+    An explicit ``transforms=`` wins (contradictory legacy kwargs are
+    ignored with a warning, matching :func:`dispatch.canonicalize`).
+    Explicitly-passed legacy bools — even ``False`` — warn once per
+    call-site and build the equivalent :class:`TransformPipeline`, which
+    runs through the *same* code path (bitwise-identical results).
+    """
+    used = _legacy_names(time_aug=time_aug, lead_lag=lead_lag)
+    if transforms is not None:
+        if not isinstance(transforms, TransformPipeline):
+            raise TypeError(
+                f"transforms= expects a TransformPipeline, got "
+                f"{type(transforms).__name__} (see docs/migration.md)")
+        if used and _warn:
+            _warn_deprecated(
+                f"deprecated {'/'.join(n + '=' for n in used)} ignored "
+                "because transforms= was passed explicitly "
+                "(docs/migration.md)")
+        return transforms
+    if used:
+        if _warn:
+            _warn_deprecated(
+                f"{'/'.join(n + '=' for n in used)} deprecated; pass "
+                "transforms=repro.TransformPipeline(...) "
+                "(docs/migration.md)")
+        return TransformPipeline(
+            time_aug=bool(time_aug) if time_aug is not UNSET else False,
+            lead_lag=bool(lead_lag) if lead_lag is not UNSET else False)
+    return TransformPipeline()
+
+
+def resolve_grid(grid: Optional[GridConfig], lam1=UNSET, lam2=UNSET,
+                 _warn: bool = True) -> GridConfig:
+    """Merge the legacy ``lam1=``/``lam2=`` ints into a :class:`GridConfig`."""
+    used = _legacy_names(lam1=lam1, lam2=lam2)
+    if grid is not None:
+        if not isinstance(grid, GridConfig):
+            raise TypeError(
+                f"grid= expects a GridConfig, got {type(grid).__name__} "
+                f"(see docs/migration.md)")
+        if used and _warn:
+            _warn_deprecated(
+                f"deprecated {'/'.join(n + '=' for n in used)} ignored "
+                "because grid= was passed explicitly (docs/migration.md)")
+        return grid
+    if used:
+        if _warn:
+            _warn_deprecated(
+                f"{'/'.join(n + '=' for n in used)} deprecated; pass "
+                "grid=repro.GridConfig(lam1=..., lam2=...) "
+                "(docs/migration.md)")
+        return GridConfig(lam1=int(lam1) if lam1 is not UNSET else 0,
+                          lam2=int(lam2) if lam2 is not UNSET else 0)
+    return GridConfig()
+
+
+def resolve_kernel_configs(transforms, grid, static_kernel, *,
+                           time_aug=UNSET, lead_lag=UNSET,
+                           lam1=UNSET, lam2=UNSET):
+    """One-stop legacy resolution for the sig-kernel entry points.
+
+    Emits at most **one** ``DeprecationWarning`` per call-site even when a
+    call mixes transform and grid legacy kwargs (``sigkernel(x, y, lam1=1,
+    time_aug=True)`` warns once, naming both).
+    """
+    used = _legacy_names(time_aug=time_aug, lead_lag=lead_lag,
+                         lam1=lam1, lam2=lam2)
+    if used:
+        ignored = []
+        if transforms is not None:
+            ignored += _legacy_names(time_aug=time_aug, lead_lag=lead_lag)
+        if grid is not None:
+            ignored += _legacy_names(lam1=lam1, lam2=lam2)
+        taken = [n for n in used if n not in ignored]
+        parts = []
+        if taken:
+            parts.append(f"{'/'.join(n + '=' for n in taken)} deprecated; "
+                         "pass transforms=repro.TransformPipeline(...) / "
+                         "grid=repro.GridConfig(...)")
+        if ignored:
+            parts.append(f"deprecated {'/'.join(n + '=' for n in ignored)} "
+                         "ignored because the config object was passed "
+                         "explicitly")
+        _warn_deprecated("; ".join(parts) + " (docs/migration.md)")
+    return (resolve_transforms(transforms, time_aug, lead_lag, _warn=False),
+            resolve_grid(grid, lam1, lam2, _warn=False),
+            resolve_static_kernel(static_kernel))
+
+
+def resolve_static_kernel(static_kernel: Optional[StaticKernel]
+                          ) -> StaticKernel:
+    """Default the lift to the paper's linear kernel; validate the type."""
+    if static_kernel is None:
+        return Linear()
+    if not isinstance(static_kernel, StaticKernel):
+        raise TypeError(
+            f"static_kernel= expects a StaticKernel (repro.Linear / "
+            f"repro.RBF), got {type(static_kernel).__name__}")
+    return static_kernel

@@ -130,7 +130,10 @@ def _warn_deprecated(message: str) -> None:
     ``sigkernel_gram_blocked``, the losses — never absorb it) and
     deduplicated on that frame's (filename, lineno): a training loop
     passing ``use_pallas=`` every step warns once, not once per call,
-    while distinct call-sites each get their own warning.
+    while distinct call-sites each get their own warning.  The dedup key
+    deliberately excludes the message, so one call mixing several
+    deprecated kwarg families (``lam1=`` + ``use_pallas=``) still emits
+    exactly one warning per call-site.
     """
     depth = 1  # sys._getframe index; 0 is this helper
     frame = sys._getframe(1)
@@ -139,7 +142,7 @@ def _warn_deprecated(message: str) -> None:
         frame = frame.f_back
         depth += 1
     if frame is not None:
-        site = (frame.f_code.co_filename, frame.f_lineno, message)
+        site = (frame.f_code.co_filename, frame.f_lineno)
         if site in _warned_sites:
             return
         _warned_sites.add(site)
@@ -232,7 +235,7 @@ def _autotuned(op: str, shape, dtype) -> Optional[str]:
 
 
 def resolve(backend: str, *, op: str, grid_cells: Optional[int] = None,
-            shape=None, dtype=None) -> str:
+            shape=None, dtype=None, allow_fused: bool = True) -> str:
     """Resolve ``"auto"`` to a concrete backend name for ``op``.
 
     When ``shape`` is given (the per-op cache-key shape documented in
@@ -241,16 +244,20 @@ def resolve(backend: str, *, op: str, grid_cells: Optional[int] = None,
     apply: ``grid_cells`` is the refined PDE cell count ``nx·ny``
     (sig-kernel ops only); small grids stay on the serial reference scan
     where the wavefront's skew overhead is not worth paying.
+
+    ``allow_fused=False`` keeps ``"auto"`` off fused-Δ backends — used when
+    Δ is not a plain increment matmul (non-linear static-kernel lifts),
+    which a fused kernel cannot build in VMEM.
     """
     if backend != "auto":
         return _validate(backend, op)
     tuned = _autotuned(op, shape, dtype)
-    if tuned is not None:
+    if tuned is not None and (allow_fused or not get(tuned).fused):
         return tuned
     if op in ("signature", "logsignature"):
         return "pallas" if on_tpu() else "reference"
     if on_tpu():
-        return "pallas_fused" if op == "gram" else "pallas"
+        return "pallas_fused" if op == "gram" and allow_fused else "pallas"
     if grid_cells is not None and grid_cells >= _ANTIDIAG_MIN_CELLS:
         return "antidiag"
     return "reference"

@@ -32,38 +32,62 @@ import numpy as np
 
 from . import dispatch
 from . import transforms as tf
-from .signature import path_increments, transformed_dim
+from .config import (_maybe_scale as _scale, delta_from_gram,
+                     resolve_kernel_configs)
+from .dispatch import UNSET
 from .sigkernel import _sigkernel_from_delta
 from repro.parallel.api import shard
 
 
-def _solve_pairs(dxa: jax.Array, dxb: jax.Array, backend: str,
+def _prepare(paths: jax.Array, cfg, kernel) -> jax.Array:
+    """Per-path stream the pair solvers consume: transformed *increments*
+    for increment-lifting (linear) kernels, transformed *points* for
+    everything else (the Δ-from-Gram path needs actual points).
+
+    Either way zero-padding rows with zeros is exact: zero increments and
+    all-zero point rows both give Δ = 0 ⇒ k = 1 rows, which are dropped.
+    """
+    if kernel.lifts_increments:
+        return tf.pipeline_increments(paths, cfg)
+    return tf.transform_path(paths, cfg)
+
+
+def _pair_delta(sa: jax.Array, sb: jax.Array, kernel) -> jax.Array:
+    """Δ for batches of prepared streams (leading dims broadcast)."""
+    if kernel.lifts_increments:
+        return kernel.delta_from_increments(sa, sb)
+    return delta_from_gram(kernel.gram(sa, sb))
+
+
+def _solve_pairs(sa: jax.Array, sb: jax.Array, kernel, backend: str,
                  lam1: int, lam2: int) -> jax.Array:
-    """Solve one batch of increment pairs (P, Lx, d) × (P, Ly, d) -> (P,)."""
+    """Solve one batch of prepared pairs (P, ·, d) × (P, ·, d) -> (P,)."""
     if backend == "pallas_fused":
         from repro.kernels.sigkernel_pde import ops as pde_ops
-        return pde_ops.solve_fused(dxa, dxb, lam1, lam2)
-    delta = jnp.einsum("pid,pjd->pij", dxa, dxb)
-    return _sigkernel_from_delta(delta, lam1, lam2, backend)
+        # fused kernels compute ⟨dx, dy⟩ in VMEM; fold a non-unit linear
+        # scale into one side (scale·⟨dx, dy⟩ = ⟨scale·dx, dy⟩ exactly)
+        return pde_ops.solve_fused(_scale(sa, kernel.scale), sb, lam1, lam2)
+    return _sigkernel_from_delta(_pair_delta(sa, sb, kernel), lam1, lam2,
+                                 backend)
 
 
-def _gram_block(dxb: jax.Array, dY: jax.Array, backend: str,
+def _gram_block(sxb: jax.Array, sY: jax.Array, kernel, backend: str,
                 lam1: int, lam2: int) -> jax.Array:
-    """Gram block from increments (r, Lx, d) × (By, Ly, d) -> (r, By)."""
+    """Gram block from prepared streams (r, ·, d) × (By, ·, d) -> (r, By)."""
     if backend == "pallas_fused":
         from repro.kernels.sigkernel_pde import ops as pde_ops
-        return pde_ops.gram_fused(dxb, dY, lam1, lam2)
-    delta = jnp.einsum("aid,bjd->abij", dxb, dY)
+        return pde_ops.gram_fused(_scale(sxb, kernel.scale), sY, lam1, lam2)
+    delta = _pair_delta(sxb[:, None], sY[None, :], kernel)
     return _sigkernel_from_delta(delta, lam1, lam2, backend)
 
 
 def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
                    backend: str = "auto", row_block: Optional[int] = None,
                    symmetric: Optional[bool] = None,
-                   lam1: int = 0, lam2: int = 0,
-                   time_aug: bool = False, lead_lag: bool = False,
-                   use_pallas=dispatch.UNSET,
-                   solver=dispatch.UNSET) -> jax.Array:
+                   transforms=None, grid=None, static_kernel=None,
+                   lam1=UNSET, lam2=UNSET,
+                   time_aug=UNSET, lead_lag=UNSET,
+                   use_pallas=UNSET, solver=UNSET) -> jax.Array:
     """Signature-kernel Gram matrix ``K[a, b] = k(X_a, Y_b)``.
 
     Args:
@@ -74,14 +98,20 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
         HBM budget).
       backend: a name from :mod:`repro.core.dispatch` ("reference" |
         "antidiag" | "pallas" | "pallas_fused") or ``"auto"`` (platform- and
-        shape-aware; "pallas_fused" on TPU).
+        shape-aware; "pallas_fused" on TPU).  ``"pallas_fused"`` requires
+        the linear static kernel (Δ is built from increments in VMEM).
       row_block: if set, at most ``row_block`` Gram rows (or the equivalent
         number of symmetric pairs) are in flight at once; ``Bx`` is
         zero-padded to the block granularity, padded rows are dropped.
       symmetric: force/forbid the symmetric fast path.  Default: ``Y is
         None``.  ``symmetric=True`` requires ``Y`` to be ``None`` or ``X``.
-      lam1 / lam2: dyadic refinement orders of the PDE grid.
-      time_aug / lead_lag: §4 path transforms, applied to increments.
+      transforms: a :class:`repro.TransformPipeline` (§4 transforms,
+        applied on-the-fly; basepoint included).
+      grid: a :class:`repro.GridConfig` — dyadic refinement of the PDE grid.
+      static_kernel: the static-kernel lift (:class:`repro.Linear` default,
+        :class:`repro.RBF` for the Gaussian lift via the Δ-from-Gram path).
+      lam1 / lam2 / time_aug / lead_lag: deprecated aliases for ``grid=`` /
+        ``transforms=`` (DeprecationWarning once per call-site).
       use_pallas / solver: deprecated aliases (DeprecationWarning) mapped to
         backend names — see docs/solver_guide.md.
 
@@ -101,40 +131,50 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
         raise ValueError("symmetric=False requires Y (pass Y=X for the "
                          "full symmetric Gram without the fast path)")
 
+    cfg, g, kernel = resolve_kernel_configs(
+        transforms, grid, static_kernel, time_aug=time_aug,
+        lead_lag=lead_lag, lam1=lam1, lam2=lam2)
+    lam1, lam2 = g.lam1, g.lam2
     backend = dispatch.canonicalize(backend, op="gram",
                                     use_pallas=use_pallas, solver=solver)
-    Lx = X.shape[1] - 1
-    Ly = Lx if Y is None else Y.shape[1] - 1
+    if backend == "pallas_fused" and not kernel.lifts_increments:
+        raise ValueError(
+            "backend='pallas_fused' builds Δ from increments in VMEM and "
+            f"only supports the linear lift, got "
+            f"static_kernel={type(kernel).__name__}; pass backend='auto'")
+    Lx = cfg.transformed_steps(X.shape[1])
+    Ly = Lx if Y is None else cfg.transformed_steps(Y.shape[1])
     By = X.shape[0] if Y is None else Y.shape[0]
     backend = dispatch.resolve(
         backend, op="gram", grid_cells=(Lx << lam1) * (Ly << lam2),
         shape=(X.shape[0], By, Lx << lam1, Ly << lam2,
-               transformed_dim(X.shape[-1], time_aug, lead_lag)),
-        dtype=X.dtype)
+               cfg.transformed_dim(X.shape[-1])),
+        dtype=X.dtype, allow_fused=kernel.lifts_increments)
 
-    dX = tf.transform_increments(path_increments(X), time_aug, lead_lag)
-    dX = shard(dX, "batch", None, None)
-    Bx = dX.shape[0]
+    sX = _prepare(X, cfg, kernel)
+    sX = shard(sX, "batch", None, None)
+    Bx = sX.shape[0]
 
     if symmetric:
-        return _symmetric_gram(dX, backend, row_block, lam1, lam2)
+        return _symmetric_gram(sX, kernel, backend, row_block, lam1, lam2)
 
-    dY = tf.transform_increments(path_increments(Y), time_aug, lead_lag)
-    dY = shard(dY, "model", None, None)
-    By = dY.shape[0]
+    sY = _prepare(Y, cfg, kernel)
+    sY = shard(sY, "model", None, None)
+    By = sY.shape[0]
 
     if row_block is None:
         dispatch.record_pair_solves(Bx * By)
-        K = _gram_block(dX, dY, backend, lam1, lam2)
+        K = _gram_block(sX, sY, kernel, backend, lam1, lam2)
     else:
         pad = (-Bx) % row_block
-        if pad:  # zero increments -> k = 1 rows, dropped below: exact
-            dX = jnp.pad(dX, ((0, pad), (0, 0), (0, 0)))
+        if pad:  # zero rows -> Δ = 0 -> k = 1 rows, dropped below: exact
+            sX = jnp.pad(sX, ((0, pad), (0, 0), (0, 0)))
         n_blocks = (Bx + pad) // row_block
         dispatch.record_pair_solves(n_blocks * row_block * By)
-        dXb = dX.reshape(n_blocks, row_block, *dX.shape[1:])
+        sXb = sX.reshape(n_blocks, row_block, *sX.shape[1:])
         K = jax.lax.map(
-            lambda dxb: _gram_block(dxb, dY, backend, lam1, lam2), dXb)
+            lambda sxb: _gram_block(sxb, sY, kernel, backend, lam1, lam2),
+            sXb)
         K = K.reshape(n_blocks * row_block, By)[:Bx]
     return shard(K, "batch", "model")
 
@@ -145,21 +185,22 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
 _SYM_GATHER_BUDGET = 64 * 1024 * 1024
 
 
-def _symmetric_gram(dX: jax.Array, backend: str, row_block: Optional[int],
+def _symmetric_gram(sX: jax.Array, kernel, backend: str,
+                    row_block: Optional[int],
                     lam1: int, lam2: int) -> jax.Array:
     """Upper-triangle pair solve + mirror: Bx·(Bx+1)/2 (+ pad) PDE solves."""
-    Bx = dX.shape[0]
+    Bx = sX.shape[0]
     a_idx, b_idx = np.triu_indices(Bx)
     n_pairs = a_idx.size
 
-    if row_block is None and 8 * n_pairs * dX.shape[1] * dX.shape[2] \
+    if row_block is None and 8 * n_pairs * sX.shape[1] * sX.shape[2] \
             > _SYM_GATHER_BUDGET:
         row_block = max(1, _SYM_GATHER_BUDGET
-                        // (8 * Bx * dX.shape[1] * dX.shape[2]))
+                        // (8 * Bx * sX.shape[1] * sX.shape[2]))
 
     if row_block is None:
         dispatch.record_pair_solves(n_pairs)
-        k = _solve_pairs(dX[a_idx], dX[b_idx], backend, lam1, lam2)
+        k = _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend, lam1, lam2)
     else:
         # a block of `row_block` Gram rows ~ row_block·Bx pairs of live Δ.
         # Only the (chunk,)-sized index arrays are materialised up front; the
@@ -174,7 +215,7 @@ def _symmetric_gram(dX: jax.Array, backend: str, row_block: Optional[int],
         a_chunks = jnp.asarray(a_pad).reshape(n_blocks, chunk)
         b_chunks = jnp.asarray(b_pad).reshape(n_blocks, chunk)
         k = jax.lax.map(
-            lambda ab: _solve_pairs(dX[ab[0]], dX[ab[1]], backend,
+            lambda ab: _solve_pairs(sX[ab[0]], sX[ab[1]], kernel, backend,
                                     lam1, lam2),
             (a_chunks, b_chunks))
         k = k.reshape(-1)[:n_pairs]

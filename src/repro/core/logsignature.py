@@ -27,11 +27,9 @@ Modes (see ``repro.core.lyndon``):
 from __future__ import annotations
 
 import functools
-from typing import Optional
-
 import jax
-import jax.numpy as jnp
 
+from . import dispatch as dispatch_mod
 from . import lyndon
 from . import tensoralg as ta
 from .signature import (_effective_increments, _signature_core_bwd,
@@ -98,44 +96,57 @@ def logsignature_from_increments(z: jax.Array, depth: int,
 # ---------------------------------------------------------------------------
 
 def logsignature(path: jax.Array, depth: int, *, mode: str = "lyndon",
-                 time_aug: bool = False, lead_lag: bool = False,
-                 backend: str = "auto", use_pallas=None,
-                 stream: bool = False) -> jax.Array:
+                 transforms=None, backend: str = "auto",
+                 stream: bool = False, time_aug=dispatch_mod.UNSET,
+                 lead_lag=dispatch_mod.UNSET, use_pallas=None) -> jax.Array:
     """Truncated log-signature of a batch of piecewise-linear paths.
 
     Args:
       path: (..., L, d) discrete stream; linearly interpolated.
       depth: truncation level N.
       mode: "lyndon" (default) | "brackets" | "expand" — see module docstring.
-      time_aug / lead_lag: §4 transforms, applied on-the-fly to increments.
+      transforms: a :class:`repro.TransformPipeline` — §4 transforms
+        (basepoint / lead-lag / time-aug over [t0, t1]), applied on-the-fly
+        to increments.  Default: no transforms.
       backend: ``"reference"`` (pure-JAX Horner scan) | ``"pallas"`` (the TPU
         kernel) | ``"auto"`` (default; the registry in
         :mod:`repro.core.dispatch` picks "pallas" on TPU, "reference"
         elsewhere).  The Lyndon projection is a final gather either way.
+        With ``stream=True`` explicitly requesting ``"pallas"`` raises (the
+        streamed scan is pure JAX); ``"auto"`` degrades silently.
+      stream: if True return log-signatures of all prefixes
+        (..., L-1, logsig_dim).
+      time_aug / lead_lag: deprecated bool aliases for ``transforms=``
+        (DeprecationWarning once per call-site; bitwise-identical results).
       use_pallas: deprecated alias — explicit bools warn and map to
         ``backend="pallas"`` / ``"reference"``; ``None`` keeps the
         historical meaning of auto.
-      stream: if True return log-signatures of all prefixes
-        (..., L-1, logsig_dim).
 
     Returns:
       (..., logsignature_dim(d', depth, mode)) where d' is the transformed
-      channel count (``repro.core.signature.transformed_dim``).
+      channel count (``transforms.transformed_dim(d)``).
     """
     from . import dispatch
+    from .config import resolve_transforms
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
-    z = _effective_increments(path, time_aug, lead_lag)
+    cfg = resolve_transforms(transforms, time_aug, lead_lag)
+    z = _effective_increments(path, cfg)
     d = z.shape[-1]
+    backend = dispatch.canonicalize(backend, op="logsignature",
+                                    use_pallas=use_pallas)
     if stream:
+        if backend not in ("auto", "reference"):
+            raise ValueError(
+                f"logsignature(stream=True) has no {backend!r} "
+                "implementation — the streamed prefix scan is pure JAX; "
+                "pass backend='auto' or backend='reference'")
         sig_stream = _signature_stream_from_increments(z, depth)
         flat_log = ta.tensor_log(sig_stream, d, depth)
         return _project(flat_log, d, depth, mode)
     backend = dispatch.resolve(
-        dispatch.canonicalize(backend, op="logsignature",
-                              use_pallas=use_pallas),
-        op="logsignature", shape=(z.shape[-2], z.shape[-1], depth),
-        dtype=z.dtype)
+        backend, op="logsignature",
+        shape=(z.shape[-2], z.shape[-1], depth), dtype=z.dtype)
     if backend == "pallas":
         from repro.kernels.signature import ops as sig_ops
         return sig_ops.logsignature_from_increments(z, depth, mode)

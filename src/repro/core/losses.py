@@ -16,18 +16,25 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from . import dispatch
+from .config import resolve_kernel_configs
+from .dispatch import UNSET
 from .gram import sigkernel_gram
 
 
-def mmd2(X: jax.Array, Y: jax.Array, *, lam1: int = 0, lam2: int = 0,
-         time_aug: bool = False, lead_lag: bool = False,
-         unbiased: bool = True, backend: str = "auto",
+def mmd2(X: jax.Array, Y: jax.Array, *, transforms=None, grid=None,
+         static_kernel=None, unbiased: bool = True, backend: str = "auto",
          row_block: Optional[int] = None,
-         use_pallas=dispatch.UNSET) -> jax.Array:
+         lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
+         use_pallas=UNSET) -> jax.Array:
     """Squared MMD between two path distributions under the signature kernel.
 
     X: (Bx, L, d) samples from P;  Y: (By, L', d) samples from Q.
+
+    ``transforms=`` (:class:`repro.TransformPipeline`), ``grid=``
+    (:class:`repro.GridConfig`) and ``static_kernel=`` (:class:`repro.Linear`
+    / :class:`repro.RBF`) configure the kernel; the legacy
+    ``lam1/lam2/time_aug/lead_lag/use_pallas`` kwargs are deprecated
+    aliases (DeprecationWarning once per call-site).
 
     The unbiased estimator divides by ``b·(b−1)`` and therefore needs at
     least two samples on each side — a single-sample batch raises instead of
@@ -39,7 +46,10 @@ def mmd2(X: jax.Array, Y: jax.Array, *, lam1: int = 0, lam2: int = 0,
             f"unbiased MMD needs >= 2 samples per side (got Bx={bx}, "
             f"By={by}); the 1/(b·(b-1)) normaliser is NaN at b=1 — "
             "pass unbiased=False")
-    kw = dict(lam1=lam1, lam2=lam2, time_aug=time_aug, lead_lag=lead_lag,
+    cfg, g, kernel = resolve_kernel_configs(
+        transforms, grid, static_kernel, time_aug=time_aug,
+        lead_lag=lead_lag, lam1=lam1, lam2=lam2)
+    kw = dict(transforms=cfg, grid=g, static_kernel=kernel,
               backend=backend, row_block=row_block, use_pallas=use_pallas)
     Kxx = sigkernel_gram(X, **kw)            # symmetric: upper triangle only
     Kyy = sigkernel_gram(Y, **kw)
@@ -53,22 +63,26 @@ def mmd2(X: jax.Array, Y: jax.Array, *, lam1: int = 0, lam2: int = 0,
     return sxx + syy - 2.0 * Kxy.mean()
 
 
-def scoring_rule(X: jax.Array, y: jax.Array, *, lam1: int = 0, lam2: int = 0,
-                 time_aug: bool = False, lead_lag: bool = False,
-                 backend: str = "auto", row_block: Optional[int] = None,
-                 use_pallas=dispatch.UNSET) -> jax.Array:
+def scoring_rule(X: jax.Array, y: jax.Array, *, transforms=None, grid=None,
+                 static_kernel=None, backend: str = "auto",
+                 row_block: Optional[int] = None,
+                 lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
+                 use_pallas=UNSET) -> jax.Array:
     """Sig-kernel score  E[k(X,X')]/2 − E[k(X,y)]  for one observation y (L, d).
 
     A strictly proper scoring rule for path-valued prediction [24].
     ``E[k(X,X')]`` averages over distinct pairs (divides by ``b·(b−1)``), so
-    the ensemble needs at least two members.
+    the ensemble needs at least two members.  Configured like :func:`mmd2`.
     """
     b = X.shape[0]
     if b < 2:
         raise ValueError(
             f"scoring_rule needs an ensemble of >= 2 paths (got B={b}); "
             "the 1/(b·(b-1)) normaliser is NaN at b=1")
-    kw = dict(lam1=lam1, lam2=lam2, time_aug=time_aug, lead_lag=lead_lag,
+    cfg, g, kernel = resolve_kernel_configs(
+        transforms, grid, static_kernel, time_aug=time_aug,
+        lead_lag=lead_lag, lam1=lam1, lam2=lam2)
+    kw = dict(transforms=cfg, grid=g, static_kernel=kernel,
               backend=backend, row_block=row_block, use_pallas=use_pallas)
     Kxx = sigkernel_gram(X, **kw)
     exx = (Kxx.sum() - jnp.trace(Kxx)) / (b * (b - 1))
@@ -77,9 +91,9 @@ def scoring_rule(X: jax.Array, y: jax.Array, *, lam1: int = 0, lam2: int = 0,
 
 
 def sig_aux_loss(hidden: jax.Array, target: jax.Array, *, proj: jax.Array,
-                 lam1: int = 0, lam2: int = 0, backend: str = "auto",
-                 row_block: Optional[int] = None,
-                 use_pallas=dispatch.UNSET) -> jax.Array:
+                 transforms=None, grid=None, static_kernel=None,
+                 backend: str = "auto", row_block: Optional[int] = None,
+                 lam1=UNSET, lam2=UNSET, use_pallas=UNSET) -> jax.Array:
     """Auxiliary sig-kernel loss between a model's hidden trajectory and a
     target path distribution (the glue attaching the paper's technique to any
     sequence architecture — DESIGN.md §5).
@@ -87,8 +101,11 @@ def sig_aux_loss(hidden: jax.Array, target: jax.Array, *, proj: jax.Array,
     hidden: (B, L, H) hidden states; proj: (H, d) fixed/learned projection into
     a low-dim path space; target: (B, L, d) reference paths.
     """
+    cfg, g, kernel = resolve_kernel_configs(
+        transforms, grid, static_kernel, lam1=lam1, lam2=lam2)
     path = hidden @ proj                      # (B, L, d)
     # normalise scale so the PDE stays well-conditioned for wide layers
     path = path / jnp.sqrt(jnp.asarray(proj.shape[0], path.dtype))
-    return mmd2(path, target, lam1=lam1, lam2=lam2, unbiased=False,
-                backend=backend, row_block=row_block, use_pallas=use_pallas)
+    return mmd2(path, target, transforms=cfg, grid=g, static_kernel=kernel,
+                unbiased=False, backend=backend, row_block=row_block,
+                use_pallas=use_pallas)

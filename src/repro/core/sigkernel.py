@@ -39,25 +39,47 @@ import jax
 import jax.numpy as jnp
 
 from . import dispatch
-from .signature import path_increments, transformed_dim
+from .config import (_maybe_scale as _config_scale, delta_from_gram,
+                     resolve_kernel_configs, resolve_static_kernel,
+                     resolve_transforms)
+from .dispatch import UNSET
 from . import transforms as tf
 
 
 # ---------------------------------------------------------------------------
-# Δ precomputation (one batched matmul — paper design choice (2))
+# Δ precomputation (one batched matmul — paper design choice (2)), now with
+# static-kernel lifts: non-linear κ go through the Δ-from-Gram path
 # ---------------------------------------------------------------------------
 
-def delta_matrix(x: jax.Array, y: jax.Array, *, time_aug: bool = False,
-                 lead_lag: bool = False) -> jax.Array:
-    """Δ[i,j] = ⟨x_{i+1}−x_i, y_{j+1}−y_j⟩ as a batched matmul (..., Lx-1, Ly-1).
+def delta_matrix(x: jax.Array, y: jax.Array, *, transforms=None,
+                 static_kernel=None, time_aug=UNSET,
+                 lead_lag=UNSET) -> jax.Array:
+    """Δ for the Goursat solver: (..., Lx, d) × (..., Ly, d) -> (..., Lx-1, Ly-1).
 
-    Transforms are applied to the *increments* (lead-lag / time-aug never
-    materialise the transformed path).
+    For the (default) linear lift this is the paper's one batched matmul
+    over transformed *increments*, Δ[i,j] = ⟨dx̃_i, dỹ_j⟩ — lead-lag /
+    time-aug / basepoint never materialise the transformed path.  For a
+    non-linear lift κ (e.g. :class:`repro.RBF`) the transformed paths are
+    materialised once and Δ is the double increment of the pointwise Gram,
+
+        Δ[i,j] = κ(x̃_{i+1}, ỹ_{j+1}) − κ(x̃_{i+1}, ỹ_j)
+                 − κ(x̃_i, ỹ_{j+1}) + κ(x̃_i, ỹ_j),
+
+    which feeds the *same* solver; gradients flow through the Gram by
+    (exact) autodiff and through the solver by the one-pass §3.4 backward.
+
+    ``time_aug=``/``lead_lag=`` are deprecated aliases for ``transforms=``.
     """
-    dx = tf.transform_increments(path_increments(x), time_aug, lead_lag)
-    dy = tf.transform_increments(path_increments(y), time_aug, lead_lag)
-    # the hot matmul — MXU on TPU, one bmm as in the paper
-    return jnp.einsum("...id,...jd->...ij", dx, dy)
+    cfg = resolve_transforms(transforms, time_aug, lead_lag)
+    kernel = resolve_static_kernel(static_kernel)
+    if kernel.lifts_increments:
+        dx = tf.pipeline_increments(x, cfg)
+        dy = tf.pipeline_increments(y, cfg)
+        # the hot matmul — MXU on TPU, one bmm as in the paper
+        return kernel.delta_from_increments(dx, dy)
+    xt = tf.transform_path(x, cfg)
+    yt = tf.transform_path(y, cfg)
+    return delta_from_gram(kernel.gram(xt, yt))
 
 
 # ---------------------------------------------------------------------------
@@ -369,47 +391,71 @@ def _sk_bwd(lam1, lam2, backend, res, gbar):
 _sigkernel_from_delta.defvjp(_sk_fwd, _sk_bwd)
 
 
-def sigkernel(x: jax.Array, y: jax.Array, *, lam1: int = 0, lam2: int = 0,
-              time_aug: bool = False, lead_lag: bool = False,
-              backend: str = "auto",
-              use_pallas=dispatch.UNSET) -> jax.Array:
-    """Signature kernel k(x, y) = ⟨S(x), S(y)⟩ for batches of paths.
+def sigkernel(x: jax.Array, y: jax.Array, *, transforms=None, grid=None,
+              static_kernel=None, backend: str = "auto",
+              lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
+              use_pallas=UNSET) -> jax.Array:
+    """Signature kernel k(x, y) = ⟨S(x̃), S(ỹ)⟩ for batches of paths.
 
     x: (..., Lx, d), y: (..., Ly, d)  ->  (...,).
 
     Differentiable w.r.t. x and y with pySigLib's exact one-pass backward.
-    ``lam1``/``lam2`` are the independent dyadic refinement orders.
 
-    ``backend`` names a solver from :mod:`repro.core.dispatch`
-    ("reference" | "antidiag" | "pallas" | "pallas_fused"); the default
-    ``"auto"`` picks per platform and problem size.  ``use_pallas`` is a
-    deprecated alias (True -> "pallas", False -> "reference").
+    Args:
+      transforms: a :class:`repro.TransformPipeline` — §4 transforms
+        (basepoint / lead-lag / time-aug over [t0, t1]) applied on-the-fly.
+      grid: a :class:`repro.GridConfig` — the independent dyadic refinement
+        orders (λ1, λ2) of the PDE grid.
+      static_kernel: the static-kernel lift — :class:`repro.Linear` (the
+        default; the paper's kernel) or :class:`repro.RBF`.  Non-linear
+        lifts route Δ through the pointwise-Gram double increment
+        (:func:`repro.core.config.delta_from_gram`) into the same solver.
+      backend: a name from :mod:`repro.core.dispatch` ("reference" |
+        "antidiag" | "pallas" | "pallas_fused") or ``"auto"`` (default:
+        per-platform/size).  ``"pallas_fused"`` builds Δ from increments in
+        VMEM and therefore requires the linear lift.
+      lam1 / lam2 / time_aug / lead_lag / use_pallas: deprecated aliases
+        for ``grid=`` / ``transforms=`` / ``backend=`` (DeprecationWarning
+        once per call-site; bitwise-identical results).
     """
+    cfg, g, kernel = resolve_kernel_configs(
+        transforms, grid, static_kernel, time_aug=time_aug,
+        lead_lag=lead_lag, lam1=lam1, lam2=lam2)
+    lam1, lam2 = g.lam1, g.lam2
     backend = dispatch.canonicalize(backend, op="sigkernel",
                                     use_pallas=use_pallas)
+    if backend == "pallas_fused" and not kernel.lifts_increments:
+        raise ValueError(
+            "backend='pallas_fused' builds Δ from increments in VMEM and "
+            f"only supports the linear lift, got "
+            f"static_kernel={type(kernel).__name__}; pass backend='auto'")
     if backend in ("auto", "pallas_fused"):
         was_auto = backend == "auto"
-        Lx, Ly = x.shape[-2] - 1, y.shape[-2] - 1
+        Lx = cfg.transformed_steps(x.shape[-2])
+        Ly = cfg.transformed_steps(y.shape[-2])
         cells = (Lx << lam1) * (Ly << lam2)
         backend = dispatch.resolve(
             backend, op="sigkernel", grid_cells=cells,
             shape=(Lx << lam1, Ly << lam2,
-                   transformed_dim(x.shape[-1], time_aug, lead_lag)),
-            dtype=x.dtype)
+                   cfg.transformed_dim(x.shape[-1])),
+            dtype=x.dtype, allow_fused=kernel.lifts_increments)
         if was_auto and backend == "pallas_fused" \
                 and x.shape[:-2] != y.shape[:-2]:
             # the autotune key carries no batch info, so a tuned winner can
             # be fused even for broadcastable batches it cannot serve;
             # auto must degrade to the static heuristic, not raise below
             backend = dispatch.resolve("auto", op="sigkernel",
-                                       grid_cells=cells)
+                                       grid_cells=cells, allow_fused=False)
     if backend == "pallas_fused":
         if x.shape[:-2] != y.shape[:-2]:
             raise ValueError("backend='pallas_fused' needs matching batch "
                              f"shapes, got {x.shape[:-2]} vs {y.shape[:-2]}")
         from repro.kernels.sigkernel_pde import ops as pde_ops
-        dx = tf.transform_increments(path_increments(x), time_aug, lead_lag)
-        dy = tf.transform_increments(path_increments(y), time_aug, lead_lag)
+        dx = tf.pipeline_increments(x, cfg)
+        dy = tf.pipeline_increments(y, cfg)
+        # fold a non-unit linear scale into one increment side:
+        # scale·⟨dx, dy⟩ = ⟨scale·dx, dy⟩ exactly
+        dx = _config_scale(dx, kernel.scale)
         batch_shape = dx.shape[:-2]
         dispatch.record_pair_solves(
             functools.reduce(lambda a, b: a * b, batch_shape, 1))
@@ -417,7 +463,7 @@ def sigkernel(x: jax.Array, y: jax.Array, *, lam1: int = 0, lam2: int = 0,
                                 dy.reshape((-1,) + dy.shape[-2:]),
                                 lam1, lam2)
         return k.reshape(batch_shape)
-    delta = delta_matrix(x, y, time_aug=time_aug, lead_lag=lead_lag)
+    delta = delta_matrix(x, y, transforms=cfg, static_kernel=kernel)
     dispatch.record_pair_solves(
         functools.reduce(lambda a, b: a * b, delta.shape[:-2], 1))
     return _sigkernel_from_delta(delta, lam1, lam2, backend)

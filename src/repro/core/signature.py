@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from . import tensoralg as ta
+from .dispatch import UNSET
 
 
 # ---------------------------------------------------------------------------
@@ -38,21 +39,23 @@ def path_increments(path: jax.Array) -> jax.Array:
     return path[..., 1:, :] - path[..., :-1, :]
 
 
-def _effective_increments(path: jax.Array, time_aug: bool, lead_lag: bool,
-                          t0: float = 0.0, t1: float = 1.0) -> jax.Array:
-    """Increment stream with §4 transforms applied on-the-fly.
+def _effective_increments(path: jax.Array, pipeline) -> jax.Array:
+    """Increment stream with a §4 :class:`TransformPipeline` applied on-the-fly.
 
     Never materialises the transformed path; only its increments, which is all
     the signature algorithms consume.  Delegates to
-    :func:`repro.core.transforms.transform_increments`.
+    :func:`repro.core.transforms.pipeline_increments`.
     """
     from . import transforms as tf
-    return tf.transform_increments(path_increments(path), time_aug, lead_lag,
-                                   t0=t0, t1=t1)
+    return tf.pipeline_increments(path, pipeline)
 
 
 def transformed_dim(d: int, time_aug: bool, lead_lag: bool) -> int:
-    """Channel dimension after on-the-fly transforms."""
+    """Channel dimension after on-the-fly transforms.
+
+    Prefer :meth:`repro.TransformPipeline.transformed_dim`; this helper is
+    kept for the bool-flag call sites.
+    """
     if lead_lag:
         d = 2 * d
     if time_aug:
@@ -114,10 +117,12 @@ def _signature_scan(z: jax.Array, d: int, depth: int, step_fn) -> jax.Array:
     return ta.join_levels(levels)
 
 
-def signature_direct(path: jax.Array, depth: int, *, time_aug: bool = False,
-                     lead_lag: bool = False) -> jax.Array:
+def signature_direct(path: jax.Array, depth: int, *, transforms=None,
+                     time_aug=UNSET, lead_lag=UNSET) -> jax.Array:
     """Truncated signature via Algorithm 1 (direct).  Cross-check oracle."""
-    z = _effective_increments(path, time_aug, lead_lag)
+    from .config import resolve_transforms
+    cfg = resolve_transforms(transforms, time_aug, lead_lag)
+    z = _effective_increments(path, cfg)
     return _signature_scan(z, z.shape[-1], depth, _direct_step)
 
 
@@ -161,36 +166,50 @@ def _signature_core_bwd(depth, res, g):
 _signature_core.defvjp(_signature_core_fwd, _signature_core_bwd)
 
 
-def signature(path: jax.Array, depth: int, *, time_aug: bool = False,
-              lead_lag: bool = False, backend: str = "auto",
-              use_pallas=None, stream: bool = False) -> jax.Array:
+def signature(path: jax.Array, depth: int, *, transforms=None,
+              backend: str = "auto", stream: bool = False,
+              time_aug=UNSET, lead_lag=UNSET, use_pallas=None) -> jax.Array:
     """Truncated signature of a batch of piecewise-linear paths.
 
     Args:
       path: (..., L, d) discrete stream; linearly interpolated.
       depth: truncation level N.
-      time_aug / lead_lag: §4 transforms, applied on-the-fly to increments.
+      transforms: a :class:`repro.TransformPipeline` — §4 transforms
+        (basepoint / lead-lag / time-aug over [t0, t1]), applied on-the-fly
+        to increments.  Default: no transforms.
       backend: ``"reference"`` (pure-JAX Horner scan), ``"pallas"`` (the TPU
         kernel; interpret mode — slow — elsewhere), or ``"auto"`` (default):
         the registry in :mod:`repro.core.dispatch` picks "pallas" on TPU and
-        "reference" on CPU/GPU.  Ignored when ``stream=True`` (the streamed
-        scan is pure JAX).
+        "reference" on CPU/GPU.  With ``stream=True`` only ``"auto"`` /
+        ``"reference"`` are valid (the streamed scan is pure JAX);
+        explicitly requesting ``"pallas"`` raises instead of silently
+        degrading.
+      stream: if True return signatures of all prefixes (..., L-1, sig_dim).
+      time_aug / lead_lag: deprecated bool aliases for ``transforms=``
+        (DeprecationWarning once per call-site; bitwise-identical results).
       use_pallas: deprecated alias — ``True`` -> ``backend="pallas"``,
         ``False`` -> ``backend="reference"`` (with a DeprecationWarning);
         ``None`` keeps the historical meaning of auto.
-      stream: if True return signatures of all prefixes (..., L-1, sig_dim).
 
     Returns:
       (..., sig_dim(d', depth)) flat signature (levels 1..depth), where d' is
-      the transformed channel count.
+      the transformed channel count (``transforms.transformed_dim(d)``).
     """
     from . import dispatch
-    z = _effective_increments(path, time_aug, lead_lag)
+    from .config import resolve_transforms
+    cfg = resolve_transforms(transforms, time_aug, lead_lag)
+    z = _effective_increments(path, cfg)
+    backend = dispatch.canonicalize(backend, op="signature",
+                                    use_pallas=use_pallas)
     if stream:
+        if backend != "auto" and backend != "reference":
+            raise ValueError(
+                f"signature(stream=True) has no {backend!r} implementation "
+                "— the streamed prefix scan is pure JAX; pass "
+                "backend='auto' or backend='reference'")
         return _signature_stream_from_increments(z, depth)
     backend = dispatch.resolve(
-        dispatch.canonicalize(backend, op="signature", use_pallas=use_pallas),
-        op="signature", shape=(z.shape[-2], z.shape[-1], depth),
+        backend, op="signature", shape=(z.shape[-2], z.shape[-1], depth),
         dtype=z.dtype)
     if backend == "pallas":
         from repro.kernels.signature import ops as sig_ops

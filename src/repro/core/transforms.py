@@ -14,9 +14,15 @@ Lead-lag convention ([10, 18, 19], paper §4): with points x_0..x_{L-1},
 the lead-lag path has 2L-1 points p_i = (lead_i, lag_i) with
 lead_{2k} = lead_{2k-1} = x_k and lag_{2k} = lag_{2k+1} = x_k, so its
 increments alternate (dx_k, 0) (lead jumps first) then (0, dx_k).
+
+The canonical pipeline order (what :class:`repro.TransformPipeline`
+denotes) is **basepoint → lead-lag → time-aug**, i.e. the materialised
+``time_augment(lead_lag(basepoint(x)), t0, t1)``.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,11 +52,24 @@ def basepoint(path: jax.Array) -> jax.Array:
 
 
 def transform_increments(z: jax.Array, time_aug: bool, lead_lag_: bool,
-                         t0: float = 0.0, t1: float = 1.0) -> jax.Array:
+                         t0: float = 0.0, t1: float = 1.0, *,
+                         basepoint_: bool = False,
+                         first: Optional[jax.Array] = None) -> jax.Array:
     """On-the-fly transform of an increment stream z (..., L-1, d).
 
-    Matches increments of the materialised transforms above exactly.
+    Matches increments of the materialised transforms above exactly, in the
+    canonical order basepoint → lead-lag → time-aug.  ``basepoint_``
+    prepends the increment 0 → x_0 (which equals the first path point), so
+    the padded path is never materialised; it needs ``first`` — the (..., d)
+    first point of the path — because increments alone don't determine it.
     """
+    if basepoint_:
+        if first is None:
+            raise ValueError(
+                "transform_increments(basepoint_=True) needs first= (the "
+                "(..., d) first path point): the 0 -> x_0 increment is not "
+                "derivable from the increment stream")
+        z = jnp.concatenate([first[..., None, :], z], axis=-2)
     n = z.shape[-2]
     if lead_lag_:
         zeros = jnp.zeros_like(z)
@@ -65,3 +84,31 @@ def transform_increments(z: jax.Array, time_aug: bool, lead_lag_: bool,
         dt = jnp.full((*z.shape[:-1], 1), (t1 - t0) / steps, dtype=z.dtype)
         z = jnp.concatenate([z, dt], axis=-1)
     return z
+
+
+def transform_path(path: jax.Array, pipeline) -> jax.Array:
+    """Materialise a :class:`repro.TransformPipeline` on a path of points.
+
+    Applies basepoint → lead-lag → time-aug in the canonical order.  Used
+    by oracles and by the Δ-from-Gram path of non-linear static-kernel
+    lifts (which need actual points, not increments); the signature /
+    linear-kernel hot paths stay on :func:`transform_increments`.
+    """
+    if pipeline.basepoint:
+        path = basepoint(path)
+    if pipeline.lead_lag:
+        path = lead_lag(path)
+    if pipeline.time_aug:
+        path = time_augment(path, pipeline.t0, pipeline.t1)
+    return path
+
+
+def pipeline_increments(path: jax.Array, pipeline) -> jax.Array:
+    """Increment stream of ``transform_path(path, pipeline)`` — computed
+    on-the-fly from the raw increments (the transformed path never exists
+    in memory)."""
+    z = path[..., 1:, :] - path[..., :-1, :]
+    return transform_increments(
+        z, pipeline.time_aug, pipeline.lead_lag, pipeline.t0, pipeline.t1,
+        basepoint_=pipeline.basepoint,
+        first=path[..., 0, :] if pipeline.basepoint else None)

@@ -51,13 +51,14 @@ def _sig_aux(params, hidden, batch, cfg):
     """Signature-kernel MMD between the model's hidden trajectory and a target
     path distribution (the paper-technique hook available on every arch)."""
     from repro.core import losses as sig_losses
+    from repro.core.config import GridConfig
     S = hidden.shape[1]
     stride = max(1, S // 32)
     path_h = hidden[:, ::stride][:, :32].astype(jnp.float32)
     target = batch["sig_target"].astype(jnp.float32)
     return sig_losses.sig_aux_loss(
         path_h, target, proj=params["sig_proj"],
-        lam1=cfg.sig_dyadic, lam2=cfg.sig_dyadic)
+        grid=GridConfig(cfg.sig_dyadic, cfg.sig_dyadic))
 
 
 def build_model(cfg) -> Model:

@@ -1,0 +1,326 @@
+"""API v1 contract tests: the stable top-level surface, pytree configs,
+class entry points, static-kernel lifts, and the deprecation shims.
+
+Covers the PR-4 acceptance criteria:
+
+* ``repro.__all__`` / ``repro.core.__all__`` match the committed snapshot
+  ``tests/api_surface.txt`` (changing the public surface requires editing
+  that file in the same commit — an intentional speed bump).
+* ``jax.jit(repro.SigKernel(static_kernel=repro.RBF(...)).gram)`` compiles,
+  agrees with a naive RBF-lift Gram oracle, and its ``jax.grad`` matches
+  finite differences.
+* Every old-style call (``time_aug=``/``lead_lag=``/``lam1``/``lam2``/
+  ``use_pallas=``) emits exactly one DeprecationWarning per call-site and
+  returns **bitwise-identical** results to the config-object call.
+* ``basepoint`` on the on-the-fly increment path matches the materialised
+  ``basepoint(path)`` oracle; ``t0``/``t1`` reach ``transform_increments``.
+* ``signature(..., stream=True, backend="pallas")`` raises; auto degrades
+  silently.
+"""
+
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import dispatch
+from repro.core import transforms as tf
+from repro.core.config import delta_from_gram
+from repro.core.sigkernel import delta_matrix, solve_goursat
+
+jax.config.update("jax_platform_name", "cpu")
+
+SURFACE_FILE = os.path.join(os.path.dirname(__file__), "api_surface.txt")
+
+
+def paths(seed, B=3, L=8, d=2, scale=0.2):
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, L, d)) * scale
+
+
+def _bitwise_equal(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return a.dtype == b.dtype and a.shape == b.shape \
+        and a.tobytes() == b.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# API snapshot
+# ---------------------------------------------------------------------------
+
+def test_api_surface_matches_snapshot():
+    with open(SURFACE_FILE, encoding="utf-8") as f:
+        committed = [ln.strip() for ln in f
+                     if ln.strip() and not ln.startswith("#")]
+    live = sorted(f"repro.{n}" for n in repro.__all__) + \
+        sorted(f"repro.core.{n}" for n in repro.core.__all__)
+    assert live == committed, (
+        "public API changed: update tests/api_surface.txt in the same "
+        "commit (and docs/api/public.md)")
+
+
+def test_all_names_exist():
+    for name in repro.__all__:
+        assert hasattr(repro, name), name
+    for name in repro.core.__all__:
+        assert hasattr(repro.core, name), name
+
+
+# ---------------------------------------------------------------------------
+# class entry points + RBF lift (the tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+def _naive_rbf_gram(X, Y, sigma):
+    """Oracle: materialised pointwise RBF Gram -> Δ double increment ->
+    reference Goursat solve, pair by pair."""
+    X, Y = np.asarray(X), np.asarray(Y)
+    K = np.zeros((X.shape[0], Y.shape[0]), np.float32)
+    for a in range(X.shape[0]):
+        for b in range(Y.shape[0]):
+            diff = X[a][:, None, :] - Y[b][None, :, :]
+            G = np.exp(-(diff ** 2).sum(-1) / (2.0 * sigma ** 2))
+            d = G[1:, 1:] - G[1:, :-1] - G[:-1, 1:] + G[:-1, :-1]
+            K[a, b] = float(solve_goursat(jnp.asarray(d)))
+    return K
+
+
+def test_jit_rbf_sigkernel_gram_matches_oracle_and_fd():
+    X, Y = paths(0, 3, 7, 2, 0.3), paths(1, 4, 6, 2, 0.3)
+    sk = repro.SigKernel(static_kernel=repro.RBF(sigma=1.0))
+    K = jax.jit(sk.gram)(X, Y)                      # compiles
+    np.testing.assert_allclose(K, _naive_rbf_gram(X, Y, 1.0),
+                               rtol=5e-4, atol=1e-5)
+
+    g = jax.grad(lambda q: sk.gram(q, Y).sum())(X)
+    x0 = np.asarray(X)
+    eps = 1e-3
+    for idx in [(0, 0, 0), (1, 3, 1), (2, 6, 0)]:
+        xp, xm = x0.copy(), x0.copy()
+        xp[idx] += eps
+        xm[idx] -= eps
+        fd = (float(sk.gram(jnp.asarray(xp), Y).sum())
+              - float(sk.gram(jnp.asarray(xm), Y).sum())) / (2 * eps)
+        assert abs(fd - float(g[idx])) < 2e-2 * max(1.0, abs(fd)), idx
+
+
+def test_rbf_symmetric_gram_psd():
+    X = paths(2, 4, 6, 2, 0.3)
+    K = repro.SigKernel(static_kernel=repro.RBF(sigma=0.7)).gram(X)
+    np.testing.assert_allclose(K, K.T, rtol=1e-4, atol=1e-5)
+    evals = np.linalg.eigvalsh(np.asarray(K, np.float64))
+    assert evals.min() > -1e-4
+
+
+def test_linear_scale_lift():
+    """Linear(scale) multiplies Δ — equivalent to scaling one path side."""
+    x, y = paths(3), paths(4)
+    k_scaled = repro.sigkernel(x, y, static_kernel=repro.Linear(scale=0.25))
+    k_manual = repro.sigkernel(0.25 * x, y)
+    np.testing.assert_allclose(k_scaled, k_manual, rtol=1e-5, atol=1e-6)
+
+
+def test_configs_are_pytrees():
+    sk = repro.SigKernel(static_kernel=repro.RBF(sigma=2.0),
+                         transforms=repro.TransformPipeline(time_aug=True))
+    leaves, treedef = jax.tree_util.tree_flatten(sk)
+    assert 2.0 in [float(v) for v in leaves]        # sigma is a leaf
+    assert jax.tree_util.tree_unflatten(treedef, leaves) == sk
+    X = paths(5)
+    # object-as-argument jit and vmap over the sigma leaf
+    K1 = jax.jit(lambda k, X: k.gram(X))(sk, X)
+    np.testing.assert_allclose(K1, sk.gram(X), rtol=1e-6)
+    Ks = jax.vmap(lambda s: repro.SigKernel(
+        static_kernel=repro.RBF(sigma=s)).gram(X))(jnp.array([0.5, 1.0]))
+    assert Ks.shape == (2, X.shape[0], X.shape[0])
+
+
+def test_grad_wrt_kernel_hyperparameter():
+    X = paths(6, 3, 6, 2, 0.3)
+    dsig = jax.grad(lambda s: repro.SigKernel(
+        static_kernel=repro.RBF(sigma=s)).gram(X).sum())(1.0)
+    assert np.isfinite(dsig)
+    eps = 1e-3
+    f = lambda s: float(repro.SigKernel(
+        static_kernel=repro.RBF(sigma=s)).gram(X).sum())
+    fd = (f(1.0 + eps) - f(1.0 - eps)) / (2 * eps)
+    assert abs(fd - float(dsig)) < 2e-2 * max(1.0, abs(fd))
+
+
+def test_signature_and_logsignature_classes():
+    X = paths(7, 2, 9, 2)
+    cfg = repro.TransformPipeline(lead_lag=True)
+    np.testing.assert_allclose(
+        jax.jit(repro.Signature(depth=3, transforms=cfg))(X),
+        repro.signature(X, 3, transforms=cfg), rtol=1e-6)
+    np.testing.assert_allclose(
+        repro.LogSignature(depth=3, mode="brackets")(X),
+        repro.logsignature(X, 3, mode="brackets"), rtol=1e-6)
+    sk = repro.SigKernel()
+    np.testing.assert_allclose(sk.mmd2(X, X + 0.05, unbiased=False),
+                               repro.mmd2(X, X + 0.05, unbiased=False),
+                               rtol=1e-6)
+    np.testing.assert_allclose(sk.scoring_rule(X, X[0]),
+                               repro.scoring_rule(X, X[0]), rtol=1e-6)
+
+
+def test_pallas_fused_rejects_nonlinear_lift():
+    X = paths(8)
+    with pytest.raises(ValueError, match="linear lift"):
+        repro.sigkernel_gram(X, X, symmetric=False,
+                             static_kernel=repro.RBF(sigma=1.0),
+                             backend="pallas_fused")
+    with pytest.raises(ValueError, match="linear lift"):
+        repro.sigkernel(X, X, static_kernel=repro.RBF(sigma=1.0),
+                        backend="pallas_fused")
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: exactly one warning per call-site, bitwise identity
+# ---------------------------------------------------------------------------
+
+def _one_warning_bitwise(legacy_fn, config_fn):
+    dispatch.reset_warned_sites()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = legacy_fn()
+        legacy2 = legacy_fn()                       # same site: no new warning
+    assert [x.category for x in w] == [DeprecationWarning], \
+        [str(x.message) for x in w]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = config_fn()                           # config calls never warn
+    assert _bitwise_equal(legacy, cfg)
+    assert _bitwise_equal(legacy, legacy2)
+
+
+def test_old_kwargs_bitwise_and_warn_once():
+    x, y = paths(10, 2, 7, 2), paths(11, 2, 6, 2)
+    X = paths(12, 3, 6, 2)
+    TP, GC = repro.TransformPipeline, repro.GridConfig
+
+    _one_warning_bitwise(
+        lambda: repro.signature(x, 3, time_aug=True, lead_lag=True),
+        lambda: repro.signature(
+            x, 3, transforms=TP(time_aug=True, lead_lag=True)))
+    _one_warning_bitwise(
+        lambda: repro.logsignature(x, 3, time_aug=True),
+        lambda: repro.logsignature(x, 3, transforms=TP(time_aug=True)))
+    # one call-site mixing transform AND grid legacy kwargs: still one warning
+    _one_warning_bitwise(
+        lambda: repro.sigkernel(x, y, lam1=1, lam2=2, time_aug=True,
+                                lead_lag=True),
+        lambda: repro.sigkernel(
+            x, y, grid=GC(1, 2), transforms=TP(time_aug=True,
+                                               lead_lag=True)))
+    _one_warning_bitwise(
+        lambda: repro.sigkernel_gram(X, X, symmetric=False, lam1=1, lam2=1),
+        lambda: repro.sigkernel_gram(X, X, symmetric=False, grid=GC(1, 1)))
+    _one_warning_bitwise(
+        lambda: repro.sigkernel(x, y, use_pallas=False),
+        lambda: repro.sigkernel(x, y, backend="reference"))
+    _one_warning_bitwise(
+        lambda: repro.mmd2(X, X + 0.1, lam1=1, lam2=1, time_aug=True,
+                           unbiased=False),
+        lambda: repro.mmd2(X, X + 0.1, grid=GC(1, 1),
+                           transforms=TP(time_aug=True), unbiased=False))
+    _one_warning_bitwise(
+        lambda: repro.scoring_rule(X, X[0], lead_lag=True),
+        lambda: repro.scoring_rule(X, X[0], transforms=TP(lead_lag=True)))
+    _one_warning_bitwise(
+        lambda: delta_matrix(x, y, time_aug=True),
+        lambda: delta_matrix(x, y, transforms=TP(time_aug=True)))
+    # mixing a config-shim kwarg with the backend shim: still one warning
+    _one_warning_bitwise(
+        lambda: repro.sigkernel(x, y, lam1=1, use_pallas=False),
+        lambda: repro.sigkernel(x, y, grid=GC(1, 0), backend="reference"))
+
+
+def test_explicit_config_beats_contradicting_legacy():
+    x, y = paths(13, 2, 6, 2), paths(14, 2, 6, 2)
+    cfg = repro.GridConfig(2, 0)
+    dispatch.reset_warned_sites()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        k = repro.sigkernel(x, y, grid=cfg, lam1=1, lam2=1)  # legacy ignored
+    assert [x.category for x in w] == [DeprecationWarning]
+    assert "ignored" in str(w[0].message)
+    np.testing.assert_allclose(k, repro.sigkernel(x, y, grid=cfg), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# satellites: basepoint on-the-fly, t0/t1 plumbing, stream backend guard
+# ---------------------------------------------------------------------------
+
+def test_basepoint_on_the_fly_matches_materialised_oracle():
+    p = paths(20, 2, 7, 3)
+    for extra in (repro.TransformPipeline(basepoint=True),
+                  repro.TransformPipeline(basepoint=True, lead_lag=True),
+                  repro.TransformPipeline(basepoint=True, time_aug=True,
+                                          lead_lag=True)):
+        on_the_fly = repro.signature(p, 3, transforms=extra)
+        # oracle: materialise basepoint(path), then the rest of the pipeline
+        rest = repro.TransformPipeline(time_aug=extra.time_aug,
+                                       lead_lag=extra.lead_lag)
+        oracle = repro.signature(tf.basepoint(p), 3, transforms=rest)
+        np.testing.assert_allclose(on_the_fly, oracle, rtol=1e-5, atol=1e-6,
+                                   err_msg=str(extra))
+
+
+def test_basepoint_in_sigkernel_and_gram():
+    x, y = paths(21, 2, 6, 2), paths(22, 2, 5, 2)
+    cfg = repro.TransformPipeline(basepoint=True)
+    k = repro.sigkernel(x, y, transforms=cfg)
+    k_oracle = repro.sigkernel(tf.basepoint(x), tf.basepoint(y))
+    np.testing.assert_allclose(k, k_oracle, rtol=1e-5)
+    K = repro.sigkernel_gram(x, transforms=cfg)
+    K_oracle = repro.sigkernel_gram(tf.basepoint(x))
+    np.testing.assert_allclose(K, K_oracle, rtol=1e-5, atol=1e-6)
+
+
+def test_basepoint_increments_need_first_point():
+    z = jnp.zeros((2, 5, 2))
+    with pytest.raises(ValueError, match="first"):
+        tf.transform_increments(z, False, False, basepoint_=True)
+
+
+def test_t0_t1_reach_transform_increments():
+    p = paths(23, 2, 6, 2)
+    cfg = repro.TransformPipeline(time_aug=True, t0=-1.0, t1=3.0)
+    got = repro.signature(p, 3, transforms=cfg)
+    oracle = repro.signature(tf.time_augment(p, -1.0, 3.0), 3)
+    np.testing.assert_allclose(got, oracle, rtol=1e-5, atol=1e-6)
+    # and through the kernel Δ path
+    d = delta_matrix(p, p, transforms=cfg)
+    d_oracle = delta_matrix(tf.time_augment(p, -1.0, 3.0),
+                            tf.time_augment(p, -1.0, 3.0))
+    np.testing.assert_allclose(d, d_oracle, rtol=1e-5, atol=1e-6)
+
+
+def test_stream_with_explicit_pallas_raises():
+    p = paths(24, 2, 6, 2)
+    with pytest.raises(ValueError, match="stream"):
+        repro.signature(p, 3, stream=True, backend="pallas")
+    with pytest.raises(ValueError, match="stream"):
+        repro.logsignature(p, 3, stream=True, backend="pallas")
+    # auto still degrades silently to the pure-JAX scan
+    out = repro.signature(p, 3, stream=True, backend="auto")
+    assert out.shape[-2] == p.shape[-2] - 1
+
+
+def test_grid_config_validates():
+    with pytest.raises(ValueError, match="non-negative"):
+        repro.GridConfig(lam1=-1)
+    with pytest.raises(ValueError, match="non-negative"):
+        repro.GridConfig(lam1=1.5)
+    with pytest.raises(ValueError, match="non-negative"):
+        repro.GridConfig(lam1=True)  # a stray bool is a caller bug, not λ=1
+
+
+def test_delta_from_gram_reduces_to_increment_matmul():
+    x, y = paths(25, 2, 6, 3), paths(26, 2, 5, 3)
+    G = repro.Linear().gram(x, y)
+    np.testing.assert_allclose(delta_from_gram(G), delta_matrix(x, y),
+                               rtol=1e-4, atol=1e-6)

@@ -21,6 +21,7 @@ needs_hypothesis = pytest.mark.skipif(
     reason="property tests need hypothesis: pip install -r requirements-dev.txt")
 
 from repro.core import dispatch
+from repro.core.config import GridConfig, TransformPipeline
 from repro.core.gram import sigkernel_gram
 from repro.core.sigkernel import sigkernel
 
@@ -142,7 +143,9 @@ def test_deprecation_attributed_outside_repro_even_through_shims():
 def _agree_sigkernel(seed, l1, l2, Lx, Ly, d, time_aug, lead_lag):
     x = paths(seed, 2, Lx, d)
     y = paths(seed + 100, 2, Ly, d)
-    kw = dict(lam1=l1, lam2=l2, time_aug=time_aug, lead_lag=lead_lag)
+    kw = dict(grid=GridConfig(l1, l2),
+              transforms=TransformPipeline(time_aug=time_aug,
+                                           lead_lag=lead_lag))
 
     k_ref = sigkernel(x, y, backend="reference", **kw)
     g_ref = jax.grad(
@@ -163,7 +166,7 @@ def _agree_sigkernel(seed, l1, l2, Lx, Ly, d, time_aug, lead_lag):
 def _agree_gram(seed, l1, l2, Bx, By, L, d):
     X = paths(seed, Bx, L, d)
     Y = paths(seed + 100, By, L, d)
-    kw = dict(lam1=l1, lam2=l2)
+    kw = dict(grid=GridConfig(l1, l2))
 
     K_ref = sigkernel_gram(X, Y, backend="reference", **kw)
     g_ref = jax.grad(

@@ -76,13 +76,14 @@ def test_multistrip_small_T(Lx, Ly, T, l1, l2):
 
 
 def test_end_to_end_custom_vjp():
+    from repro.core.config import GridConfig
     from repro.core.sigkernel import sigkernel, delta_matrix, solve_goursat
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 3)) * 0.2
     y = jax.random.normal(jax.random.PRNGKey(2), (2, 7, 3)) * 0.2
-    k1 = sigkernel(x, y, lam1=1, lam2=1, backend="pallas")
-    k2 = sigkernel(x, y, lam1=1, lam2=1)
+    k1 = sigkernel(x, y, grid=GridConfig(1, 1), backend="pallas")
+    k2 = sigkernel(x, y, grid=GridConfig(1, 1))
     np.testing.assert_allclose(k1, k2, rtol=1e-5)
-    g1 = jax.grad(lambda q: sigkernel(q, y, lam1=1, lam2=1,
+    g1 = jax.grad(lambda q: sigkernel(q, y, grid=GridConfig(1, 1),
                                       backend="pallas").sum())(x)
     g2 = jax.grad(
         lambda q: solve_goursat(delta_matrix(q, y), 1, 1).sum())(x)

@@ -11,6 +11,7 @@ import pytest
 
 import repro.core.lyndon as ly
 import repro.core.tensoralg as ta
+from repro.core.config import TransformPipeline
 from repro.core.logsignature import (logsignature, logsignature_combine,
                                      logsignature_dim,
                                      logsignature_from_increments)
@@ -70,7 +71,8 @@ def test_transforms_on_the_fly(time_aug, lead_lag):
     if time_aug:
         q = tf.time_augment(q)
     d_eff = transformed_dim(2, time_aug, lead_lag)
-    got = logsignature(p, 3, time_aug=time_aug, lead_lag=lead_lag,
+    got = logsignature(p, 3, transforms=TransformPipeline(
+        time_aug=time_aug, lead_lag=lead_lag),
                        backend="reference")
     np.testing.assert_allclose(got, oracle(q, d_eff, 3, "lyndon"),
                                rtol=1e-6, atol=1e-6)

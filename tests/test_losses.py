@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.config import GridConfig
 from repro.core import losses
 from repro.data.synthetic import gbm_paths, fbm_paths
 
@@ -16,8 +17,8 @@ def test_mmd_same_distribution_small():
     X = gbm_paths(k1, 12, 10, 2)
     Y = gbm_paths(k2, 12, 10, 2)
     Z = fbm_paths(jax.random.PRNGKey(3), 12, 10, 2) * 0.5
-    same = float(losses.mmd2(X, Y, lam1=1, lam2=1))
-    diff = float(losses.mmd2(X, Z, lam1=1, lam2=1))
+    same = float(losses.mmd2(X, Y, grid=GridConfig(1, 1)))
+    diff = float(losses.mmd2(X, Z, grid=GridConfig(1, 1)))
     assert diff > same
 
 

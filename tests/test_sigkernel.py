@@ -11,6 +11,7 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 import repro.core.tensoralg as ta
+from repro.core.config import GridConfig, TransformPipeline
 from repro.core.signature import signature
 from repro.core.sigkernel import (sigkernel, sigkernel_gram, delta_matrix,
                                   solve_goursat, solve_goursat_grad,
@@ -26,15 +27,15 @@ def paths(seed, B=2, L=6, d=2, scale=0.2):
 
 def test_kernel_matches_truncated_inner_product():
     x, y = paths(1), paths(2, L=7)
-    k_pde = sigkernel(x, y, lam1=3, lam2=3)
+    k_pde = sigkernel(x, y, grid=GridConfig(3, 3))
     k_tr = ta.sig_inner(signature(x, 10), signature(y, 10), 2, 10)
     np.testing.assert_allclose(k_pde, k_tr, rtol=2e-4)
 
 
 def test_symmetry():
     x, y = paths(3), paths(4)
-    np.testing.assert_allclose(sigkernel(x, y, lam1=1, lam2=2),
-                               sigkernel(y, x, lam1=2, lam2=1), rtol=1e-5)
+    np.testing.assert_allclose(sigkernel(x, y, grid=GridConfig(1, 2)),
+                               sigkernel(y, x, grid=GridConfig(2, 1)), rtol=1e-5)
 
 
 def test_constant_path_gives_one():
@@ -48,7 +49,7 @@ def test_constant_path_gives_one():
 def test_exact_backward_vs_autodiff(seed, l1, l2):
     x = paths(seed, 2, 5, 2)
     y = paths(seed + 100, 2, 6, 2)
-    g1 = jax.grad(lambda q: sigkernel(q, y, lam1=l1, lam2=l2).sum())(x)
+    g1 = jax.grad(lambda q: sigkernel(q, y, grid=GridConfig(l1, l2)).sum())(x)
     g2 = jax.grad(
         lambda q: solve_goursat(delta_matrix(q, y), l1, l2).sum())(x)
     np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
@@ -56,7 +57,7 @@ def test_exact_backward_vs_autodiff(seed, l1, l2):
 
 def test_backward_wrt_second_argument():
     x, y = paths(6), paths(7)
-    g1 = jax.grad(lambda q: sigkernel(x, q, lam1=1, lam2=1).sum())(y)
+    g1 = jax.grad(lambda q: sigkernel(x, q, grid=GridConfig(1, 1)).sum())(y)
     g2 = jax.grad(
         lambda q: solve_goursat(delta_matrix(x, q), 1, 1).sum())(y)
     np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
@@ -64,8 +65,8 @@ def test_backward_wrt_second_argument():
 
 def test_gradient_finite_differences():
     x, y = paths(8, 1, 5, 2), paths(9, 1, 5, 2)
-    f = lambda q: float(sigkernel(jnp.asarray(q), y, lam1=1, lam2=1)[0])
-    g = jax.grad(lambda q: sigkernel(q, y, lam1=1, lam2=1).sum())(x)
+    f = lambda q: float(sigkernel(jnp.asarray(q), y, grid=GridConfig(1, 1))[0])
+    g = jax.grad(lambda q: sigkernel(q, y, grid=GridConfig(1, 1)).sum())(x)
     x0 = np.asarray(x)
     eps = 1e-4
     for idx in [(0, 0, 0), (0, 2, 1), (0, 4, 0)]:
@@ -102,16 +103,16 @@ def test_exact_backward_beats_pde_approximation():
 
 def test_gram_matrix():
     X, Y = paths(12, 3), paths(13, 4)
-    K = sigkernel_gram(X, Y, lam1=1, lam2=1)
+    K = sigkernel_gram(X, Y, grid=GridConfig(1, 1))
     assert K.shape == (3, 4)
     np.testing.assert_allclose(K[1, 2],
-                               sigkernel(X[1], Y[2], lam1=1, lam2=1),
+                               sigkernel(X[1], Y[2], grid=GridConfig(1, 1)),
                                rtol=1e-5)
 
 
 def test_gram_psd():
     X = paths(14, 4, 6, 2)
-    K = sigkernel_gram(X, X, lam1=2, lam2=2)
+    K = sigkernel_gram(X, X, grid=GridConfig(2, 2))
     np.testing.assert_allclose(K, K.T, rtol=1e-4, atol=1e-5)
     evals = np.linalg.eigvalsh(np.asarray(K, np.float64))
     assert evals.min() > -1e-4
@@ -119,8 +120,9 @@ def test_gram_psd():
 
 def test_transforms_in_kernel():
     x, y = paths(15), paths(16)
-    k1 = sigkernel(x, y, time_aug=True, lead_lag=True, lam1=1, lam2=1)
+    k1 = sigkernel(x, y, transforms=TransformPipeline(time_aug=True, lead_lag=True),
+                   grid=GridConfig(1, 1))
     import repro.core.transforms as tf
     k2 = sigkernel(tf.time_augment(tf.lead_lag(x)),
-                   tf.time_augment(tf.lead_lag(y)), lam1=1, lam2=1)
+                   tf.time_augment(tf.lead_lag(y)), grid=GridConfig(1, 1))
     np.testing.assert_allclose(k1, k2, rtol=1e-5)

@@ -12,6 +12,7 @@ from hypothesis import given, settings, strategies as st
 
 import repro.core.tensoralg as ta
 import repro.core.transforms as tf
+from repro.core.config import TransformPipeline
 from repro.core.signature import (signature, signature_direct,
                                   signature_combine, path_increments)
 
@@ -105,7 +106,8 @@ def test_transforms_on_the_fly_vs_materialised(time_aug, lead_lag):
     if time_aug:
         q = tf.time_augment(q)
     np.testing.assert_allclose(
-        signature(p, 3, time_aug=time_aug, lead_lag=lead_lag),
+        signature(p, 3, transforms=TransformPipeline(
+            time_aug=time_aug, lead_lag=lead_lag)),
         signature(q, 3), rtol=1e-5, atol=1e-6)
 
 
@@ -118,6 +120,6 @@ def test_transform_increments_match_path_increments():
 
 def test_transforms_differentiable():
     p = paths(10, 1, 6, 2)
-    g = jax.grad(lambda q: signature(q, 3, lead_lag=True,
-                                     time_aug=True).sum())(p)
+    g = jax.grad(lambda q: signature(q, 3, transforms=TransformPipeline(
+        lead_lag=True, time_aug=True)).sum())(p)
     assert np.isfinite(np.asarray(g)).all()
