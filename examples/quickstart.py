@@ -97,3 +97,25 @@ print("d gram.sum / d sigma:", float(dsig))
 sig_bp = repro.Signature(depth=3,
                          transforms=repro.TransformPipeline(basepoint=True))
 print("basepoint signature:", sig_bp(paths).shape)
+
+# --- ragged batches: variable-length paths in one dense array ---------------
+# real corpora have unequal lengths; lengths= makes each path behave as if
+# truncated to its own length (padding content is ignored — even NaN), with
+# a per-path time grid that ends at t1 at the TRUE last point
+import numpy as np
+
+lens = jnp.asarray([6, 50, 23, 9, 41, 17, 50, 30])  # true points per path
+ragged_sig = repro.signature(paths, depth=4, lengths=lens)
+oracle = repro.signature(paths[0:1, :6], depth=4)    # truncated by hand
+print("ragged == truncated:",
+      bool(np.array_equal(np.asarray(ragged_sig[0]), np.asarray(oracle[0]))))
+
+# Gram over two differently-ragged batches, any backend
+K_rag = repro.sigkernel_gram(x, y, lengths=jnp.asarray([8, 50, 21, 34]),
+                             lengths_y=jnp.asarray([50, 5, 44, 12]))
+print("ragged gram:", K_rag.shape)
+
+# jitting yourself? canonicalise outside the trace so nearby max-lengths
+# share one compile (power-of-two length buckets)
+xp, lp = repro.pad_ragged(x, jnp.asarray([8, 50, 21, 34]))
+print("bucketed length:", xp.shape[1], "=", repro.bucket_length(x.shape[1]))

@@ -21,6 +21,7 @@ from .core.logsignature import logsignature
 from .core.losses import mmd2, scoring_rule
 from .core.signature import signature
 from .core.sigkernel import sigkernel
+from .core.transforms import bucket_length, pad_ragged
 from . import core
 
 __version__ = "0.2.0"
@@ -33,6 +34,8 @@ __all__ = [
     # functional API
     "signature", "logsignature", "sigkernel", "sigkernel_gram",
     "mmd2", "scoring_rule",
+    # ragged-batch helpers (pre-jit canonicalisation; docs/api/public.md)
+    "pad_ragged", "bucket_length",
     # namespaces
     "core",
     "__version__",

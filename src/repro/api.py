@@ -41,6 +41,8 @@ class Signature:
 
     ``Signature(depth, transforms=..., backend=..., stream=...)`` —
     ``__call__(path)`` maps (..., L, d) paths to flat signatures.
+    ``__call__(path, lengths=...)`` treats the batch as ragged (per-path
+    true point counts; see docs/api/public.md § Ragged batches).
     """
 
     depth: int
@@ -48,9 +50,10 @@ class Signature:
     backend: str = "auto"
     stream: bool = False
 
-    def __call__(self, path: jax.Array) -> jax.Array:
+    def __call__(self, path: jax.Array, lengths=None) -> jax.Array:
         return _signature(path, self.depth, transforms=self.transforms,
-                          backend=self.backend, stream=self.stream)
+                          backend=self.backend, stream=self.stream,
+                          lengths=lengths)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,10 +66,11 @@ class LogSignature:
     backend: str = "auto"
     stream: bool = False
 
-    def __call__(self, path: jax.Array) -> jax.Array:
+    def __call__(self, path: jax.Array, lengths=None) -> jax.Array:
         return _logsignature(path, self.depth, mode=self.mode,
                              transforms=self.transforms,
-                             backend=self.backend, stream=self.stream)
+                             backend=self.backend, stream=self.stream,
+                             lengths=lengths)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,23 +99,32 @@ class SigKernel:
         return dict(transforms=self.transforms, grid=self.grid,
                     static_kernel=self.static_kernel, backend=self.backend)
 
-    def __call__(self, x: jax.Array, y: jax.Array) -> jax.Array:
-        return _sigkernel(x, y, **self._kw())
+    def __call__(self, x: jax.Array, y: jax.Array, *,
+                 lengths_x=None, lengths_y=None) -> jax.Array:
+        return _sigkernel(x, y, lengths_x=lengths_x, lengths_y=lengths_y,
+                          **self._kw())
 
     def gram(self, X: jax.Array, Y: Optional[jax.Array] = None, *,
              row_block: Optional[int] = None,
-             symmetric: Optional[bool] = None) -> jax.Array:
+             symmetric: Optional[bool] = None,
+             lengths=None, lengths_y=None) -> jax.Array:
         return _gram.sigkernel_gram(X, Y, row_block=row_block,
-                                    symmetric=symmetric, **self._kw())
+                                    symmetric=symmetric, lengths=lengths,
+                                    lengths_y=lengths_y, **self._kw())
 
     def mmd2(self, X: jax.Array, Y: jax.Array, *, unbiased: bool = True,
-             row_block: Optional[int] = None) -> jax.Array:
+             row_block: Optional[int] = None,
+             lengths=None, lengths_y=None) -> jax.Array:
         return _losses.mmd2(X, Y, unbiased=unbiased, row_block=row_block,
+                            lengths=lengths, lengths_y=lengths_y,
                             **self._kw())
 
     def scoring_rule(self, X: jax.Array, y: jax.Array, *,
-                     row_block: Optional[int] = None) -> jax.Array:
-        return _losses.scoring_rule(X, y, row_block=row_block, **self._kw())
+                     row_block: Optional[int] = None,
+                     lengths=None, length_y=None) -> jax.Array:
+        return _losses.scoring_rule(X, y, row_block=row_block,
+                                    lengths=lengths, length_y=length_y,
+                                    **self._kw())
 
 
 _pytree(Signature, data_fields=("transforms",),

@@ -104,10 +104,17 @@ def key_shape(op: str, shape) -> Tuple[int, ...]:
     return bucket(shape[:n]) + tuple(int(s) for s in shape[n:])
 
 
-def cache_key(op: str, shape, dtype="float32") -> str:
-    """``op|platform|dtype|b1xb2x...`` — the on-disk cache key."""
+def cache_key(op: str, shape, dtype="float32", *, ragged: bool = False) -> str:
+    """``op|platform|dtype|b1xb2x...[|ragged]`` — the on-disk cache key.
+
+    ``ragged=True`` (variable-length ``lengths=`` workloads) is part of the
+    key: the same padded shape does very different work when most of it is
+    masked, so a dense winner must never shadow the ragged measurement and
+    vice versa.
+    """
     dims = "x".join(str(s) for s in key_shape(op, shape))
-    return f"{op}|{jax.default_backend()}|{jnp.dtype(dtype).name}|{dims}"
+    key = f"{op}|{jax.default_backend()}|{jnp.dtype(dtype).name}|{dims}"
+    return key + "|ragged" if ragged else key
 
 
 # ---------------------------------------------------------------------------
@@ -166,22 +173,25 @@ def _store(key: str, entry: dict) -> None:
     invalidate_memo()
 
 
-def cache_entry(op: str, shape, dtype="float32") -> Optional[dict]:
+def cache_entry(op: str, shape, dtype="float32", *,
+                ragged: bool = False) -> Optional[dict]:
     """Full cached record (backend, timings, tuned_at) or None."""
     if not enabled():
         return None
-    entry = _entries(cache_path()).get(cache_key(op, shape, dtype))
+    entry = _entries(cache_path()).get(
+        cache_key(op, shape, dtype, ragged=ragged))
     return entry if isinstance(entry, dict) else None
 
 
-def lookup(op: str, shape, dtype="float32") -> Optional[str]:
+def lookup(op: str, shape, dtype="float32", *,
+           ragged: bool = False) -> Optional[str]:
     """Cached winning backend name for this key, or None (cold/disabled).
 
     Never runs a measurement.  The caller (``dispatch.resolve``) validates
     the name against the live registry, so stale entries degrade to the
     static heuristics rather than erroring.
     """
-    entry = cache_entry(op, shape, dtype)
+    entry = cache_entry(op, shape, dtype, ragged=ragged)
     if entry is None:
         return None
     name = entry.get("backend")
@@ -200,8 +210,34 @@ def candidates(op: str) -> Tuple[str, ...]:
     return names or dispatch.backends_for(op)
 
 
-def _runner(op: str, shape, dtype, backend: str):
-    """Zero-arg jitted callable exercising ``op`` at the bucketed shape."""
+def _ragged_lengths(batch: int, points: int):
+    """Deterministic length spread for ragged tuning runs: [~P/2, P]."""
+    import numpy as np
+    lo = max(2, points // 2)
+    return jnp.asarray(np.linspace(lo, points, batch).round().astype("int32"))
+
+
+def _ragged_points(n: int) -> int:
+    """Point count for a ragged runner targeting a length-like key dim ``n``.
+
+    Ragged call sites compute their cache-key shape *after*
+    ``pad_ragged`` bucketing, so the key's length dims are already padded
+    (power-of-two) sizes.  The runner must therefore build a batch whose
+    padded length axis equals the key dim — ``bucket_length(n)`` points, a
+    no-op re-pad — rather than the dense runner's ``n + 1`` points, which
+    would re-bucket to ~2n and measure twice the workload the key denotes.
+    """
+    from repro.core.transforms import bucket_length
+    return bucket_length(n)
+
+
+def _runner(op: str, shape, dtype, backend: str, ragged: bool = False):
+    """Zero-arg jitted callable exercising ``op`` at the bucketed shape.
+
+    With ``ragged=True`` the runner passes a representative ``lengths=``
+    spread (half- to full-length) so the measurement reflects the masked
+    variable-length workload the key denotes.
+    """
     from repro.core.gram import sigkernel_gram
     from repro.core.logsignature import logsignature
     from repro.core.signature import signature
@@ -210,43 +246,53 @@ def _runner(op: str, shape, dtype, backend: str):
     key = jax.random.PRNGKey(0)
     if op in ("signature", "logsignature"):
         L, d, depth = shape
-        path = (jax.random.normal(key, (_TUNE_BATCH, max(L, 2) + 1, d))
+        pts = _ragged_points(max(L, 2)) if ragged else max(L, 2) + 1
+        path = (jax.random.normal(key, (_TUNE_BATCH, pts, d))
                 * 0.2).astype(dtype)
-        if op == "signature":
-            f = jax.jit(lambda p: signature(p, depth, backend=backend))
-        else:
-            f = jax.jit(lambda p: logsignature(p, depth, backend=backend))
+        lens = _ragged_lengths(_TUNE_BATCH, pts) if ragged else None
+        fn = signature if op == "signature" else logsignature
+        f = jax.jit(lambda p: fn(p, depth, backend=backend, lengths=lens))
         return lambda: f(path)
     if op == "sigkernel":
         nx, ny, d = shape
-        x = (jax.random.normal(key, (_TUNE_BATCH, nx + 1, d)) * 0.1
+        px = _ragged_points(nx) if ragged else nx + 1
+        py = _ragged_points(ny) if ragged else ny + 1
+        x = (jax.random.normal(key, (_TUNE_BATCH, px, d)) * 0.1
              ).astype(dtype)
         y = (jax.random.normal(jax.random.PRNGKey(1),
-                               (_TUNE_BATCH, ny + 1, d)) * 0.1).astype(dtype)
-        f = jax.jit(lambda a, b: sigkernel(a, b, backend=backend))
+                               (_TUNE_BATCH, py, d)) * 0.1).astype(dtype)
+        lx = _ragged_lengths(_TUNE_BATCH, px) if ragged else None
+        ly = _ragged_lengths(_TUNE_BATCH, py) if ragged else None
+        f = jax.jit(lambda a, b: sigkernel(a, b, backend=backend,
+                                           lengths_x=lx, lengths_y=ly))
         return lambda: f(x, y)
     if op == "gram":
         Bx, By, nx, ny, d = shape
-        X = (jax.random.normal(key, (Bx, nx + 1, d)) * 0.1).astype(dtype)
-        Y = (jax.random.normal(jax.random.PRNGKey(1), (By, ny + 1, d)) * 0.1
+        px = _ragged_points(nx) if ragged else nx + 1
+        py = _ragged_points(ny) if ragged else ny + 1
+        X = (jax.random.normal(key, (Bx, px, d)) * 0.1).astype(dtype)
+        Y = (jax.random.normal(jax.random.PRNGKey(1), (By, py, d)) * 0.1
              ).astype(dtype)
+        lx = _ragged_lengths(Bx, px) if ragged else None
+        ly = _ragged_lengths(By, py) if ragged else None
         f = jax.jit(lambda a, b: sigkernel_gram(
-            a, b, backend=backend, symmetric=False))
+            a, b, backend=backend, symmetric=False,
+            lengths=lx, lengths_y=ly))
         return lambda: f(X, Y)
     raise ValueError(f"no tuning runner for op {op!r}")
 
 
 def measure(op: str, shape, dtype="float32", *, repeats: int = 3,
-            warmup: int = 1) -> Dict[str, float]:
+            warmup: int = 1, ragged: bool = False) -> Dict[str, float]:
     """Steady-state seconds per call for every candidate backend."""
     shape = key_shape(op, shape)
-    return {b: timer.bench(_runner(op, shape, dtype, b),
+    return {b: timer.bench(_runner(op, shape, dtype, b, ragged),
                            repeats=repeats, warmup=warmup)
             for b in candidates(op)}
 
 
 def tune(op: str, shape, dtype="float32", *, repeats: int = 3,
-         warmup: int = 1, force: bool = False) -> str:
+         warmup: int = 1, force: bool = False, ragged: bool = False) -> str:
     """Measure candidates, persist the winner, return its name.
 
     A warm cache key returns the stored winner with **zero** timed runs
@@ -254,13 +300,14 @@ def tune(op: str, shape, dtype="float32", *, repeats: int = 3,
     happens (this is an explicit call) but nothing is persisted.
     """
     if not force:
-        cached = lookup(op, shape, dtype)
+        cached = lookup(op, shape, dtype, ragged=ragged)
         if cached is not None and cached in candidates(op):
             return cached
-    times = measure(op, shape, dtype, repeats=repeats, warmup=warmup)
+    times = measure(op, shape, dtype, repeats=repeats, warmup=warmup,
+                    ragged=ragged)
     winner = min(times, key=times.get)
     if enabled():
-        _store(cache_key(op, shape, dtype), {
+        _store(cache_key(op, shape, dtype, ragged=ragged), {
             "backend": winner,
             "timings": times,
             "tuned_at": time.time(),

@@ -259,6 +259,84 @@ def rbf_lift(mode: str = "smoke", repeats: int = 3) -> List[dict]:
 
 
 # ---------------------------------------------------------------------------
+# ragged Gram — variable-length (lengths=) batches through the Gram engine;
+# timed per usable backend and agreement-checked against the per-path
+# truncated oracle, so the masked hot path is regression-gated like the
+# dense one (see docs/solver_guide.md § Ragged batches)
+# ---------------------------------------------------------------------------
+
+_RAGGED_CELLS = {
+    "smoke": [(4, 12, 3)],
+    "quick": [(8, 32, 4)],
+    "full": [(32, 128, 8)],
+}
+
+
+def _ragged_spread(B: int, L: int, reverse: bool = False) -> jax.Array:
+    """Deterministic half-to-full length spread — the one policy autotune
+    measures ragged keys with, so the bench times what the cache tuned."""
+    lens = autotune._ragged_lengths(B, L)
+    return lens[::-1] if reverse else lens
+
+
+def ragged_gram(mode: str = "smoke", repeats: int = 3) -> List[dict]:
+    from repro.core.config import TransformPipeline
+    cfg = TransformPipeline(time_aug=True)
+    entries = []
+    for (B, L, d) in _RAGGED_CELLS[_check_mode(mode)]:
+        X = _paths(6, B, L, d, 0.1)
+        Y = _paths(7, B, L, d, 0.1)
+        lx = _ragged_spread(B, L)
+        ly = _ragged_spread(B, L, reverse=True)
+        tag = f"ragged_gram_B{B}_L{L}_d{d}"
+        meta = dict(op="gram", B=B, L=L, d=d, ragged=True)
+
+        t_ref = None
+        for b in _usable_gram_backends():
+            f = jax.jit(lambda x, y, b=b: sigkernel_gram(
+                x, y, backend=b, transforms=cfg, symmetric=False,
+                lengths=lx, lengths_y=ly))
+            t = timer.bench(f, X, Y, repeats=repeats)
+            derived = "" if t_ref is None else \
+                f"speedup_vs_reference={t_ref / t:.2f}x"
+            if b == "reference":
+                t_ref = t
+            entries.append(_t(f"{tag}_{b}", t, derived, backend=b, **meta))
+        g = jax.jit(jax.grad(lambda x, y: sigkernel_gram(
+            x, y, transforms=cfg, symmetric=False,
+            lengths=lx, lengths_y=ly).sum()))
+        entries.append(_t(f"{tag}_grad",
+                          timer.bench(g, X, Y, repeats=repeats), **meta))
+        f_sym = jax.jit(lambda x: sigkernel_gram(
+            x, transforms=cfg, lengths=lx))
+        entries.append(_t(f"{tag}_symmetric",
+                          timer.bench(f_sym, X, repeats=repeats), **meta))
+
+        # agreement vs the per-path truncated oracle on a sampled pair set
+        # (bitwise for the linear lift).  Only smoke — whose cells are tiny
+        # — sweeps EVERY registered backend; quick/full would drag
+        # interpret-mode Pallas through big grids for hours on CPU, so they
+        # check the usable set (same policy as smoke_checks vs gram timing)
+        agree_backends = dispatch.backends_for("gram") if mode == "smoke" \
+            else _usable_gram_backends()
+        lx_np, ly_np = np.asarray(lx), np.asarray(ly)
+        pairs = [(i, (i + 1) % B) for i in range(min(B, 4))]
+        for b in agree_backends:
+            K = sigkernel_gram(X, Y, backend=b, transforms=cfg,
+                               symmetric=False, lengths=lx, lengths_y=ly)
+            for (i, j) in pairs:
+                want = sigkernel_gram(
+                    X[i:i + 1, :lx_np[i]], Y[j:j + 1, :ly_np[j]],
+                    backend=b, transforms=cfg, symmetric=False)
+                np.testing.assert_allclose(
+                    float(K[i, j]), float(want[0, 0]), rtol=1e-6,
+                    err_msg=f"ragged gram {b} disagrees with truncated "
+                            f"oracle at pair ({i},{j})")
+            entries.append(_chk(f"{tag}_agreement_{b}", backend=b, **meta))
+    return entries
+
+
+# ---------------------------------------------------------------------------
 # Table 3 — log-signatures: epilogue cost per mode + compression ratio
 # ---------------------------------------------------------------------------
 

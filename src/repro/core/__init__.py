@@ -15,7 +15,8 @@ from .sigkernel import (sigkernel, solve_goursat,
 from .gram import sigkernel_gram
 from .sigkernel import sigkernel_gram_blocked
 from .transforms import (time_augment, lead_lag, basepoint,
-                         transform_increments, transform_path)
+                         transform_increments, transform_path,
+                         pad_ragged, bucket_length)
 from . import gram
 from . import losses
 
@@ -29,5 +30,6 @@ __all__ = [
     "sigkernel", "sigkernel_gram", "sigkernel_gram_blocked",
     "solve_goursat", "solve_goursat_grad", "delta_matrix", "time_augment",
     "lead_lag", "basepoint", "transform_increments", "transform_path",
+    "pad_ragged", "bucket_length",
     "losses",
 ]

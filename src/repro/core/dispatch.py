@@ -36,6 +36,8 @@ shims: :func:`canonicalize` maps them onto backend names with a
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 import sys
 import threading
 import warnings
@@ -116,6 +118,25 @@ register(BackendSpec("pallas_fused", frozenset({"sigkernel", "gram"}),
 #: user call-sites that already got their DeprecationWarning this process
 _warned_sites: set = set()
 
+#: hard cap on the dedup set: a pathological caller minting fresh call-sites
+#: forever (exec'd snippets, generated code) must not grow memory without
+#: bound — past the cap new sites still warn, they just stop deduplicating
+_MAX_WARNED_SITES = 4096
+
+#: this library's own package directory — frames under it are shim-internal
+_PKG_DIR = os.path.dirname(os.path.dirname(os.path.realpath(__file__))) \
+    + os.sep
+
+
+@functools.lru_cache(maxsize=1024)
+def _is_own_frame_file(filename: str) -> bool:
+    """Whether a frame's co_filename lives under this library's install dir.
+
+    Cached per filename: the frame walk runs on *every* deprecated call
+    (even already-deduplicated ones), and realpath stats the filesystem.
+    """
+    return os.path.realpath(filename).startswith(_PKG_DIR)
+
 
 def reset_warned_sites() -> None:
     """Forget which call-sites have warned (tests)."""
@@ -125,9 +146,11 @@ def reset_warned_sites() -> None:
 def _warn_deprecated(message: str) -> None:
     """Emit ``DeprecationWarning`` once per *user call-site*.
 
-    The warning is attributed to the first stack frame outside the
-    ``repro`` package (so internal shims — ``sigkernel.sigkernel_gram``,
-    ``sigkernel_gram_blocked``, the losses — never absorb it) and
+    The warning is attributed to the first stack frame whose file lives
+    outside this library's own install directory (so internal shims —
+    ``sigkernel.sigkernel_gram``, ``sigkernel_gram_blocked``, the losses —
+    never absorb it, while a *user* script or package that merely happens
+    to be named ``repro`` is correctly treated as the call-site) and
     deduplicated on that frame's (filename, lineno): a training loop
     passing ``use_pallas=`` every step warns once, not once per call,
     while distinct call-sites each get their own warning.  The dedup key
@@ -137,15 +160,16 @@ def _warn_deprecated(message: str) -> None:
     """
     depth = 1  # sys._getframe index; 0 is this helper
     frame = sys._getframe(1)
-    while frame is not None and \
-            frame.f_globals.get("__name__", "").split(".", 1)[0] == "repro":
+    while frame is not None and _is_own_frame_file(
+            frame.f_code.co_filename):
         frame = frame.f_back
         depth += 1
     if frame is not None:
         site = (frame.f_code.co_filename, frame.f_lineno)
         if site in _warned_sites:
             return
-        _warned_sites.add(site)
+        if len(_warned_sites) < _MAX_WARNED_SITES:
+            _warned_sites.add(site)
     # warnings stacklevel n attributes to sys._getframe(n - 1) from here
     warnings.warn(message, DeprecationWarning, stacklevel=depth + 1)
 
@@ -205,7 +229,7 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _autotuned(op: str, shape, dtype) -> Optional[str]:
+def _autotuned(op: str, shape, dtype, ragged: bool = False) -> Optional[str]:
     """Winning backend from the on-disk autotune cache, or None.
 
     None (→ static heuristics) whenever the cache is cold, autotuning is
@@ -213,6 +237,8 @@ def _autotuned(op: str, shape, dtype) -> Optional[str]:
     or the cached name no longer denotes a live backend serving ``op``.
     Lookups never run a measurement — tuning happens only through
     :func:`repro.bench.autotune.tune` (the bench suite does this).
+    ``ragged`` keys variable-length workloads separately: the same padded
+    shape does very different work when most of it is masked.
     """
     if shape is None:
         return None
@@ -223,7 +249,7 @@ def _autotuned(op: str, shape, dtype) -> Optional[str]:
     if not autotune.enabled():
         return None
     try:
-        name = autotune.lookup(op, shape, dtype or "float32")
+        name = autotune.lookup(op, shape, dtype or "float32", ragged=ragged)
     except (ValueError, TypeError):
         return None
     spec = _REGISTRY.get(name)
@@ -235,7 +261,8 @@ def _autotuned(op: str, shape, dtype) -> Optional[str]:
 
 
 def resolve(backend: str, *, op: str, grid_cells: Optional[int] = None,
-            shape=None, dtype=None, allow_fused: bool = True) -> str:
+            shape=None, dtype=None, allow_fused: bool = True,
+            ragged: bool = False) -> str:
     """Resolve ``"auto"`` to a concrete backend name for ``op``.
 
     When ``shape`` is given (the per-op cache-key shape documented in
@@ -247,11 +274,13 @@ def resolve(backend: str, *, op: str, grid_cells: Optional[int] = None,
 
     ``allow_fused=False`` keeps ``"auto"`` off fused-Δ backends — used when
     Δ is not a plain increment matmul (non-linear static-kernel lifts),
-    which a fused kernel cannot build in VMEM.
+    which a fused kernel cannot build in VMEM.  ``ragged=True`` marks a
+    variable-length (``lengths=``) workload: its autotune cache key is kept
+    separate from the dense key of the same padded shape.
     """
     if backend != "auto":
         return _validate(backend, op)
-    tuned = _autotuned(op, shape, dtype)
+    tuned = _autotuned(op, shape, dtype, ragged)
     if tuned is not None and (allow_fused or not get(tuned).fused):
         return tuned
     if op in ("signature", "logsignature"):

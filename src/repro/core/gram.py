@@ -39,17 +39,23 @@ from .sigkernel import _sigkernel_from_delta
 from repro.parallel.api import shard
 
 
-def _prepare(paths: jax.Array, cfg, kernel) -> jax.Array:
+def _prepare(paths: jax.Array, cfg, kernel, lengths=None) -> jax.Array:
     """Per-path stream the pair solvers consume: transformed *increments*
     for increment-lifting (linear) kernels, transformed *points* for
     everything else (the Δ-from-Gram path needs actual points).
 
     Either way zero-padding rows with zeros is exact: zero increments and
     all-zero point rows both give Δ = 0 ⇒ k = 1 rows, which are dropped.
+
+    With ``lengths=`` (ragged batches) the streams come back *end-aligned*:
+    each path's padding turns into exactly-zero leading Δ rows/columns for
+    any pairing, which leaves the Goursat boundary of ones bitwise intact —
+    so everything downstream of this function (pair gathers, row blocks,
+    the fused kernels, the symmetric fast path) is ragged-oblivious.
     """
     if kernel.lifts_increments:
-        return tf.pipeline_increments(paths, cfg)
-    return tf.transform_path(paths, cfg)
+        return tf.pipeline_increments(paths, cfg, lengths, align="end")
+    return tf.transform_path(paths, cfg, lengths, align="end")
 
 
 def _pair_delta(sa: jax.Array, sb: jax.Array, kernel) -> jax.Array:
@@ -84,6 +90,7 @@ def _gram_block(sxb: jax.Array, sY: jax.Array, kernel, backend: str,
 def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
                    backend: str = "auto", row_block: Optional[int] = None,
                    symmetric: Optional[bool] = None,
+                   lengths=None, lengths_y=None,
                    transforms=None, grid=None, static_kernel=None,
                    lam1=UNSET, lam2=UNSET,
                    time_aug=UNSET, lead_lag=UNSET,
@@ -96,6 +103,14 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
         (solves only the upper triangle — ≈2× fewer PDE solves; large
         batches are auto-chunked so the pair gather never exceeds a fixed
         HBM budget).
+      lengths / lengths_y: optional (Bx,) / (By,) int arrays of per-path
+        true point counts for ragged batches.  ``K[a, b]`` is then exactly
+        ``k(X_a[:lengths[a]], Y_b[:lengths_y[b]])``: padding is masked into
+        end-aligned streams whose zero Δ rows/columns leave the Goursat
+        boundary bitwise intact, on every backend including the fused-Δ
+        Pallas kernels (see docs/solver_guide.md).  Length axes are padded
+        to power-of-two buckets so nearby sizes share one jit trace;
+        ``lengths_y`` requires ``Y``.
       backend: a name from :mod:`repro.core.dispatch` ("reference" |
         "antidiag" | "pallas" | "pallas_fused") or ``"auto"`` (platform- and
         shape-aware; "pallas_fused" on TPU).  ``"pallas_fused"`` requires
@@ -130,11 +145,19 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
     if not symmetric and Y is None:
         raise ValueError("symmetric=False requires Y (pass Y=X for the "
                          "full symmetric Gram without the fast path)")
+    if lengths_y is not None and Y is None:
+        raise ValueError("lengths_y= requires Y; for the symmetric Gram "
+                         "pass lengths= (it applies to both sides)")
 
     cfg, g, kernel = resolve_kernel_configs(
         transforms, grid, static_kernel, time_aug=time_aug,
         lead_lag=lead_lag, lam1=lam1, lam2=lam2)
     lam1, lam2 = g.lam1, g.lam2
+    if lengths is not None:
+        X, lengths = tf.pad_ragged(X, lengths)
+    if lengths_y is not None:
+        Y, lengths_y = tf.pad_ragged(Y, lengths_y)
+    ragged = lengths is not None or lengths_y is not None
     backend = dispatch.canonicalize(backend, op="gram",
                                     use_pallas=use_pallas, solver=solver)
     if backend == "pallas_fused" and not kernel.lifts_increments:
@@ -149,16 +172,16 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
         backend, op="gram", grid_cells=(Lx << lam1) * (Ly << lam2),
         shape=(X.shape[0], By, Lx << lam1, Ly << lam2,
                cfg.transformed_dim(X.shape[-1])),
-        dtype=X.dtype, allow_fused=kernel.lifts_increments)
+        dtype=X.dtype, allow_fused=kernel.lifts_increments, ragged=ragged)
 
-    sX = _prepare(X, cfg, kernel)
+    sX = _prepare(X, cfg, kernel, lengths)
     sX = shard(sX, "batch", None, None)
     Bx = sX.shape[0]
 
     if symmetric:
         return _symmetric_gram(sX, kernel, backend, row_block, lam1, lam2)
 
-    sY = _prepare(Y, cfg, kernel)
+    sY = _prepare(Y, cfg, kernel, lengths_y)
     sY = shard(sY, "model", None, None)
     By = sY.shape[0]
 

@@ -97,7 +97,8 @@ def logsignature_from_increments(z: jax.Array, depth: int,
 
 def logsignature(path: jax.Array, depth: int, *, mode: str = "lyndon",
                  transforms=None, backend: str = "auto",
-                 stream: bool = False, time_aug=dispatch_mod.UNSET,
+                 stream: bool = False, lengths=None,
+                 time_aug=dispatch_mod.UNSET,
                  lead_lag=dispatch_mod.UNSET, use_pallas=None) -> jax.Array:
     """Truncated log-signature of a batch of piecewise-linear paths.
 
@@ -116,6 +117,10 @@ def logsignature(path: jax.Array, depth: int, *, mode: str = "lyndon",
         streamed scan is pure JAX); ``"auto"`` degrades silently.
       stream: if True return log-signatures of all prefixes
         (..., L-1, logsig_dim).
+      lengths: optional (...,) int array of per-path true point counts for
+        ragged batches — same semantics as :func:`repro.core.signature`
+        (padding masked, per-path time grid, power-of-two length buckets;
+        streamed prefixes repeat the final value past the true end).
       time_aug / lead_lag: deprecated bool aliases for ``transforms=``
         (DeprecationWarning once per call-site; bitwise-identical results).
       use_pallas: deprecated alias — explicit bools warn and map to
@@ -127,11 +132,14 @@ def logsignature(path: jax.Array, depth: int, *, mode: str = "lyndon",
       channel count (``transforms.transformed_dim(d)``).
     """
     from . import dispatch
+    from . import transforms as tf
     from .config import resolve_transforms
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     cfg = resolve_transforms(transforms, time_aug, lead_lag)
-    z = _effective_increments(path, cfg)
+    if lengths is not None:
+        path, lengths = tf.pad_ragged(path, lengths)
+    z = _effective_increments(path, cfg, lengths)
     d = z.shape[-1]
     backend = dispatch.canonicalize(backend, op="logsignature",
                                     use_pallas=use_pallas)
@@ -146,7 +154,8 @@ def logsignature(path: jax.Array, depth: int, *, mode: str = "lyndon",
         return _project(flat_log, d, depth, mode)
     backend = dispatch.resolve(
         backend, op="logsignature",
-        shape=(z.shape[-2], z.shape[-1], depth), dtype=z.dtype)
+        shape=(z.shape[-2], z.shape[-1], depth), dtype=z.dtype,
+        ragged=lengths is not None)
     if backend == "pallas":
         from repro.kernels.signature import ops as sig_ops
         return sig_ops.logsignature_from_increments(z, depth, mode)

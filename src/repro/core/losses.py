@@ -24,6 +24,7 @@ from .gram import sigkernel_gram
 def mmd2(X: jax.Array, Y: jax.Array, *, transforms=None, grid=None,
          static_kernel=None, unbiased: bool = True, backend: str = "auto",
          row_block: Optional[int] = None,
+         lengths=None, lengths_y=None,
          lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
          use_pallas=UNSET) -> jax.Array:
     """Squared MMD between two path distributions under the signature kernel.
@@ -35,6 +36,11 @@ def mmd2(X: jax.Array, Y: jax.Array, *, transforms=None, grid=None,
     / :class:`repro.RBF`) configure the kernel; the legacy
     ``lam1/lam2/time_aug/lead_lag/use_pallas`` kwargs are deprecated
     aliases (DeprecationWarning once per call-site).
+
+    ``lengths``/``lengths_y`` — optional (Bx,)/(By,) int arrays of per-path
+    true point counts — make both batches ragged: each Gram term masks its
+    padding exactly (see :func:`repro.core.gram.sigkernel_gram`), so the two
+    sides may be padded to *different* L and still compare correctly.
 
     The unbiased estimator divides by ``b·(b−1)`` and therefore needs at
     least two samples on each side — a single-sample batch raises instead of
@@ -51,9 +57,9 @@ def mmd2(X: jax.Array, Y: jax.Array, *, transforms=None, grid=None,
         lead_lag=lead_lag, lam1=lam1, lam2=lam2)
     kw = dict(transforms=cfg, grid=g, static_kernel=kernel,
               backend=backend, row_block=row_block, use_pallas=use_pallas)
-    Kxx = sigkernel_gram(X, **kw)            # symmetric: upper triangle only
-    Kyy = sigkernel_gram(Y, **kw)
-    Kxy = sigkernel_gram(X, Y, **kw)
+    Kxx = sigkernel_gram(X, lengths=lengths, **kw)   # upper triangle only
+    Kyy = sigkernel_gram(Y, lengths=lengths_y, **kw)
+    Kxy = sigkernel_gram(X, Y, lengths=lengths, lengths_y=lengths_y, **kw)
     if unbiased:
         sxx = (Kxx.sum() - jnp.trace(Kxx)) / (bx * (bx - 1))
         syy = (Kyy.sum() - jnp.trace(Kyy)) / (by * (by - 1))
@@ -66,13 +72,16 @@ def mmd2(X: jax.Array, Y: jax.Array, *, transforms=None, grid=None,
 def scoring_rule(X: jax.Array, y: jax.Array, *, transforms=None, grid=None,
                  static_kernel=None, backend: str = "auto",
                  row_block: Optional[int] = None,
+                 lengths=None, length_y=None,
                  lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
                  use_pallas=UNSET) -> jax.Array:
     """Sig-kernel score  E[k(X,X')]/2 − E[k(X,y)]  for one observation y (L, d).
 
     A strictly proper scoring rule for path-valued prediction [24].
     ``E[k(X,X')]`` averages over distinct pairs (divides by ``b·(b−1)``), so
-    the ensemble needs at least two members.  Configured like :func:`mmd2`.
+    the ensemble needs at least two members.  Configured like :func:`mmd2`;
+    ``lengths`` (B,) makes the ensemble ragged, ``length_y`` (a scalar int)
+    gives the observation's true point count.
     """
     b = X.shape[0]
     if b < 2:
@@ -84,28 +93,38 @@ def scoring_rule(X: jax.Array, y: jax.Array, *, transforms=None, grid=None,
         lead_lag=lead_lag, lam1=lam1, lam2=lam2)
     kw = dict(transforms=cfg, grid=g, static_kernel=kernel,
               backend=backend, row_block=row_block, use_pallas=use_pallas)
-    Kxx = sigkernel_gram(X, **kw)
+    Kxx = sigkernel_gram(X, lengths=lengths, **kw)
     exx = (Kxx.sum() - jnp.trace(Kxx)) / (b * (b - 1))
-    Kxy = sigkernel_gram(X, y[None], **kw)
+    ly = None if length_y is None else jnp.reshape(length_y, (1,))
+    Kxy = sigkernel_gram(X, y[None], lengths=lengths, lengths_y=ly, **kw)
     return 0.5 * exx - Kxy.mean()
 
 
 def sig_aux_loss(hidden: jax.Array, target: jax.Array, *, proj: jax.Array,
                  transforms=None, grid=None, static_kernel=None,
                  backend: str = "auto", row_block: Optional[int] = None,
-                 lam1=UNSET, lam2=UNSET, use_pallas=UNSET) -> jax.Array:
+                 lengths=None, lengths_target=None,
+                 lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
+                 use_pallas=UNSET) -> jax.Array:
     """Auxiliary sig-kernel loss between a model's hidden trajectory and a
     target path distribution (the glue attaching the paper's technique to any
     sequence architecture — DESIGN.md §5).
 
     hidden: (B, L, H) hidden states; proj: (H, d) fixed/learned projection into
-    a low-dim path space; target: (B, L, d) reference paths.
+    a low-dim path space; target: (B, L, d) reference paths.  ``lengths`` /
+    ``lengths_target`` (each (B,)) make the corresponding side ragged — e.g.
+    packed batches of variable-length sequences.  The legacy
+    ``time_aug=``/``lead_lag=`` bools are accepted as the same deprecated
+    aliases its siblings :func:`mmd2`/:func:`scoring_rule` take (one
+    DeprecationWarning per call-site, identical results).
     """
     cfg, g, kernel = resolve_kernel_configs(
-        transforms, grid, static_kernel, lam1=lam1, lam2=lam2)
+        transforms, grid, static_kernel, time_aug=time_aug,
+        lead_lag=lead_lag, lam1=lam1, lam2=lam2)
     path = hidden @ proj                      # (B, L, d)
     # normalise scale so the PDE stays well-conditioned for wide layers
     path = path / jnp.sqrt(jnp.asarray(proj.shape[0], path.dtype))
     return mmd2(path, target, transforms=cfg, grid=g, static_kernel=kernel,
                 unbiased=False, backend=backend, row_block=row_block,
+                lengths=lengths, lengths_y=lengths_target,
                 use_pallas=use_pallas)

@@ -52,8 +52,8 @@ from . import transforms as tf
 # ---------------------------------------------------------------------------
 
 def delta_matrix(x: jax.Array, y: jax.Array, *, transforms=None,
-                 static_kernel=None, time_aug=UNSET,
-                 lead_lag=UNSET) -> jax.Array:
+                 static_kernel=None, lengths_x=None, lengths_y=None,
+                 time_aug=UNSET, lead_lag=UNSET) -> jax.Array:
     """Δ for the Goursat solver: (..., Lx, d) × (..., Ly, d) -> (..., Lx-1, Ly-1).
 
     For the (default) linear lift this is the paper's one batched matmul
@@ -68,17 +68,26 @@ def delta_matrix(x: jax.Array, y: jax.Array, *, transforms=None,
     which feeds the *same* solver; gradients flow through the Gram by
     (exact) autodiff and through the solver by the one-pass §3.4 backward.
 
+    ``lengths_x``/``lengths_y`` (ragged batches) produce *end-aligned*
+    streams: the valid Δ block sits at the bottom-right and the padding
+    contributes exactly-zero leading rows/columns (zero increments for the
+    linear lift; repeated points, hence a vanishing double difference, for
+    Δ-from-Gram).  Leading zero Δ leaves the Goursat boundary of ones
+    bitwise intact — ``A(0) = B(0) = 1`` and ``(1+1)·1 − 1·1 = 1`` — so the
+    solvers' far-corner readout *is* the true ``(len_x, len_y)``-corner
+    value on every backend, and no solver needs a masked readout.
+
     ``time_aug=``/``lead_lag=`` are deprecated aliases for ``transforms=``.
     """
     cfg = resolve_transforms(transforms, time_aug, lead_lag)
     kernel = resolve_static_kernel(static_kernel)
     if kernel.lifts_increments:
-        dx = tf.pipeline_increments(x, cfg)
-        dy = tf.pipeline_increments(y, cfg)
+        dx = tf.pipeline_increments(x, cfg, lengths_x, align="end")
+        dy = tf.pipeline_increments(y, cfg, lengths_y, align="end")
         # the hot matmul — MXU on TPU, one bmm as in the paper
         return kernel.delta_from_increments(dx, dy)
-    xt = tf.transform_path(x, cfg)
-    yt = tf.transform_path(y, cfg)
+    xt = tf.transform_path(x, cfg, lengths_x, align="end")
+    yt = tf.transform_path(y, cfg, lengths_y, align="end")
     return delta_from_gram(kernel.gram(xt, yt))
 
 
@@ -393,6 +402,7 @@ _sigkernel_from_delta.defvjp(_sk_fwd, _sk_bwd)
 
 def sigkernel(x: jax.Array, y: jax.Array, *, transforms=None, grid=None,
               static_kernel=None, backend: str = "auto",
+              lengths_x=None, lengths_y=None,
               lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
               use_pallas=UNSET) -> jax.Array:
     """Signature kernel k(x, y) = ⟨S(x̃), S(ỹ)⟩ for batches of paths.
@@ -414,6 +424,13 @@ def sigkernel(x: jax.Array, y: jax.Array, *, transforms=None, grid=None,
         "antidiag" | "pallas" | "pallas_fused") or ``"auto"`` (default:
         per-platform/size).  ``"pallas_fused"`` builds Δ from increments in
         VMEM and therefore requires the linear lift.
+      lengths_x / lengths_y: optional (...,) int arrays of per-path true
+        point counts for ragged batches.  ``k(x, y)`` is read at the true
+        ``(len_x, len_y)`` grid corner on every backend — exactly, via
+        end-aligned streams whose padding contributes zero Δ rows/columns
+        that leave the Goursat boundary bitwise intact (see
+        :func:`delta_matrix`).  Length axes are padded to power-of-two
+        buckets so nearby sizes share one jit trace.
       lam1 / lam2 / time_aug / lead_lag / use_pallas: deprecated aliases
         for ``grid=`` / ``transforms=`` / ``backend=`` (DeprecationWarning
         once per call-site; bitwise-identical results).
@@ -422,6 +439,11 @@ def sigkernel(x: jax.Array, y: jax.Array, *, transforms=None, grid=None,
         transforms, grid, static_kernel, time_aug=time_aug,
         lead_lag=lead_lag, lam1=lam1, lam2=lam2)
     lam1, lam2 = g.lam1, g.lam2
+    if lengths_x is not None:
+        x, lengths_x = tf.pad_ragged(x, lengths_x)
+    if lengths_y is not None:
+        y, lengths_y = tf.pad_ragged(y, lengths_y)
+    ragged = lengths_x is not None or lengths_y is not None
     backend = dispatch.canonicalize(backend, op="sigkernel",
                                     use_pallas=use_pallas)
     if backend == "pallas_fused" and not kernel.lifts_increments:
@@ -438,7 +460,8 @@ def sigkernel(x: jax.Array, y: jax.Array, *, transforms=None, grid=None,
             backend, op="sigkernel", grid_cells=cells,
             shape=(Lx << lam1, Ly << lam2,
                    cfg.transformed_dim(x.shape[-1])),
-            dtype=x.dtype, allow_fused=kernel.lifts_increments)
+            dtype=x.dtype, allow_fused=kernel.lifts_increments,
+            ragged=ragged)
         if was_auto and backend == "pallas_fused" \
                 and x.shape[:-2] != y.shape[:-2]:
             # the autotune key carries no batch info, so a tuned winner can
@@ -451,8 +474,8 @@ def sigkernel(x: jax.Array, y: jax.Array, *, transforms=None, grid=None,
             raise ValueError("backend='pallas_fused' needs matching batch "
                              f"shapes, got {x.shape[:-2]} vs {y.shape[:-2]}")
         from repro.kernels.sigkernel_pde import ops as pde_ops
-        dx = tf.pipeline_increments(x, cfg)
-        dy = tf.pipeline_increments(y, cfg)
+        dx = tf.pipeline_increments(x, cfg, lengths_x, align="end")
+        dy = tf.pipeline_increments(y, cfg, lengths_y, align="end")
         # fold a non-unit linear scale into one increment side:
         # scale·⟨dx, dy⟩ = ⟨scale·dx, dy⟩ exactly
         dx = _config_scale(dx, kernel.scale)
@@ -463,7 +486,8 @@ def sigkernel(x: jax.Array, y: jax.Array, *, transforms=None, grid=None,
                                 dy.reshape((-1,) + dy.shape[-2:]),
                                 lam1, lam2)
         return k.reshape(batch_shape)
-    delta = delta_matrix(x, y, transforms=cfg, static_kernel=kernel)
+    delta = delta_matrix(x, y, transforms=cfg, static_kernel=kernel,
+                         lengths_x=lengths_x, lengths_y=lengths_y)
     dispatch.record_pair_solves(
         functools.reduce(lambda a, b: a * b, delta.shape[:-2], 1))
     return _sigkernel_from_delta(delta, lam1, lam2, backend)

@@ -39,15 +39,18 @@ def path_increments(path: jax.Array) -> jax.Array:
     return path[..., 1:, :] - path[..., :-1, :]
 
 
-def _effective_increments(path: jax.Array, pipeline) -> jax.Array:
+def _effective_increments(path: jax.Array, pipeline,
+                          lengths=None) -> jax.Array:
     """Increment stream with a §4 :class:`TransformPipeline` applied on-the-fly.
 
     Never materialises the transformed path; only its increments, which is all
     the signature algorithms consume.  Delegates to
-    :func:`repro.core.transforms.pipeline_increments`.
+    :func:`repro.core.transforms.pipeline_increments`.  With ``lengths=``
+    (ragged batches) padded increments are zeroed in place — exact no-ops
+    for the Horner recursion — so the valid prefix stays first.
     """
     from . import transforms as tf
-    return tf.pipeline_increments(path, pipeline)
+    return tf.pipeline_increments(path, pipeline, lengths, align="start")
 
 
 def transformed_dim(d: int, time_aug: bool, lead_lag: bool) -> int:
@@ -167,7 +170,7 @@ _signature_core.defvjp(_signature_core_fwd, _signature_core_bwd)
 
 
 def signature(path: jax.Array, depth: int, *, transforms=None,
-              backend: str = "auto", stream: bool = False,
+              backend: str = "auto", stream: bool = False, lengths=None,
               time_aug=UNSET, lead_lag=UNSET, use_pallas=None) -> jax.Array:
     """Truncated signature of a batch of piecewise-linear paths.
 
@@ -185,6 +188,14 @@ def signature(path: jax.Array, depth: int, *, transforms=None,
         explicitly requesting ``"pallas"`` raises instead of silently
         degrading.
       stream: if True return signatures of all prefixes (..., L-1, sig_dim).
+      lengths: optional (...,) int array of per-path true point counts for
+        ragged (variable-length) batches.  Each path is treated as if
+        truncated to its own length — padding content is ignored, and the
+        ``time_aug`` grid ends at ``t1`` at the *true* last point.  The
+        length axis is padded up to a power-of-two bucket
+        (:func:`repro.core.transforms.pad_ragged`) so nearby max-lengths
+        share one jit trace.  With ``stream=True``, prefix entries at or
+        past a path's true end repeat its final signature.
       time_aug / lead_lag: deprecated bool aliases for ``transforms=``
         (DeprecationWarning once per call-site; bitwise-identical results).
       use_pallas: deprecated alias — ``True`` -> ``backend="pallas"``,
@@ -196,9 +207,12 @@ def signature(path: jax.Array, depth: int, *, transforms=None,
       the transformed channel count (``transforms.transformed_dim(d)``).
     """
     from . import dispatch
+    from . import transforms as tf
     from .config import resolve_transforms
     cfg = resolve_transforms(transforms, time_aug, lead_lag)
-    z = _effective_increments(path, cfg)
+    if lengths is not None:
+        path, lengths = tf.pad_ragged(path, lengths)
+    z = _effective_increments(path, cfg, lengths)
     backend = dispatch.canonicalize(backend, op="signature",
                                     use_pallas=use_pallas)
     if stream:
@@ -210,7 +224,7 @@ def signature(path: jax.Array, depth: int, *, transforms=None,
         return _signature_stream_from_increments(z, depth)
     backend = dispatch.resolve(
         backend, op="signature", shape=(z.shape[-2], z.shape[-1], depth),
-        dtype=z.dtype)
+        dtype=z.dtype, ragged=lengths is not None)
     if backend == "pallas":
         from repro.kernels.signature import ops as sig_ops
         return sig_ops.signature_from_increments(z, depth)

@@ -18,6 +18,31 @@ increments alternate (dx_k, 0) (lead jumps first) then (0, dx_k).
 The canonical pipeline order (what :class:`repro.TransformPipeline`
 denotes) is **basepoint → lead-lag → time-aug**, i.e. the materialised
 ``time_augment(lead_lag(basepoint(x)), t0, t1)``.
+
+Ragged batches
+--------------
+
+Every transform here accepts an optional ``lengths`` array of per-path true
+point counts (2 ≤ lengths[b] ≤ L): the batch stays a dense ``(..., L, d)``
+array, but each path is treated as if truncated to its own length.  The
+padding *content* is irrelevant — increments at or past the true end are
+masked to zero, and the point view clamps every padded index to the last
+true point — so NaN-filled padding is as good as edge padding.  The time
+grid of ``time_aug`` reaches ``t1`` at each path's true last point (and
+stays there), which is exactly the semantics naive padding silently breaks.
+
+Two alignments of the resulting dense stream are offered:
+
+* ``align="start"`` (default) — valid entries first, zeros after.  Trailing
+  zero increments are bitwise no-ops for the Horner signature recursion
+  (``A ⊗ 0 = 0``), so signatures and ``stream=True`` prefixes read
+  naturally.
+* ``align="end"`` — valid entries last, zeros (increments) / first-point
+  copies (points) before.  A leading zero row/column of Δ keeps the Goursat
+  boundary of ones *bitwise* intact (``A(0) = B(0) = 1`` and
+  ``(1+1)·1 − 1·1 = 1`` exactly), so the PDE solvers' far-corner readout IS
+  the true ``(len_x, len_y)``-corner readout on every backend — this is the
+  alignment the sig-kernel/Gram paths use (docs/solver_guide.md).
 """
 
 from __future__ import annotations
@@ -27,13 +52,158 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+#: floor dtype for time-grid construction: a bf16/f16 linspace accumulates
+#: visible rounding by L≈4k (bf16 can't even represent the integers past
+#: 256), and integer paths have no sensible grid at all — those all build
+#: in f32 and cast.  f64 paths keep f64 grids (see _grid_compute_dtype).
+_GRID_DTYPE = jnp.float32
 
-def time_augment(path: jax.Array, t0: float = 0.0, t1: float = 1.0) -> jax.Array:
-    """x̂_{t_i} = (x_{t_i}, t_i) ∈ R^{d+1} with a uniform time grid."""
+#: ragged length axes are padded up to at least this many points, then to
+#: the next power of two — the length-bucketing policy bounding how many
+#: distinct shapes (== jit traces / autotune keys) a ragged workload creates
+_MIN_BUCKET = 8
+
+
+# ---------------------------------------------------------------------------
+# ragged-batch plumbing
+# ---------------------------------------------------------------------------
+
+def _check_lengths(lengths, batch_shape, L: int) -> jax.Array:
+    """Validate a per-path lengths array against a (..., L, d) batch."""
+    arr = jnp.asarray(lengths)
+    if not jnp.issubdtype(arr.dtype, jnp.integer):
+        raise TypeError(
+            f"lengths= must be integer-typed per-path point counts, got "
+            f"dtype {arr.dtype}")
+    if arr.shape != tuple(batch_shape):
+        raise ValueError(
+            f"lengths shape {arr.shape} must equal the path batch shape "
+            f"{tuple(batch_shape)} (one true length per path)")
+    arr = arr.astype(jnp.int32)
+    if arr.size:
+        try:
+            # value checks need concrete lengths; under a trace (tracer
+            # input, or a closed-over constant staged by omnistaging) only
+            # the shape/dtype checks above apply
+            lo, hi = int(arr.min()), int(arr.max())
+        except jax.errors.ConcretizationTypeError:
+            return arr
+        if lo < 2:
+            raise ValueError(
+                f"lengths= entries must be >= 2 (a path needs at least one "
+                f"increment), got min {lo}")
+        if hi > L:
+            raise ValueError(
+                f"lengths= entries must be <= the padded length axis "
+                f"({L}), got max {hi}")
+    return arr
+
+
+def bucket_length(L: int, minimum: int = _MIN_BUCKET) -> int:
+    """Bucketed (padded) length for a ragged batch: next power of two ≥ L.
+
+    Rounding ragged batches up to a small set of buckets is what keeps jit
+    recompilation (and autotune cache growth) bounded: every batch whose max
+    length lands in the same bucket shares one trace.  The cost is masked
+    compute on at most ~2× the true lengths — see docs/solver_guide.md.
+    """
+    b = max(int(L), int(minimum))
+    return 1 << (b - 1).bit_length()
+
+
+def pad_ragged(path: jax.Array, lengths, *, bucket: bool = True,
+               minimum: int = _MIN_BUCKET):
+    """Canonicalise a ragged batch: ``(path, lengths)`` with the length axis
+    padded up to :func:`bucket_length` and ``lengths`` as an int32 array.
+
+    Padding repeats the last row (edge mode) purely for debuggability — all
+    downstream consumers mask padded entries, so any padding content works.
+    Call this *before* ``jax.jit`` so differently-ragged batches sharing a
+    bucket hit one trace; the entry points also apply it internally.
+    """
+    lengths = _check_lengths(lengths, path.shape[:-2], path.shape[-2])
+    if bucket:
+        L = path.shape[-2]
+        target = bucket_length(L, minimum)
+        if target > L:
+            width = [(0, 0)] * path.ndim
+            width[-2] = (0, target - L)
+            path = jnp.pad(path, width, mode="edge")
+    return path, lengths
+
+
+def _shift_to_end(stream: jax.Array, counts: jax.Array, *,
+                  repeat_first: bool = False) -> jax.Array:
+    """Move each path's valid block ``[0, counts)`` to the end of axis -2.
+
+    Freed leading slots become zeros (increment streams) or copies of the
+    first entry (point streams, ``repeat_first=True`` — repeated points give
+    exactly-zero leading Δ rows through the Δ-from-Gram double difference).
+    """
+    n = stream.shape[-2]
+    src = jnp.arange(n) - (n - counts)[..., None]          # (..., n)
+    out = jnp.take_along_axis(stream, jnp.clip(src, 0, n - 1)[..., None],
+                              axis=-2)
+    if repeat_first:
+        return out
+    return jnp.where((src >= 0)[..., None], out,
+                     jnp.zeros((), stream.dtype))
+
+
+def _time_values(num: int, t0, t1, lengths: Optional[jax.Array],
+                 dtype=_GRID_DTYPE) -> jax.Array:
+    """Time grid over [t0, t1] in ``dtype``: (num,) or (..., num) ragged.
+
+    One shared formula for the uniform and ragged cases so a padded path's
+    grid is bitwise the truncated path's grid: t_i = t0 + (t1−t0)·i/(m−1)
+    with i clamped to the true last index m−1 (padding sits at t1).
+    """
+    idx = jnp.arange(num, dtype=dtype)
+    t0 = jnp.asarray(t0, dtype)
+    t1 = jnp.asarray(t1, dtype)
+    if lengths is None:
+        last = jnp.asarray(max(num - 1, 1), dtype)
+        r = idx / last
+    else:
+        last = (lengths - 1).astype(dtype)[..., None]  # (..., 1)
+        r = jnp.minimum(idx, last) / last
+    return t0 + (t1 - t0) * r
+
+
+def _grid_compute_dtype(dtype) -> jnp.dtype:
+    """Dtype the grid arithmetic runs in: at least f32, but f64 paths keep
+    their full precision (promote_types(bf16|f16|int, f32) -> f32;
+    promote_types(f64, f32) -> f64)."""
+    return jnp.promote_types(dtype, _GRID_DTYPE)
+
+
+def _grid_out_dtype(dtype) -> jnp.dtype:
+    """Inexact path dtypes keep their dtype; integer paths promote to f32."""
+    return dtype if jnp.issubdtype(dtype, jnp.inexact) else _GRID_DTYPE
+
+
+# ---------------------------------------------------------------------------
+# materialised transforms
+# ---------------------------------------------------------------------------
+
+def time_augment(path: jax.Array, t0: float = 0.0, t1: float = 1.0,
+                 lengths=None) -> jax.Array:
+    """x̂_{t_i} = (x_{t_i}, t_i) ∈ R^{d+1} with a uniform time grid.
+
+    The grid is constructed in at-least-f32 and cast once: building it
+    directly in the path dtype rounds badly for bf16/f16 at long L and
+    breaks outright for integer paths (which now promote to f32); f64
+    paths keep f64-exact grids.  With ``lengths=``, path
+    ``b``'s grid is uniform over its *own* ``lengths[b]`` points — reaching
+    ``t1`` at the true last point and staying there across the padding.
+    """
     L = path.shape[-2]
-    t = jnp.linspace(t0, t1, L, dtype=path.dtype)
-    t = jnp.broadcast_to(t[..., :, None], (*path.shape[:-1], 1))
-    return jnp.concatenate([path, t], axis=-1)
+    if lengths is not None:
+        lengths = _check_lengths(lengths, path.shape[:-2], L)
+    dtype = _grid_out_dtype(path.dtype)
+    t = _time_values(L, t0, t1, lengths, _grid_compute_dtype(path.dtype))
+    t = jnp.broadcast_to(t, path.shape[:-1]).astype(dtype)[..., None]
+    return jnp.concatenate([path.astype(dtype), t], axis=-1)
 
 
 def lead_lag(path: jax.Array) -> jax.Array:
@@ -54,7 +224,8 @@ def basepoint(path: jax.Array) -> jax.Array:
 def transform_increments(z: jax.Array, time_aug: bool, lead_lag_: bool,
                          t0: float = 0.0, t1: float = 1.0, *,
                          basepoint_: bool = False,
-                         first: Optional[jax.Array] = None) -> jax.Array:
+                         first: Optional[jax.Array] = None,
+                         valid_steps=None) -> jax.Array:
     """On-the-fly transform of an increment stream z (..., L-1, d).
 
     Matches increments of the materialised transforms above exactly, in the
@@ -62,6 +233,13 @@ def transform_increments(z: jax.Array, time_aug: bool, lead_lag_: bool,
     prepends the increment 0 → x_0 (which equals the first path point), so
     the padded path is never materialised; it needs ``first`` — the (..., d)
     first point of the path — because increments alone don't determine it.
+
+    ``valid_steps`` (ragged batches) is the per-path count of valid
+    increments *after* the transforms (``pipeline.transformed_steps(len)``):
+    the time channel becomes ``(t1−t0)/valid_steps`` on the first
+    ``valid_steps`` rows and 0 on the padding, matching a per-path grid
+    that ends at ``t1`` at the true length.  Callers are responsible for
+    zeroing padded raw increments before calling.
     """
     if basepoint_:
         if first is None:
@@ -79,36 +257,92 @@ def transform_increments(z: jax.Array, time_aug: bool, lead_lag_: bool,
             *z.shape[:-2], 2 * n, 2 * z.shape[-1])
     if time_aug:
         # uniform time grid over the (possibly lead-lagged) point sequence, so
-        # this matches time_augment(lead_lag(x)) exactly.
+        # this matches time_augment(lead_lag(x)) exactly.  dt is built in f32
+        # and cast (same discipline — and same formula — as time_augment).
         steps = z.shape[-2]
-        dt = jnp.full((*z.shape[:-1], 1), (t1 - t0) / steps, dtype=z.dtype)
-        z = jnp.concatenate([z, dt], axis=-1)
+        dtype = _grid_out_dtype(z.dtype)
+        compute = _grid_compute_dtype(z.dtype)
+        span = jnp.asarray(t1, compute) - jnp.asarray(t0, compute)
+        if valid_steps is None:
+            dt = jnp.broadcast_to(span / jnp.asarray(steps, compute),
+                                  (*z.shape[:-1], 1))
+        else:
+            per_path = span / valid_steps.astype(compute)      # (...,)
+            on = jnp.arange(steps) < valid_steps[..., None]    # (..., steps)
+            dt = jnp.where(on, per_path[..., None],
+                           jnp.zeros((), compute))[..., None]
+            dt = jnp.broadcast_to(dt, (*z.shape[:-1], 1))
+        z = jnp.concatenate([z.astype(dtype), dt.astype(dtype)], axis=-1)
     return z
 
 
-def transform_path(path: jax.Array, pipeline) -> jax.Array:
+def transform_path(path: jax.Array, pipeline, lengths=None, *,
+                   align: str = "start") -> jax.Array:
     """Materialise a :class:`repro.TransformPipeline` on a path of points.
 
     Applies basepoint → lead-lag → time-aug in the canonical order.  Used
     by oracles and by the Δ-from-Gram path of non-linear static-kernel
     lifts (which need actual points, not increments); the signature /
     linear-kernel hot paths stay on :func:`transform_increments`.
+
+    With ``lengths=``, padded indices are first clamped to each path's last
+    true point (so padding content never matters and padded rows repeat the
+    final point — exactly-zero Δ rows through the Gram double difference);
+    ``align="end"`` then moves the valid block to the end of the axis with
+    leading first-point copies (see the module docstring for why the PDE
+    paths want that).
     """
+    if align not in ("start", "end"):
+        raise ValueError(f"align must be 'start' or 'end', got {align!r}")
+    counts = None
+    if lengths is not None:
+        lengths = _check_lengths(lengths, path.shape[:-2], path.shape[-2])
+        idx = jnp.minimum(jnp.arange(path.shape[-2]), lengths[..., None] - 1)
+        path = jnp.take_along_axis(path, idx[..., None], axis=-2)
+        counts = lengths
     if pipeline.basepoint:
         path = basepoint(path)
+        if counts is not None:
+            counts = counts + 1
     if pipeline.lead_lag:
         path = lead_lag(path)
+        if counts is not None:
+            counts = 2 * counts - 1
     if pipeline.time_aug:
-        path = time_augment(path, pipeline.t0, pipeline.t1)
+        path = time_augment(path, pipeline.t0, pipeline.t1, lengths=counts)
+    if counts is not None and align == "end":
+        path = _shift_to_end(path, counts, repeat_first=True)
     return path
 
 
-def pipeline_increments(path: jax.Array, pipeline) -> jax.Array:
+def pipeline_increments(path: jax.Array, pipeline, lengths=None, *,
+                        align: str = "start") -> jax.Array:
     """Increment stream of ``transform_path(path, pipeline)`` — computed
     on-the-fly from the raw increments (the transformed path never exists
-    in memory)."""
+    in memory).
+
+    With ``lengths=``, increments at or past each path's true end are
+    zeroed (equivalent to repeated-last-point padding, whatever the padding
+    holds) and the time channel uses the per-path grid; ``align`` picks
+    where the zeros live ("start" keeps valid increments first — what the
+    signature scans want; "end" right-aligns them — what the PDE solvers
+    want, see the module docstring).
+    """
+    if align not in ("start", "end"):
+        raise ValueError(f"align must be 'start' or 'end', got {align!r}")
     z = path[..., 1:, :] - path[..., :-1, :]
-    return transform_increments(
+    first = path[..., 0, :] if pipeline.basepoint else None
+    if lengths is None:
+        return transform_increments(
+            z, pipeline.time_aug, pipeline.lead_lag, pipeline.t0,
+            pipeline.t1, basepoint_=pipeline.basepoint, first=first)
+    lengths = _check_lengths(lengths, path.shape[:-2], path.shape[-2])
+    valid = jnp.arange(z.shape[-2]) < (lengths[..., None] - 1)
+    z = jnp.where(valid[..., None], z, jnp.zeros((), z.dtype))
+    steps = pipeline.transformed_steps(lengths)
+    z = transform_increments(
         z, pipeline.time_aug, pipeline.lead_lag, pipeline.t0, pipeline.t1,
-        basepoint_=pipeline.basepoint,
-        first=path[..., 0, :] if pipeline.basepoint else None)
+        basepoint_=pipeline.basepoint, first=first, valid_steps=steps)
+    if align == "end":
+        z = _shift_to_end(z, steps)
+    return z

@@ -87,6 +87,7 @@ def _naive_rbf_gram(X, Y, sigma):
     return K
 
 
+@pytest.mark.slow
 def test_jit_rbf_sigkernel_gram_matches_oracle_and_fd():
     X, Y = paths(0, 3, 7, 2, 0.3), paths(1, 4, 6, 2, 0.3)
     sk = repro.SigKernel(static_kernel=repro.RBF(sigma=1.0))
@@ -196,6 +197,7 @@ def _one_warning_bitwise(legacy_fn, config_fn):
     assert _bitwise_equal(legacy, legacy2)
 
 
+@pytest.mark.slow
 def test_old_kwargs_bitwise_and_warn_once():
     x, y = paths(10, 2, 7, 2), paths(11, 2, 6, 2)
     X = paths(12, 3, 6, 2)

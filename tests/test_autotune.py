@@ -132,8 +132,8 @@ def test_auto_fused_winner_degrades_on_broadcast_batches(monkeypatch):
     from repro.core.sigkernel import sigkernel
     monkeypatch.setattr(
         dispatch, "_autotuned",
-        lambda op, shape, dtype: "pallas_fused" if shape is not None
-        else None)
+        lambda op, shape, dtype, ragged=False: "pallas_fused"
+        if shape is not None else None)
     x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 2)) * 0.1
     y = jax.random.normal(jax.random.PRNGKey(1), (5, 6, 2)) * 0.1
     k = sigkernel(x, y, backend="auto")  # must not raise
@@ -150,3 +150,16 @@ def test_cache_key_includes_op_platform_dtype():
     assert autotune.cache_key("sigkernel", SHAPE, "float64") != k
     with pytest.raises(ValueError, match="unknown op"):
         autotune.cache_key("conv", SHAPE)
+
+
+def test_ragged_cache_key_is_separate(cache):
+    """A ragged (lengths=) workload must never share a cache entry with the
+    dense workload of the same padded shape — the masked work differs."""
+    dense = autotune.cache_key("sigkernel", SHAPE, "float32")
+    ragged = autotune.cache_key("sigkernel", SHAPE, "float32", ragged=True)
+    assert ragged == dense + "|ragged"
+    winner = autotune.tune("sigkernel", SHAPE, repeats=1, ragged=True)
+    assert winner in autotune.candidates("sigkernel")
+    # the ragged measurement populated only the ragged key
+    assert autotune.lookup("sigkernel", SHAPE, ragged=True) == winner
+    assert autotune.lookup("sigkernel", SHAPE) is None

@@ -11,6 +11,9 @@ import pytest
 
 from repro.bench import autotune, compare, suite
 
+# whole-module smoke runs dominate the default suite; CI's full job still runs them
+pytestmark = pytest.mark.slow
+
 jax.config.update("jax_platform_name", "cpu")
 
 

@@ -198,6 +198,7 @@ def _agree_symmetric(seed, Bx):
     (1, 1, 2, 6, 4, 3, True, False),
     (2, 2, 0, 8, 8, 1, False, True),
 ])
+@pytest.mark.slow
 def test_backends_agree_sigkernel_cases(seed, l1, l2, Lx, Ly, d, ta, ll):
     _agree_sigkernel(seed, l1, l2, Lx, Ly, d, ta, ll)
 
@@ -205,6 +206,7 @@ def test_backends_agree_sigkernel_cases(seed, l1, l2, Lx, Ly, d, ta, ll):
 @pytest.mark.parametrize("seed,l1,l2,Bx,By,L,d", [
     (0, 0, 0, 3, 4, 6, 2), (1, 1, 1, 2, 5, 5, 3), (2, 0, 1, 4, 1, 7, 2),
 ])
+@pytest.mark.slow
 def test_backends_agree_gram_cases(seed, l1, l2, Bx, By, L, d):
     _agree_gram(seed, l1, l2, Bx, By, L, d)
 
@@ -237,3 +239,43 @@ if HAVE_HYPOTHESIS:
     @given(seed=st.integers(0, 99), Bx=st.integers(2, 4))
     def test_all_backends_agree_symmetric_property(seed, Bx):
         _agree_symmetric(seed, Bx)
+
+
+def test_deprecation_attributed_to_user_module_named_repro(tmp_path):
+    """Regression: the frame walk used to skip any frame whose top-level
+    module *name* was "repro", so a user script/package that merely happens
+    to be called repro.py absorbed neither warning nor dedup key.  The walk
+    now skips only frames whose files live under this library's install
+    directory."""
+    dispatch.reset_warned_sites()
+    X = paths(9, 2, 5, 2)
+    user_file = tmp_path / "repro.py"
+    user_file.write_text("def call(fn, x):\n    return fn(x, x,"
+                         " use_pallas=False)\n")
+    ns = {"__name__": "repro"}  # what the buggy name-based skip keyed on
+    exec(compile(user_file.read_text(), str(user_file), "exec"), ns)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ns["call"](sigkernel, X)
+        ns["call"](sigkernel, X)  # same user call-site: deduped
+    assert [x.category for x in w] == [DeprecationWarning]
+    assert w[0].filename == str(user_file), (
+        f"warning attributed to {w[0].filename}, not the user module")
+
+
+def test_warned_sites_growth_is_bounded(monkeypatch):
+    """A caller minting fresh call-sites forever (exec'd snippets) must not
+    grow the dedup set without bound — past the cap new sites still warn,
+    they just stop deduplicating."""
+    dispatch.reset_warned_sites()
+    monkeypatch.setattr(dispatch, "_MAX_WARNED_SITES", 3)
+    X = paths(10, 2, 5, 2)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        for i in range(6):  # six distinct synthetic call-sites
+            ns = {}
+            exec(compile("def call(fn, x):\n    return fn(x, x,"
+                         " use_pallas=False)\n", f"<site-{i}>", "exec"), ns)
+            ns["call"](sigkernel, X)
+    assert len(w) == 6  # every new site warns, capped set or not
+    assert len(dispatch._warned_sites) <= 3

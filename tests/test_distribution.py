@@ -51,6 +51,7 @@ def test_param_specs_all_archs_valid():
     run_sub(prog)
 
 
+@pytest.mark.slow
 def test_sharded_training_matches_single_device():
     prog = textwrap.dedent("""
         import os
@@ -98,6 +99,7 @@ def test_sharded_training_matches_single_device():
     run_sub(prog)
 
 
+@pytest.mark.slow
 def test_mini_multipod_dryrun():
     prog = textwrap.dedent("""
         import os

@@ -17,6 +17,7 @@ def paths(seed, B, L=6, d=2):
     return jax.random.normal(jax.random.PRNGKey(seed), (B, L, d)) * 0.2
 
 
+@pytest.mark.slow
 def test_symmetric_fused_is_differentiable_exact_and_halves_solves():
     """Acceptance: sigkernel_gram(X) on the fused backend is differentiable
     end-to-end via the exact backward, agrees with the reference solver to
@@ -48,6 +49,7 @@ def test_symmetric_halves_solves_vs_full():
     assert c_sym.total == 10 and c_full.total == 16
 
 
+@pytest.mark.slow
 def test_blocked_pads_non_divisible_batch():
     X, Y = paths(2, 5), paths(3, 4, L=8)
     K_dense = sigkernel_gram(X, Y, backend="reference")
@@ -110,6 +112,7 @@ def test_symmetric_auto_chunks_large_pair_gather(monkeypatch):
     np.testing.assert_allclose(K, K_ref, rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_losses_route_through_engine():
     X, Y = paths(11, 4), paths(12, 4)
     with dispatch.count_pair_solves() as c:

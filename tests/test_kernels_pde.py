@@ -47,6 +47,7 @@ def test_forward_dtypes(dtype):
 @pytest.mark.parametrize("B,Lx,Ly,l1,l2", [
     (2, 5, 7, 0, 0), (3, 16, 16, 0, 0), (2, 10, 33, 1, 1),
     (1, 40, 50, 0, 0), (2, 6, 9, 2, 1), (1, 33, 20, 0, 2)])
+@pytest.mark.slow
 def test_backward_vs_ref(B, Lx, Ly, l1, l2):
     d = delta(2, B, Lx, Ly)
     gbar = jax.random.normal(jax.random.PRNGKey(3), (B,))
@@ -59,6 +60,7 @@ def test_backward_vs_ref(B, Lx, Ly, l1, l2):
 
 @pytest.mark.parametrize("Lx,Ly,T,l1,l2", [
     (24, 10, 8, 0, 0), (16, 12, 8, 1, 0), (24, 40, 8, 1, 1), (32, 8, 8, 0, 2)])
+@pytest.mark.slow
 def test_multistrip_small_T(Lx, Ly, T, l1, l2):
     """Force small strips so the carried-boundary-row path is exercised."""
     B = 2
@@ -75,6 +77,7 @@ def test_multistrip_small_T(Lx, Ly, T, l1, l2):
     assert float(jnp.abs(dd - dd_ref).max()) / denom < 2e-5
 
 
+@pytest.mark.slow
 def test_end_to_end_custom_vjp():
     from repro.core.config import GridConfig
     from repro.core.sigkernel import sigkernel, delta_matrix, solve_goursat

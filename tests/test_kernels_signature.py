@@ -39,6 +39,7 @@ def test_dtypes(dtype):
     assert float(jnp.abs(np.asarray(s_pal, np.float32) - s_ref).max()) / denom < tol
 
 
+@pytest.mark.slow
 def test_gradients_exact():
     from repro.core.signature import signature, signature_direct
     p = jax.random.normal(jax.random.PRNGKey(2), (3, 8, 3)) * 0.3
@@ -84,6 +85,7 @@ def test_logsignature_fused_vs_pure(mode):
     assert float(jnp.abs(ls_pal - ls_ref).max()) / denom < 5e-5
 
 
+@pytest.mark.slow
 def test_logsignature_fused_gradients():
     from repro.core.logsignature import logsignature
     p = jax.random.normal(jax.random.PRNGKey(6), (2, 7, 3)) * 0.3

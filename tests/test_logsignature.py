@@ -78,6 +78,7 @@ def test_transforms_on_the_fly(time_aug, lead_lag):
                                rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mode", ["lyndon", "brackets", "expand"])
 def test_grad_finite_differences(mode):
     p = np.asarray(paths(2, B=1, L=5, d=2))
@@ -93,6 +94,7 @@ def test_grad_finite_differences(mode):
         assert abs(fd - float(g[idx])) < 1e-6 * max(1.0, abs(fd)), (idx, mode)
 
 
+@pytest.mark.slow
 def test_grad_matches_autodiff_through_oracle():
     p = paths(3, B=2, L=6, d=3)
     g1 = jax.grad(lambda q: logsignature(q, 4, backend="reference").sum())(p)

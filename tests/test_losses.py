@@ -58,6 +58,7 @@ def test_scoring_rule_finite():
     assert np.isfinite(float(s))
 
 
+@pytest.mark.slow
 def test_mmd_minimised_at_match():
     """Gradient descent on MMD moves samples toward the target set."""
     key = jax.random.PRNGKey(7)
@@ -70,3 +71,61 @@ def test_mmd_minimised_at_match():
         X = X - lr * g
     loss1 = float(losses.mmd2(X, target, unbiased=False))
     assert loss1 < loss0
+
+
+def test_legacy_shim_parity_across_all_three_losses():
+    """Every loss accepts the same legacy time_aug=/lead_lag= aliases with
+    warn-once semantics and results identical to the config-object call —
+    sig_aux_loss used to TypeError on them (regression)."""
+    import inspect
+    import warnings
+
+    from repro.core import dispatch
+    from repro.core.config import TransformPipeline
+
+    for fn in (losses.mmd2, losses.scoring_rule, losses.sig_aux_loss):
+        params = inspect.signature(fn).parameters
+        for name in ("transforms", "grid", "static_kernel", "backend",
+                     "row_block", "lengths", "lam1", "lam2", "time_aug",
+                     "lead_lag", "use_pallas"):
+            assert name in params, f"{fn.__name__} lacks {name}="
+
+    X = gbm_paths(jax.random.PRNGKey(0), 3, 8, 2)
+    Y = gbm_paths(jax.random.PRNGKey(1), 3, 8, 2)
+    H = gbm_paths(jax.random.PRNGKey(2), 3, 8, 4)
+    proj = jax.random.normal(jax.random.PRNGKey(3), (4, 2)) * 0.3
+    cfg = TransformPipeline(time_aug=True, lead_lag=True)
+    legacy = dict(time_aug=True, lead_lag=True)
+    cases = [
+        (lambda **kw: losses.mmd2(X, Y, unbiased=False, **kw)),
+        (lambda **kw: losses.scoring_rule(X, Y[0], **kw)),
+        (lambda **kw: losses.sig_aux_loss(H, X, proj=proj, **kw)),
+    ]
+    for call in cases:
+        dispatch.reset_warned_sites()
+        want = call(transforms=cfg)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            got = call(**legacy)
+            call(**legacy)  # same call-site: no second warning
+        assert [x.category for x in w] == [DeprecationWarning], \
+            f"expected exactly one warning, got {[str(x.message) for x in w]}"
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sig_aux_loss_ragged_sides():
+    H = gbm_paths(jax.random.PRNGKey(2), 3, 9, 4)
+    T = gbm_paths(jax.random.PRNGKey(4), 3, 11, 2)
+    proj = jax.random.normal(jax.random.PRNGKey(3), (4, 2)) * 0.3
+    lens_h = jnp.asarray([4, 9, 6])
+    lens_t = jnp.asarray([11, 3, 7])
+    v = losses.sig_aux_loss(H, T, proj=proj, lengths=lens_h,
+                            lengths_target=lens_t)
+    assert np.isfinite(float(v))
+    # padding must be invisible: poisoning it changes nothing
+    Hp = np.asarray(H).copy()
+    for i, n in enumerate([4, 9, 6]):
+        Hp[i, n:] = 123.0
+    v2 = losses.sig_aux_loss(jnp.asarray(Hp), T, proj=proj, lengths=lens_h,
+                             lengths_target=lens_t)
+    np.testing.assert_allclose(float(v), float(v2), rtol=1e-6)

@@ -8,6 +8,9 @@ import pytest
 from repro.models import get_config, build_model
 from repro.configs import ASSIGNED
 
+# whole-module smoke runs dominate the default suite; CI's full job still runs them
+pytestmark = pytest.mark.slow
+
 jax.config.update("jax_platform_name", "cpu")
 
 B, S = 2, 12
