@@ -1,61 +1,95 @@
-"""Distributed signature-kernel Gram matrices — the paper's workload at pod
-scale.
+"""Distributed + streaming signature-kernel Grams — the paper's workload at
+pod scale, runnable on a laptop.
 
-The B×B Gram of PDE solves is tiled over a 2-D mesh: row-block over the
-``data`` axis, column-block over ``model``.  Each device solves its tile of
-Goursat problems locally (Pallas kernel on TPU); only the MMD reduction
-crosses devices.  Run with fake devices to see the sharded lowering:
+Three layers, smallest-to-largest memory footprint:
+
+1. ``sigkernel_gram_sharded`` — the (Bx, By) tile grid of Goursat solves
+   block-cyclic sharded over a 2-D device mesh (rows over ``data``, columns
+   over ``model``); the symmetric fast path deals the upper-triangle pairs
+   round-robin over every device, so the triangular tile grid stays
+   load-balanced.
+2. ``mmd2(..., row_block=)`` — streaming losses: all three Gram terms are
+   accumulated as per-row-block partial sums (forward AND gradient under
+   ``jax.checkpoint``), so the full (B, B) Grams never exist; a shape guard
+   abstractly traces the reduction to prove it.
+3. The classic jit-sharding route through the plain engine, for comparison.
+
+Run with simulated host devices to see the whole thing multi-device on CPU:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/gram_matrix_distributed.py
+
+(docs/api/public.md § Distributed & streaming Grams has the recipe.)
 """
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.config import GridConfig
-from repro.core.gram import sigkernel_gram
+from repro.core.gram import sigkernel_gram, sigkernel_gram_sharded
+from repro.core.losses import mmd2
 from repro.data.synthetic import gbm_paths
+from repro.launch.mesh import make_gram_mesh
 from repro.parallel.api import DEFAULT_RULES, logical_rules
 
 n_dev = len(jax.devices())
-mesh_shape = {1: (1, 1), 2: (2, 1), 4: (2, 2), 8: (4, 2),
-              512: (16, 16)}.get(n_dev, (n_dev, 1))
-mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+mesh = make_gram_mesh()          # near-square (data, model) over all devices
 print(f"devices: {n_dev}, mesh: {dict(mesh.shape)}")
 
 B, L, d = 32, 64, 4
+grid = GridConfig(1, 1)
 X = gbm_paths(jax.random.PRNGKey(0), B, L, d)
 Y = gbm_paths(jax.random.PRNGKey(1), B, L, d)
 
-gram = jax.jit(
-    lambda x, y: sigkernel_gram(x, y, grid=GridConfig(1, 1)),
+# -- 1. the sharded engine: one call, tiles dealt over the whole mesh -------
+K = sigkernel_gram_sharded(X, Y, mesh=mesh, grid=grid)
+jax.block_until_ready(K)
+print("sharded gram:", K.shape, " E[k(X,Y)] =", float(K.mean()))
+
+# symmetric: upper-triangle pairs (~2x fewer PDE solves) dealt round-robin
+# over all data*model devices, mirrored once on the way out
+Kxx = sigkernel_gram_sharded(X, mesh=mesh, grid=grid)
+print("sharded symmetric gram:", Kxx.shape,
+      " max asymmetry:", float(jnp.abs(Kxx - Kxx.T).max()))
+
+# shard-count invariance: a sub-mesh over fewer devices gives the same K
+K1 = sigkernel_gram_sharded(X, Y, mesh=make_gram_mesh(1), grid=grid)
+print("1-device == full-mesh:",
+      bool(np.allclose(np.asarray(K1), np.asarray(K), rtol=1e-5, atol=1e-6)))
+
+# ragged batches survive sharding unchanged: masking is burnt into the
+# end-aligned prepared streams before the tiles are dealt
+lengths = jnp.asarray([L - (i % 7) for i in range(B)])
+Kr = sigkernel_gram_sharded(X, Y, lengths=lengths, mesh=mesh, grid=grid)
+print("ragged sharded gram:", Kr.shape, "finite:",
+      bool(np.isfinite(np.asarray(Kr)).all()))
+
+# -- 2. streaming losses: the (B, B) Grams never exist ----------------------
+# row_block= auto-enables streaming: every Gram term becomes a checkpointed
+# per-block partial sum, in the forward and in the VJP; an abstract-trace
+# shape guard asserts no (B, B) intermediate is materialised.
+loss_dense = float(mmd2(X, Y, grid=grid))
+loss_stream = float(mmd2(X, Y, grid=grid, row_block=8))
+# mmd2 is a small difference of O(1) Gram sums, so compare absolutely:
+# summation order differs between the streaming and dense reductions
+print(f"mmd2 dense {loss_dense:.6f}  streaming {loss_stream:.6f}  "
+      f"match: {bool(np.allclose(loss_dense, loss_stream, atol=1e-5))}")
+
+g = jax.grad(lambda q: mmd2(q, Y, grid=grid, row_block=8))(X)
+print("streaming grad:", g.shape, "finite:",
+      bool(np.isfinite(np.asarray(g)).all()))
+
+# -- 3. classic route: jit-sharding the plain engine ------------------------
+gram_jit = jax.jit(
+    lambda x, y: sigkernel_gram(x, y, grid=grid),
     in_shardings=(NamedSharding(mesh, P("data")),
                   NamedSharding(mesh, P("model"))),
     out_shardings=NamedSharding(mesh, P("data", "model")))
-
-# under logical_rules the engine's own shard() annotations engage (rows ->
-# "batch" -> data axis, columns -> "model"), so the tiling is expressed once
-# inside repro.core.gram rather than at every call site
 with mesh, logical_rules(DEFAULT_RULES):
-    K = gram(X, Y)
-    jax.block_until_ready(K)
-
-print("gram:", K.shape, "sharding:", K.sharding)
-print("K[:2,:2]:\n", K[:2, :2])
-
-# MMD from sharded Gram blocks — one scalar all-reduce
-mmd = float(K.mean())
-print("E[k(X,Y)] =", mmd)
-
-# symmetric Gram (Y omitted): only the upper triangle is solved (~2x fewer
-# PDE solves), row-blocked so Bx need not divide the block size
-sym = jax.jit(lambda x: sigkernel_gram(x, grid=GridConfig(1, 1), row_block=8),
-              in_shardings=NamedSharding(mesh, P("data")),
-              out_shardings=NamedSharding(mesh, P("data", "model")))
-with mesh, logical_rules(DEFAULT_RULES):
-    Kxx = sym(X)
-    jax.block_until_ready(Kxx)
-print("symmetric gram:", Kxx.shape, "sharding:", Kxx.sharding)
-print("max asymmetry:", float(jnp.abs(Kxx - Kxx.T).max()))
+    Kj = gram_jit(X, Y)
+    jax.block_until_ready(Kj)
+print("jit-sharded gram:", Kj.shape, "sharding:", Kj.sharding)
+print("engines agree:",
+      bool(np.allclose(np.asarray(Kj), np.asarray(K), rtol=1e-5, atol=1e-6)))

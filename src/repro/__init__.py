@@ -16,7 +16,8 @@ The blessed public surface (API v1, see docs/api/public.md):
 from .api import LogSignature, SigKernel, Signature
 from .core.config import (GridConfig, Linear, RBF, StaticKernel,
                           TransformPipeline)
-from .core.gram import sigkernel_gram
+from .core.gram import (sigkernel_gram, sigkernel_gram_reduce,
+                        sigkernel_gram_sharded)
 from .core.logsignature import logsignature
 from .core.losses import mmd2, scoring_rule
 from .core.signature import signature
@@ -33,6 +34,7 @@ __all__ = [
     "Signature", "LogSignature", "SigKernel",
     # functional API
     "signature", "logsignature", "sigkernel", "sigkernel_gram",
+    "sigkernel_gram_reduce", "sigkernel_gram_sharded",
     "mmd2", "scoring_rule",
     # ragged-batch helpers (pre-jit canonicalisation; docs/api/public.md)
     "pad_ragged", "bucket_length",

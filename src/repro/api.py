@@ -114,15 +114,19 @@ class SigKernel:
 
     def mmd2(self, X: jax.Array, Y: jax.Array, *, unbiased: bool = True,
              row_block: Optional[int] = None,
+             streaming: Optional[bool] = None,
              lengths=None, lengths_y=None) -> jax.Array:
         return _losses.mmd2(X, Y, unbiased=unbiased, row_block=row_block,
+                            streaming=streaming,
                             lengths=lengths, lengths_y=lengths_y,
                             **self._kw())
 
     def scoring_rule(self, X: jax.Array, y: jax.Array, *,
                      row_block: Optional[int] = None,
+                     streaming: Optional[bool] = None,
                      lengths=None, length_y=None) -> jax.Array:
         return _losses.scoring_rule(X, y, row_block=row_block,
+                                    streaming=streaming,
                                     lengths=lengths, length_y=length_y,
                                     **self._kw())
 

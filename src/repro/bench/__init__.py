@@ -16,7 +16,7 @@ first-class, *recorded* artifact instead of a side effect:
     quick / full sizes, plus the CI smoke checks.
 ``suite``
     Runs a set of workloads and emits a schema-versioned BENCH JSON
-    (``BENCH_PR5.json`` at the repo root is the committed baseline) and a
+    (``BENCH_PR6.json`` at the repo root is the committed baseline) and a
     markdown summary.  CLI: ``python -m repro.bench [--smoke|--full]``.
 ``compare``
     Diffs two BENCH JSONs with machine-speed normalisation and per-entry

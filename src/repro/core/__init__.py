@@ -12,7 +12,8 @@ from .logsignature import (logsignature, logsignature_combine,
                            logsignature_dim)
 from .sigkernel import (sigkernel, solve_goursat,
                         solve_goursat_grad, delta_matrix)
-from .gram import sigkernel_gram
+from .gram import (sigkernel_gram, sigkernel_gram_reduce,
+                   sigkernel_gram_sharded)
 from .sigkernel import sigkernel_gram_blocked
 from .transforms import (time_augment, lead_lag, basepoint,
                          transform_increments, transform_path,
@@ -28,6 +29,7 @@ __all__ = [
     "signature_combine", "path_increments", "transformed_dim",
     "logsignature", "logsignature_combine", "logsignature_dim",
     "sigkernel", "sigkernel_gram", "sigkernel_gram_blocked",
+    "sigkernel_gram_reduce", "sigkernel_gram_sharded",
     "solve_goursat", "solve_goursat_grad", "delta_matrix", "time_augment",
     "lead_lag", "basepoint", "transform_increments", "transform_path",
     "pad_ragged", "bucket_length",

@@ -16,6 +16,24 @@ backend registry in :mod:`repro.core.dispatch`:
   ``Bx·(Bx+1)/2`` upper-triangle pairs are solved (≈2× fewer PDE solves for
   the ``Kxx``/``Kyy`` terms of every loss) and the result is mirrored.
 
+Beyond the single-device engine this module provides the *distributed* and
+*streaming* layers (docs/api/public.md § Distributed & streaming Grams):
+
+* :func:`sigkernel_gram_sharded` — the same Gram tiled over a real device
+  mesh via ``shard_map``: rows block-cyclic over the ``data`` axis, columns
+  block-cyclic over ``model``; the symmetric fast path deals the global
+  upper-triangle *pairs* round-robin over every device so the triangular
+  tile grid stays load-balanced.
+* :func:`sigkernel_gram_reduce` — streaming scalar reductions
+  (``ΣK`` with or without the diagonal) that accumulate per-row-block
+  partial sums under ``jax.checkpoint``, so neither the forward nor the
+  VJP ever materialises the full (Bx, By) Gram.  ``mmd2`` and
+  ``scoring_rule`` route through it when ``streaming=`` is on.
+* :func:`assert_streaming_reduction` — an ``eval_shape``-style abstract
+  trace (no FLOPs) over a reduction's jaxpr that raises
+  :class:`StreamingViolation` if any intermediate materialises a
+  ``(Bx, By, ...)`` array — the guard against silently densifying.
+
 Row blocks and the Gram tiling are annotated with the logical mesh axes of
 :mod:`repro.parallel.api` (rows → ``"batch"``, columns → ``"model"``), so
 under a mesh + ``logical_rules`` context a pod-scale Gram is one call; with
@@ -29,6 +47,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from . import dispatch
 from . import transforms as tf
@@ -37,6 +56,7 @@ from .config import (_maybe_scale as _scale, delta_from_gram,
 from .dispatch import UNSET
 from .sigkernel import _sigkernel_from_delta
 from repro.parallel.api import shard
+from repro.parallel.sharding import block_cyclic_perm, get_shard_map
 
 
 def _prepare(paths: jax.Array, cfg, kernel, lengths=None) -> jax.Array:
@@ -51,7 +71,8 @@ def _prepare(paths: jax.Array, cfg, kernel, lengths=None) -> jax.Array:
     each path's padding turns into exactly-zero leading Δ rows/columns for
     any pairing, which leaves the Goursat boundary of ones bitwise intact —
     so everything downstream of this function (pair gathers, row blocks,
-    the fused kernels, the symmetric fast path) is ragged-oblivious.
+    the fused kernels, the symmetric fast path, the sharded tiling) is
+    ragged-oblivious.
     """
     if kernel.lifts_increments:
         return tf.pipeline_increments(paths, cfg, lengths, align="end")
@@ -85,6 +106,108 @@ def _gram_block(sxb: jax.Array, sY: jax.Array, kernel, backend: str,
         return pde_ops.gram_fused(_scale(sxb, kernel.scale), sY, lam1, lam2)
     delta = _pair_delta(sxb[:, None], sY[None, :], kernel)
     return _sigkernel_from_delta(delta, lam1, lam2, backend)
+
+
+def _gram_rows(sX: jax.Array, sY: jax.Array, kernel, backend: str,
+               lam1: int, lam2: int,
+               row_block: Optional[int]) -> jax.Array:
+    """(Bx, ·, d) × (By, ·, d) -> (Bx, By), optionally ``row_block`` rows
+    in flight at a time (``Bx`` zero-padded; padded rows dropped)."""
+    Bx, By = sX.shape[0], sY.shape[0]
+    if row_block is None:
+        return _gram_block(sX, sY, kernel, backend, lam1, lam2)
+    pad = (-Bx) % row_block
+    if pad:  # zero rows -> Δ = 0 -> k = 1 rows, dropped below: exact
+        sX = jnp.pad(sX, ((0, pad), (0, 0), (0, 0)))
+    n_blocks = (Bx + pad) // row_block
+    sXb = sX.reshape(n_blocks, row_block, *sX.shape[1:])
+    K = jax.lax.map(
+        lambda sxb: _gram_block(sxb, sY, kernel, backend, lam1, lam2),
+        sXb)
+    return K.reshape(n_blocks * row_block, By)[:Bx]
+
+
+def _solve_pairs_chunked(sX: jax.Array, a_idx, b_idx, kernel, backend: str,
+                         lam1: int, lam2: int,
+                         chunk: Optional[int]) -> jax.Array:
+    """k values for an explicit pair list into one stream batch, at most
+    ``chunk`` pairs of replicated increments live at once.
+
+    Only the (chunk,)-sized index arrays are materialised up front; the
+    pair gather itself happens inside the mapped body, one chunk at a
+    time, so live replicated increments stay at 2·chunk·L·d floats.
+    Padding pairs (0, 0) are solved and dropped (exact; accounted by the
+    caller's pair-solve budget).
+    """
+    a_idx, b_idx = jnp.asarray(a_idx), jnp.asarray(b_idx)
+    n = a_idx.shape[0]
+    if chunk is None or chunk >= n:
+        return _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend,
+                            lam1, lam2)
+    pad = (-n) % chunk
+    a = jnp.concatenate([a_idx, jnp.zeros((pad,), a_idx.dtype)])
+    b = jnp.concatenate([b_idx, jnp.zeros((pad,), b_idx.dtype)])
+    k = jax.lax.map(
+        lambda ab: _solve_pairs(sX[ab[0]], sX[ab[1]], kernel, backend,
+                                lam1, lam2),
+        (a.reshape(-1, chunk), b.reshape(-1, chunk)))
+    return k.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# shared front-end: validation, config resolution, ragged padding, dispatch
+# ---------------------------------------------------------------------------
+
+def _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms, grid,
+                    static_kernel, lam1, lam2, time_aug, lead_lag,
+                    use_pallas, solver, backend):
+    """The engine front-end every Gram entry point shares.
+
+    Validates shapes/flags, resolves configs + legacy shims, pads ragged
+    batches, and resolves ``backend`` through the dispatch registry.
+    Returns ``(X, Y, cfg, grid_cfg, kernel, backend, symmetric)`` with
+    ``X``/``Y`` already ragged-padded (masking is burnt into the prepared
+    streams downstream, so ``lengths`` are consumed here).
+    """
+    if X.ndim != 3 or (Y is not None and Y.ndim != 3):
+        raise ValueError(
+            f"sigkernel_gram expects (B, L, d) paths, got X {X.shape}"
+            + ("" if Y is None else f", Y {Y.shape}"))
+    if symmetric is None:
+        symmetric = Y is None
+    if symmetric and not (Y is None or Y is X):
+        raise ValueError("symmetric=True requires Y to be None or X itself")
+    if not symmetric and Y is None:
+        raise ValueError("symmetric=False requires Y (pass Y=X for the "
+                         "full symmetric Gram without the fast path)")
+    if lengths_y is not None and Y is None:
+        raise ValueError("lengths_y= requires Y; for the symmetric Gram "
+                         "pass lengths= (it applies to both sides)")
+
+    cfg, g, kernel = resolve_kernel_configs(
+        transforms, grid, static_kernel, time_aug=time_aug,
+        lead_lag=lead_lag, lam1=lam1, lam2=lam2)
+    if lengths is not None:
+        X, lengths = tf.pad_ragged(X, lengths)
+    if lengths_y is not None:
+        Y, lengths_y = tf.pad_ragged(Y, lengths_y)
+    ragged = lengths is not None or lengths_y is not None
+    backend = dispatch.canonicalize(backend, op="gram",
+                                    use_pallas=use_pallas, solver=solver)
+    if backend == "pallas_fused" and not kernel.lifts_increments:
+        raise ValueError(
+            "backend='pallas_fused' builds Δ from increments in VMEM and "
+            f"only supports the linear lift, got "
+            f"static_kernel={type(kernel).__name__}; pass backend='auto'")
+    Lx = cfg.transformed_steps(X.shape[1])
+    Ly = Lx if Y is None else cfg.transformed_steps(Y.shape[1])
+    By = X.shape[0] if Y is None else Y.shape[0]
+    backend = dispatch.resolve(
+        backend, op="gram", grid_cells=(Lx << g.lam1) * (Ly << g.lam2),
+        shape=(X.shape[0], By, Lx << g.lam1, Ly << g.lam2,
+               cfg.transformed_dim(X.shape[-1])),
+        dtype=X.dtype, allow_fused=kernel.lifts_increments, ragged=ragged)
+    return X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric
 
 
 def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
@@ -133,46 +256,16 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
     Returns:
       (Bx, By) Gram matrix (f32), differentiable end-to-end through the
       exact one-pass backward on every backend.
-    """
-    if X.ndim != 3 or (Y is not None and Y.ndim != 3):
-        raise ValueError(
-            f"sigkernel_gram expects (B, L, d) paths, got X {X.shape}"
-            + ("" if Y is None else f", Y {Y.shape}"))
-    if symmetric is None:
-        symmetric = Y is None
-    if symmetric and not (Y is None or Y is X):
-        raise ValueError("symmetric=True requires Y to be None or X itself")
-    if not symmetric and Y is None:
-        raise ValueError("symmetric=False requires Y (pass Y=X for the "
-                         "full symmetric Gram without the fast path)")
-    if lengths_y is not None and Y is None:
-        raise ValueError("lengths_y= requires Y; for the symmetric Gram "
-                         "pass lengths= (it applies to both sides)")
 
-    cfg, g, kernel = resolve_kernel_configs(
-        transforms, grid, static_kernel, time_aug=time_aug,
-        lead_lag=lead_lag, lam1=lam1, lam2=lam2)
+    See also :func:`sigkernel_gram_sharded` (the same Gram tiled over a
+    device mesh) and :func:`sigkernel_gram_reduce` (streaming ``ΣK``
+    without materialising K — what ``mmd2(streaming=True)`` uses).
+    """
+    X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric = \
+        _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms,
+                        grid, static_kernel, lam1, lam2, time_aug, lead_lag,
+                        use_pallas, solver, backend)
     lam1, lam2 = g.lam1, g.lam2
-    if lengths is not None:
-        X, lengths = tf.pad_ragged(X, lengths)
-    if lengths_y is not None:
-        Y, lengths_y = tf.pad_ragged(Y, lengths_y)
-    ragged = lengths is not None or lengths_y is not None
-    backend = dispatch.canonicalize(backend, op="gram",
-                                    use_pallas=use_pallas, solver=solver)
-    if backend == "pallas_fused" and not kernel.lifts_increments:
-        raise ValueError(
-            "backend='pallas_fused' builds Δ from increments in VMEM and "
-            f"only supports the linear lift, got "
-            f"static_kernel={type(kernel).__name__}; pass backend='auto'")
-    Lx = cfg.transformed_steps(X.shape[1])
-    Ly = Lx if Y is None else cfg.transformed_steps(Y.shape[1])
-    By = X.shape[0] if Y is None else Y.shape[0]
-    backend = dispatch.resolve(
-        backend, op="gram", grid_cells=(Lx << lam1) * (Ly << lam2),
-        shape=(X.shape[0], By, Lx << lam1, Ly << lam2,
-               cfg.transformed_dim(X.shape[-1])),
-        dtype=X.dtype, allow_fused=kernel.lifts_increments, ragged=ragged)
 
     sX = _prepare(X, cfg, kernel, lengths)
     sX = shard(sX, "batch", None, None)
@@ -187,18 +280,10 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
 
     if row_block is None:
         dispatch.record_pair_solves(Bx * By)
-        K = _gram_block(sX, sY, kernel, backend, lam1, lam2)
     else:
-        pad = (-Bx) % row_block
-        if pad:  # zero rows -> Δ = 0 -> k = 1 rows, dropped below: exact
-            sX = jnp.pad(sX, ((0, pad), (0, 0), (0, 0)))
-        n_blocks = (Bx + pad) // row_block
+        n_blocks = (Bx + (-Bx) % row_block) // row_block
         dispatch.record_pair_solves(n_blocks * row_block * By)
-        sXb = sX.reshape(n_blocks, row_block, *sX.shape[1:])
-        K = jax.lax.map(
-            lambda sxb: _gram_block(sxb, sY, kernel, backend, lam1, lam2),
-            sXb)
-        K = K.reshape(n_blocks * row_block, By)[:Bx]
+    K = _gram_rows(sX, sY, kernel, backend, lam1, lam2, row_block)
     return shard(K, "batch", "model")
 
 
@@ -206,6 +291,12 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
 # above this budget an unset row_block is auto-chunked so the symmetric fast
 # path never costs more HBM than the dense Gram it replaces
 _SYM_GATHER_BUDGET = 64 * 1024 * 1024
+
+
+def _auto_row_block(other: int, L: int, d: int) -> int:
+    """Row block bounding one block's replicated-stream bytes by the
+    gather budget: ``row_block`` rows against ``other`` columns."""
+    return max(1, _SYM_GATHER_BUDGET // (8 * max(1, other) * L * d))
 
 
 def _symmetric_gram(sX: jax.Array, kernel, backend: str,
@@ -218,31 +309,435 @@ def _symmetric_gram(sX: jax.Array, kernel, backend: str,
 
     if row_block is None and 8 * n_pairs * sX.shape[1] * sX.shape[2] \
             > _SYM_GATHER_BUDGET:
-        row_block = max(1, _SYM_GATHER_BUDGET
-                        // (8 * Bx * sX.shape[1] * sX.shape[2]))
+        row_block = _auto_row_block(Bx, sX.shape[1], sX.shape[2])
 
     if row_block is None:
         dispatch.record_pair_solves(n_pairs)
         k = _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend, lam1, lam2)
     else:
-        # a block of `row_block` Gram rows ~ row_block·Bx pairs of live Δ.
-        # Only the (chunk,)-sized index arrays are materialised up front; the
-        # pair gather itself happens inside the mapped body, one chunk at a
-        # time, so live replicated increments stay at 2·chunk·L·d floats.
+        # a block of `row_block` Gram rows ~ row_block·Bx pairs of live Δ
         chunk = max(1, int(row_block)) * Bx
-        pad = (-n_pairs) % chunk
-        a_pad = np.concatenate([a_idx, np.zeros(pad, a_idx.dtype)])
-        b_pad = np.concatenate([b_idx, np.zeros(pad, b_idx.dtype)])
-        n_blocks = (n_pairs + pad) // chunk
-        dispatch.record_pair_solves(n_pairs + pad)
-        a_chunks = jnp.asarray(a_pad).reshape(n_blocks, chunk)
-        b_chunks = jnp.asarray(b_pad).reshape(n_blocks, chunk)
-        k = jax.lax.map(
-            lambda ab: _solve_pairs(sX[ab[0]], sX[ab[1]], kernel, backend,
-                                    lam1, lam2),
-            (a_chunks, b_chunks))
-        k = k.reshape(-1)[:n_pairs]
+        dispatch.record_pair_solves(n_pairs + (-n_pairs) % chunk)
+        k = _solve_pairs_chunked(sX, a_idx, b_idx, kernel, backend,
+                                 lam1, lam2, chunk)
 
     K = jnp.zeros((Bx, Bx), k.dtype).at[a_idx, b_idx].set(k)
     K = K + jnp.triu(K, k=1).T
+    return shard(K, "batch", "model")
+
+
+# ---------------------------------------------------------------------------
+# streaming reductions — ΣK without materialising K (mmd2 / scoring_rule)
+# ---------------------------------------------------------------------------
+
+class StreamingViolation(RuntimeError):
+    """A reduction that was requested to stream materialises the full Gram
+    (or the full pairwise Δ stack) as an intermediate."""
+
+
+def _walk_jaxpr_avals(jaxpr, visit) -> None:
+    """Visit the aval of every intermediate in ``jaxpr``, recursing into
+    sub-jaxprs (scan/map bodies, custom-vjp branches, pjit calls...)."""
+    for eqn in jaxpr.eqns:
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                visit(aval)
+        stack = list(eqn.params.values())
+        while stack:
+            obj = stack.pop()
+            if hasattr(obj, "eqns"):            # a Jaxpr
+                _walk_jaxpr_avals(obj, visit)
+            elif hasattr(obj, "jaxpr"):         # a ClosedJaxpr
+                stack.append(obj.jaxpr)
+            elif isinstance(obj, (list, tuple)):
+                stack.extend(obj)
+
+
+def assert_streaming_reduction(fn, *args, gram_shape,
+                               what: str = "reduction") -> None:
+    """Abstractly trace ``fn(*args)`` and raise :class:`StreamingViolation`
+    if any intermediate materialises an array with leading dims
+    ``gram_shape = (Bx, By)``.
+
+    This is an ``eval_shape``-grade check: ``fn`` is traced with abstract
+    values only (``args`` may be arrays or ``jax.ShapeDtypeStruct``), no
+    FLOPs run, and every intermediate of the resulting jaxpr — including
+    scan/map bodies and custom-VJP branches — is shape-checked.  Pass
+    ``jax.value_and_grad(fn)`` to cover the VJP as well; ``mmd2`` /
+    ``scoring_rule`` do exactly that when ``streaming=`` is on.
+
+    The check keys on the *leading-dims* fingerprint of the dense engine:
+    the full Gram is ``(Bx, By)`` and the dense pairwise Δ stack is
+    ``(Bx, By, Lx, Ly)``, so both are caught by one prefix test.  Pick
+    ``Bx != By`` and batch sizes distinct from L/d in tests to avoid
+    shape-coincidence false positives (the internal guard behind
+    ``mmd2(streaming=True)`` de-aliases them automatically by re-tracing
+    with bumped batch sizes — genuine dense intermediates track the batch
+    dims, coincidences like a ragged pad width equal to ``Bx`` do not).
+    """
+    offending = _dense_intermediates(fn, *args, gram_shape=gram_shape)
+    if offending:
+        bx, by = gram_shape
+        raise StreamingViolation(
+            f"streaming {what} materialises dense ({bx}, {by}) "
+            f"intermediates: {sorted(set(offending))} — the full Gram "
+            "(or pairwise Δ stack) must never exist; lower row_block or "
+            "report a bug in repro.core.gram")
+
+
+def _dense_intermediates(fn, *args, gram_shape) -> list:
+    """Shapes of every intermediate of the abstract trace of ``fn(*args)``
+    whose leading dims equal ``gram_shape``."""
+    bx, by = gram_shape
+    closed = jax.make_jaxpr(fn)(*args)
+    offending = []
+
+    def visit(aval):
+        if len(aval.shape) >= 2 and aval.shape[0] == bx \
+                and aval.shape[1] == by:
+            offending.append(tuple(aval.shape))
+
+    _walk_jaxpr_avals(closed.jaxpr, visit)
+    return offending
+
+
+#: (shape/config) keys whose streaming reduction already passed the guard
+_stream_checked: set = set()
+
+
+def _reduce_guard_key(args) -> Optional[tuple]:
+    try:
+        hash(args)
+        return args
+    except TypeError:
+        return None  # unhashable config leaf (e.g. traced sigma): recheck
+
+
+def sigkernel_gram_reduce(X: jax.Array, Y: Optional[jax.Array] = None, *,
+                          include_diag: bool = True,
+                          backend: str = "auto",
+                          row_block: Optional[int] = None,
+                          symmetric: Optional[bool] = None,
+                          lengths=None, lengths_y=None,
+                          transforms=None, grid=None, static_kernel=None,
+                          lam1=UNSET, lam2=UNSET,
+                          time_aug=UNSET, lead_lag=UNSET,
+                          use_pallas=UNSET, solver=UNSET,
+                          check_streaming: bool = False) -> jax.Array:
+    """Streaming ``Σ_{a,b} K[a, b]`` — the Gram-sum without the Gram.
+
+    The workhorse of ``mmd2(streaming=True)`` / ``scoring_rule``:
+    accumulates per-row-block (asymmetric) or per-pair-chunk (symmetric)
+    partial sums under ``jax.checkpoint``, so at most one block of PDE
+    solves is live at a time in the forward AND the backward — the VJP
+    rematerialises each block instead of stacking residuals.  The full
+    (Bx, By) Gram, and the (Bx, By, Lx, Ly) pairwise Δ stack, never exist.
+
+    Args (beyond :func:`sigkernel_gram`'s):
+      include_diag: symmetric reductions only — ``False`` drops the
+        ``k(x_a, x_a)`` diagonal (the ``Σ − tr`` of the unbiased MMD) at
+        zero extra solves (off-diagonal pairs enter with weight 2, the
+        diagonal with weight 0).
+      row_block: streaming granularity — at most ``row_block`` Gram rows
+        (or ``row_block · Bx`` symmetric pairs) in flight.  Default: the
+        largest block that fits the engine's pair-gather budget (for small
+        problems that is one block, i.e. dense-equivalent).
+      check_streaming: run :func:`assert_streaming_reduction` on this
+        reduction (value + grad) once per shape/config key before
+        executing — the guard ``mmd2``/``scoring_rule`` enable whenever a
+        streaming path is requested.  Skipped when one block covers the
+        whole batch (streaming degenerates to dense by construction).
+
+    Returns a scalar (f32), differentiable with the same exact one-pass
+    backward as the Gram itself.
+    """
+    if not include_diag and not (symmetric or
+                                 (symmetric is None and Y is None)):
+        raise ValueError("include_diag=False requires the symmetric "
+                         "reduction (Y=None)")
+    # capture pre-padding abstract args for the guard: the re-entrant
+    # closure below replays the padding itself
+    guard_args = (X, Y, lengths, lengths_y)
+    X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric = \
+        _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms,
+                        grid, static_kernel, lam1, lam2, time_aug, lead_lag,
+                        use_pallas, solver, backend)
+    lam1, lam2 = g.lam1, g.lam2
+
+    sX = _prepare(X, cfg, kernel, lengths)
+    Bx, L, d = sX.shape
+
+    if symmetric:
+        rb = row_block if row_block is not None else _auto_row_block(Bx, L, d)
+        streams = rb * Bx < Bx * (Bx + 1) // 2
+    else:
+        By = Y.shape[0]
+        rb = row_block if row_block is not None else _auto_row_block(By, L, d)
+        streams = rb < Bx
+
+    if check_streaming and streams:
+        _guard_reduce(guard_args, include_diag=include_diag,
+                      backend=backend, row_block=rb, symmetric=symmetric,
+                      transforms=cfg, grid=g, static_kernel=kernel)
+
+    if symmetric:
+        return _reduce_symmetric(sX, kernel, backend, rb, lam1, lam2,
+                                 include_diag)
+    sY = _prepare(Y, cfg, kernel, lengths_y)
+    return _reduce_rows(sX, sY, kernel, backend, rb, lam1, lam2)
+
+
+def _guard_reduce(guard_args, **kw) -> None:
+    """Run the streaming-shape guard (value + grad) once per key.
+
+    An abstract trace at the real batch sizes first, and — only if that
+    finds a ``(Bx, By)``-shaped intermediate — confirmation traces with
+    the batch dims AND ``row_block`` bumped (by one and by two).  A
+    genuine dense Gram/Δ intermediate tracks the batch dims and is
+    ``row_block``-independent, so it survives every bump.  Shape
+    coincidences involve a size that does not track both bumped batch
+    dims: static sizes (a ragged pad width equal to ``Bx``, a PDE grid
+    dim equal to ``By``) cannot match the batch at two different bumps,
+    and block-derived sizes (the symmetric pair chunk ``row_block · Bx``,
+    the per-block row count) are pushed off the batch diagonal by the
+    ``row_block`` bump — so both classes are cleared as false positives.
+    """
+    X, Y, lengths, lengths_y = guard_args
+    names = [n for n, a in (("lengths", lengths), ("lengths_y", lengths_y))
+             if a is not None]
+    lens = [jnp.asarray(a) for a in (lengths, lengths_y) if a is not None]
+    key = _reduce_guard_key((
+        X.shape, str(X.dtype), None if Y is None else (Y.shape, str(Y.dtype)),
+        tuple((a.shape, str(a.dtype)) for a in lens), tuple(names),
+        tuple(sorted((k, repr(v)) for k, v in kw.items()))))
+    if key is not None and key in _stream_checked:
+        return
+    n_arr = 1 if Y is None else 2
+    diff = tuple(range(n_arr))
+
+    def trace(bump):
+        kwb = dict(kw, row_block=kw["row_block"] + bump)
+
+        def red(*args):
+            arrs, ls = args[:n_arr], args[n_arr:]
+            return sigkernel_gram_reduce(*arrs, check_streaming=False,
+                                         **dict(zip(names, ls)), **kwb)
+
+        def s(a):
+            return jax.ShapeDtypeStruct((a.shape[0] + bump,)
+                                        + tuple(a.shape[1:]), a.dtype)
+        args = [s(X)] + ([] if Y is None else [s(Y)]) + [s(a) for a in lens]
+        bx = X.shape[0] + bump
+        by = bx if Y is None else Y.shape[0] + bump
+        return _dense_intermediates(
+            jax.value_and_grad(red, argnums=diff), *args,
+            gram_shape=(bx, by)), (bx, by)
+
+    offending, (bx, by) = trace(0)
+    if offending:
+        if trace(1)[0] and trace(2)[0]:
+            raise StreamingViolation(
+                f"streaming Gram reduction materialises dense ({bx}, {by}) "
+                f"intermediates: {sorted(set(offending))} — the full Gram "
+                "(or pairwise Δ stack) must never exist; lower row_block "
+                "or report a bug in repro.core.gram")
+    if key is not None:
+        _stream_checked.add(key)
+
+
+def _reduce_symmetric(sX: jax.Array, kernel, backend: str, row_block: int,
+                      lam1: int, lam2: int,
+                      include_diag: bool) -> jax.Array:
+    """Σ over the symmetric Gram via the upper triangle: off-diagonal
+    pairs weighted 2, diagonal 1 (or 0), padding 0."""
+    Bx = sX.shape[0]
+    a_idx, b_idx = np.triu_indices(Bx)
+    w = np.where(a_idx == b_idx, 1.0 if include_diag else 0.0, 2.0)
+    n_pairs = a_idx.size
+    chunk = max(1, int(row_block)) * Bx
+    if chunk == Bx:
+        # keep the per-chunk solver's (chunk, ...) intermediates off the
+        # (Bx, Bx) fingerprint the streaming-shape guard scans for
+        chunk = Bx + 1
+    if chunk >= n_pairs:
+        dispatch.record_pair_solves(n_pairs)
+        k = _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend, lam1, lam2)
+        return (jnp.asarray(w, k.dtype) * k).sum()
+    pad = (-n_pairs) % chunk
+    dispatch.record_pair_solves(n_pairs + pad)
+    a = np.concatenate([a_idx, np.zeros(pad, a_idx.dtype)])
+    b = np.concatenate([b_idx, np.zeros(pad, b_idx.dtype)])
+    wts = np.concatenate([w, np.zeros(pad, w.dtype)])
+    a_c = jnp.asarray(a).reshape(-1, chunk)
+    b_c = jnp.asarray(b).reshape(-1, chunk)
+    w_c = jnp.asarray(wts, sX.dtype).reshape(-1, chunk)
+
+    def block(abw):
+        ai, bi, wi = abw
+        k = _solve_pairs(sX[ai], sX[bi], kernel, backend, lam1, lam2)
+        return (wi * k).sum()
+
+    # checkpoint: lax.map would otherwise stack every block's Δ/grid
+    # residuals — the backward rematerialises them one block at a time
+    parts = jax.lax.map(jax.checkpoint(block), (a_c, b_c, w_c))
+    return parts.sum()
+
+
+def _reduce_rows(sX: jax.Array, sY: jax.Array, kernel, backend: str,
+                 row_block: int, lam1: int, lam2: int) -> jax.Array:
+    """Σ over the (Bx, By) Gram, ``row_block`` rows at a time."""
+    Bx, By = sX.shape[0], sY.shape[0]
+    rb = max(1, int(row_block))
+    if rb == 1 and By == 1:
+        # (n_blocks, rb) = (Bx, 1) stacked blocks would alias the (Bx, 1)
+        # Gram fingerprint the streaming-shape guard scans for
+        rb = 2
+    if rb >= Bx:
+        dispatch.record_pair_solves(Bx * By)
+        return _gram_block(sX, sY, kernel, backend, lam1, lam2).sum()
+    pad = (-Bx) % rb
+    n_blocks = (Bx + pad) // rb
+    dispatch.record_pair_solves(n_blocks * rb * By)
+    if pad:
+        sX = jnp.pad(sX, ((0, pad), (0, 0), (0, 0)))
+    sXb = sX.reshape(n_blocks, rb, *sX.shape[1:])
+    # padded rows give k = 1 (zero increments), NOT 0 — mask them out
+    valid = (jnp.arange(n_blocks * rb).reshape(n_blocks, rb) < Bx)
+
+    def block(args):
+        sxb, v = args
+        Kb = _gram_block(sxb, sY, kernel, backend, lam1, lam2)
+        return jnp.where(v[:, None], Kb, 0.0).sum()
+
+    parts = jax.lax.map(jax.checkpoint(block), (sXb, valid))
+    return parts.sum()
+
+
+# ---------------------------------------------------------------------------
+# sharded Gram — the (Bx, By) tile grid over a real device mesh
+# ---------------------------------------------------------------------------
+
+def sigkernel_gram_sharded(X: jax.Array, Y: Optional[jax.Array] = None, *,
+                           mesh=None, row_axis: str = "data",
+                           col_axis: str = "model", tile: int = 8,
+                           backend: str = "auto",
+                           row_block: Optional[int] = None,
+                           symmetric: Optional[bool] = None,
+                           lengths=None, lengths_y=None,
+                           transforms=None, grid=None,
+                           static_kernel=None) -> jax.Array:
+    """:func:`sigkernel_gram` tiled over a device mesh via ``shard_map``.
+
+    The (Bx, By) Gram tile grid is 2-D **block-cyclic** sharded: row tiles
+    of ``tile`` paths dealt round-robin over ``mesh[row_axis]``, column
+    tiles over ``mesh[col_axis]``.  Each device solves its tiles' Goursat
+    problems entirely locally from replicated prepared streams — no
+    collectives cross the PDE solves; only the output concatenation (and
+    whatever reduction the caller applies) is cross-device.
+
+    The symmetric fast path is preserved *globally*: when ``Y`` is
+    omitted, the ``Bx·(Bx+1)/2`` upper-triangle pairs are dealt
+    round-robin over **all** ``mesh[row_axis]·mesh[col_axis]`` devices (the
+    cyclic deal is what keeps the triangular tile grid load-balanced — a
+    contiguous split would give the last device ~2× the solves of the
+    first), solved locally, and mirrored once on the way out.  Total PDE
+    solves stay at the triangle count (+ round-up padding), exactly as on
+    one device.
+
+    Args (beyond the single-device engine's):
+      mesh: a :class:`jax.sharding.Mesh` with ``row_axis`` and ``col_axis``
+        axes.  Default: :func:`repro.launch.mesh.make_gram_mesh` over every
+        local device (a near-square ``(data, model)`` factorisation).
+      tile: block-cyclic tile granularity (rows and columns).
+      row_block: per-device sub-chunking — at most ``row_block`` local Gram
+        rows (or ``row_block · Bx`` symmetric pairs) in flight per device.
+
+    Ragged batches (``lengths=``) work unchanged: masking is burnt into the
+    end-aligned prepared streams *before* the tiles are dealt, so the
+    sharded tiling is ragged-oblivious.  Values match the single-device
+    engine to reduction-order tolerance (bitwise for the pair solves
+    themselves — only concatenation order differs).
+
+    On a 1-device mesh this degenerates to the single-device engine.
+    Prove it on a simulated mesh with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see
+    docs/api/public.md § Distributed & streaming Grams and
+    ``examples/gram_matrix_distributed.py``).
+    """
+    X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric = \
+        _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms,
+                        grid, static_kernel, UNSET, UNSET, UNSET, UNSET,
+                        UNSET, UNSET, backend)
+    lam1, lam2 = g.lam1, g.lam2
+    if mesh is None:
+        from repro.launch.mesh import make_gram_mesh
+        mesh = make_gram_mesh()
+    for ax in (row_axis, col_axis):
+        if ax not in mesh.shape:
+            raise ValueError(
+                f"mesh has no {ax!r} axis (axes: {tuple(mesh.shape)}); "
+                "pass row_axis=/col_axis= matching your mesh")
+    shard_map = get_shard_map()
+    nd, nm = mesh.shape[row_axis], mesh.shape[col_axis]
+
+    sX = _prepare(X, cfg, kernel, lengths)
+    Bx = sX.shape[0]
+
+    if symmetric:
+        D = nd * nm
+        a_idx, b_idx = np.triu_indices(Bx)
+        n_pairs = a_idx.size
+        pad = (-n_pairs) % D
+        a_pad = np.concatenate([a_idx, np.zeros(pad, a_idx.dtype)])
+        b_pad = np.concatenate([b_idx, np.zeros(pad, b_idx.dtype)])
+        n_loc = (n_pairs + pad) // D
+        # round-robin deal: device r solves global pairs r, r+D, r+2D, ...
+        a_dev = jnp.asarray(a_pad.reshape(n_loc, D).T.copy())   # (D, n_loc)
+        b_dev = jnp.asarray(b_pad.reshape(n_loc, D).T.copy())
+        dispatch.record_pair_solves(n_pairs + pad)
+        chunk = None if row_block is None else max(1, int(row_block)) * Bx
+
+        def local(a_loc, b_loc, sx):
+            k = _solve_pairs_chunked(sx, a_loc[0], b_loc[0], kernel,
+                                     backend, lam1, lam2, chunk)
+            return k[None]
+
+        k_dev = shard_map(
+            local, mesh=mesh,
+            in_specs=(P((row_axis, col_axis)), P((row_axis, col_axis)),
+                      P()),
+            out_specs=P((row_axis, col_axis)))(a_dev, b_dev, sX)
+        # undo the deal: global pair t·D + r sits at device r, slot t
+        k = k_dev.reshape(D, n_loc).T.reshape(-1)[:n_pairs]
+        K = jnp.zeros((Bx, Bx), k.dtype).at[a_idx, b_idx].set(k)
+        K = K + jnp.triu(K, k=1).T
+        return shard(K, "batch", "model")
+
+    sY = _prepare(Y, cfg, kernel, lengths_y)
+    By = sY.shape[0]
+
+    def _deal(s, n_shards):
+        """Pad + block-cyclic permute dim 0; returns (dealt, inv_perm)."""
+        B = s.shape[0]
+        t = max(1, min(int(tile), -(-B // n_shards)))
+        n_blocks = -(-B // t)
+        n_blocks += (-n_blocks) % n_shards
+        padded = n_blocks * t
+        if padded > B:  # zero rows -> k = 1 tiles, sliced off at the end
+            s = jnp.pad(s, ((0, padded - B),) + ((0, 0),) * (s.ndim - 1))
+        perm, inv = block_cyclic_perm(padded, n_shards, t)
+        return s[jnp.asarray(perm)], inv
+
+    sXp, invR = _deal(sX, nd)
+    sYp, invC = _deal(sY, nm)
+    dispatch.record_pair_solves(sXp.shape[0] * sYp.shape[0])
+
+    def local(sx, sy):
+        return _gram_rows(sx, sy, kernel, backend, lam1, lam2, row_block)
+
+    Kp = shard_map(local, mesh=mesh,
+                   in_specs=(P(row_axis), P(col_axis)),
+                   out_specs=P(row_axis, col_axis))(sXp, sYp)
+    K = Kp[jnp.asarray(invR)][:, jnp.asarray(invC)][:Bx, :By]
     return shard(K, "batch", "model")

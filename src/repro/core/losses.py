@@ -7,6 +7,14 @@ are differentiable through the exact one-pass backward of
 engine in ``repro.core.gram`` — the symmetric ``Kxx``/``Kyy`` terms solve
 only the upper triangle (≈2× fewer PDE solves), and ``backend=`` selects the
 solver via the registry in ``repro.core.dispatch``.
+
+With ``streaming=`` on (auto-enabled whenever ``row_block=`` is set) the
+losses never materialise their Gram matrices at all: every term routes
+through :func:`repro.core.gram.sigkernel_gram_reduce`, which accumulates
+per-row-block partial sums under ``jax.checkpoint`` in both the forward and
+the VJP, and the shape guard
+:func:`repro.core.gram.assert_streaming_reduction` abstractly traces the
+reduction once per shape to prove no (B, B) intermediate exists.
 """
 
 from __future__ import annotations
@@ -18,12 +26,22 @@ import jax.numpy as jnp
 
 from .config import resolve_kernel_configs
 from .dispatch import UNSET
-from .gram import sigkernel_gram
+from .gram import sigkernel_gram, sigkernel_gram_reduce
+
+
+def _use_streaming(streaming: Optional[bool],
+                   row_block: Optional[int]) -> bool:
+    """``streaming=None`` means auto: stream iff the caller bounded memory
+    with ``row_block=`` (the only reason to pay the reduction's extra
+    trace); explicit True/False always wins."""
+    if streaming is None:
+        return row_block is not None
+    return bool(streaming)
 
 
 def mmd2(X: jax.Array, Y: jax.Array, *, transforms=None, grid=None,
          static_kernel=None, unbiased: bool = True, backend: str = "auto",
-         row_block: Optional[int] = None,
+         row_block: Optional[int] = None, streaming: Optional[bool] = None,
          lengths=None, lengths_y=None,
          lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
          use_pallas=UNSET) -> jax.Array:
@@ -42,6 +60,16 @@ def mmd2(X: jax.Array, Y: jax.Array, *, transforms=None, grid=None,
     padding exactly (see :func:`repro.core.gram.sigkernel_gram`), so the two
     sides may be padded to *different* L and still compare correctly.
 
+    ``streaming`` — ``True`` accumulates all three Gram terms as per-block
+    partial sums (forward and gradient) via
+    :func:`repro.core.gram.sigkernel_gram_reduce`, so the full (B, B) Grams
+    never exist; peak memory is set by ``row_block`` instead of the batch.
+    ``None`` (default) auto-enables streaming when ``row_block=`` is set;
+    ``False`` forces the dense Grams.  Values and gradients match the dense
+    path to summation-order tolerance, and an intermediate-shape assertion
+    (abstract trace, no FLOPs, once per shape) guards against the streaming
+    path silently densifying.
+
     The unbiased estimator divides by ``b·(b−1)`` and therefore needs at
     least two samples on each side — a single-sample batch raises instead of
     silently returning NaN; use ``unbiased=False`` for ``b = 1``.
@@ -57,6 +85,21 @@ def mmd2(X: jax.Array, Y: jax.Array, *, transforms=None, grid=None,
         lead_lag=lead_lag, lam1=lam1, lam2=lam2)
     kw = dict(transforms=cfg, grid=g, static_kernel=kernel,
               backend=backend, row_block=row_block, use_pallas=use_pallas)
+    if _use_streaming(streaming, row_block):
+        rkw = dict(kw, check_streaming=True)
+        sxx_sum = sigkernel_gram_reduce(X, lengths=lengths,
+                                        include_diag=not unbiased, **rkw)
+        syy_sum = sigkernel_gram_reduce(Y, lengths=lengths_y,
+                                        include_diag=not unbiased, **rkw)
+        sxy_sum = sigkernel_gram_reduce(X, Y, lengths=lengths,
+                                        lengths_y=lengths_y, **rkw)
+        if unbiased:
+            sxx = sxx_sum / (bx * (bx - 1))
+            syy = syy_sum / (by * (by - 1))
+        else:
+            sxx = sxx_sum / (bx * bx)
+            syy = syy_sum / (by * by)
+        return sxx + syy - 2.0 * sxy_sum / (bx * by)
     Kxx = sigkernel_gram(X, lengths=lengths, **kw)   # upper triangle only
     Kyy = sigkernel_gram(Y, lengths=lengths_y, **kw)
     Kxy = sigkernel_gram(X, Y, lengths=lengths, lengths_y=lengths_y, **kw)
@@ -72,6 +115,7 @@ def mmd2(X: jax.Array, Y: jax.Array, *, transforms=None, grid=None,
 def scoring_rule(X: jax.Array, y: jax.Array, *, transforms=None, grid=None,
                  static_kernel=None, backend: str = "auto",
                  row_block: Optional[int] = None,
+                 streaming: Optional[bool] = None,
                  lengths=None, length_y=None,
                  lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
                  use_pallas=UNSET) -> jax.Array:
@@ -81,7 +125,9 @@ def scoring_rule(X: jax.Array, y: jax.Array, *, transforms=None, grid=None,
     ``E[k(X,X')]`` averages over distinct pairs (divides by ``b·(b−1)``), so
     the ensemble needs at least two members.  Configured like :func:`mmd2`;
     ``lengths`` (B,) makes the ensemble ragged, ``length_y`` (a scalar int)
-    gives the observation's true point count.
+    gives the observation's true point count.  ``streaming=`` streams both
+    terms as per-block partial sums exactly as in :func:`mmd2` (auto-on when
+    ``row_block=`` is set) — the (B, B) ensemble Gram never exists.
     """
     b = X.shape[0]
     if b < 2:
@@ -93,9 +139,16 @@ def scoring_rule(X: jax.Array, y: jax.Array, *, transforms=None, grid=None,
         lead_lag=lead_lag, lam1=lam1, lam2=lam2)
     kw = dict(transforms=cfg, grid=g, static_kernel=kernel,
               backend=backend, row_block=row_block, use_pallas=use_pallas)
+    ly = None if length_y is None else jnp.reshape(length_y, (1,))
+    if _use_streaming(streaming, row_block):
+        rkw = dict(kw, check_streaming=True)
+        exx_sum = sigkernel_gram_reduce(X, lengths=lengths,
+                                        include_diag=False, **rkw)
+        exy_sum = sigkernel_gram_reduce(X, y[None], lengths=lengths,
+                                        lengths_y=ly, **rkw)
+        return 0.5 * exx_sum / (b * (b - 1)) - exy_sum / b
     Kxx = sigkernel_gram(X, lengths=lengths, **kw)
     exx = (Kxx.sum() - jnp.trace(Kxx)) / (b * (b - 1))
-    ly = None if length_y is None else jnp.reshape(length_y, (1,))
     Kxy = sigkernel_gram(X, y[None], lengths=lengths, lengths_y=ly, **kw)
     return 0.5 * exx - Kxy.mean()
 
@@ -103,6 +156,7 @@ def scoring_rule(X: jax.Array, y: jax.Array, *, transforms=None, grid=None,
 def sig_aux_loss(hidden: jax.Array, target: jax.Array, *, proj: jax.Array,
                  transforms=None, grid=None, static_kernel=None,
                  backend: str = "auto", row_block: Optional[int] = None,
+                 streaming: Optional[bool] = None,
                  lengths=None, lengths_target=None,
                  lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
                  use_pallas=UNSET) -> jax.Array:
@@ -116,7 +170,8 @@ def sig_aux_loss(hidden: jax.Array, target: jax.Array, *, proj: jax.Array,
     packed batches of variable-length sequences.  The legacy
     ``time_aug=``/``lead_lag=`` bools are accepted as the same deprecated
     aliases its siblings :func:`mmd2`/:func:`scoring_rule` take (one
-    DeprecationWarning per call-site, identical results).
+    DeprecationWarning per call-site, identical results).  ``streaming=``
+    passes through to :func:`mmd2`.
     """
     cfg, g, kernel = resolve_kernel_configs(
         transforms, grid, static_kernel, time_aug=time_aug,
@@ -126,5 +181,5 @@ def sig_aux_loss(hidden: jax.Array, target: jax.Array, *, proj: jax.Array,
     path = path / jnp.sqrt(jnp.asarray(proj.shape[0], path.dtype))
     return mmd2(path, target, transforms=cfg, grid=g, static_kernel=kernel,
                 unbiased=False, backend=backend, row_block=row_block,
-                lengths=lengths, lengths_y=lengths_target,
-                use_pallas=use_pallas)
+                streaming=streaming, lengths=lengths,
+                lengths_y=lengths_target, use_pallas=use_pallas)

@@ -14,9 +14,68 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .api import DEFAULT_RULES, MULTIPOD_RULES, Axis
+
+
+def get_shard_map():
+    """The ``shard_map`` transform across supported jax versions.
+
+    Newer jax exposes :func:`jax.shard_map`; older releases only have
+    ``jax.experimental.shard_map.shard_map``.  Import at call time so
+    importing this module never drags in experimental namespaces.
+    """
+    try:
+        from jax import shard_map  # jax >= 0.6
+        return shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+        return shard_map
+
+
+def block_cyclic_perm(n: int, n_shards: int, block: int):
+    """Row permutation realising a block-cyclic layout under contiguous sharding.
+
+    Returns ``(perm, inv)`` (numpy int arrays, length ``n``) such that when
+    ``x[perm]`` is sharded into ``n_shards`` equal contiguous pieces, shard
+    ``i`` holds the *blocks* ``i, i + n_shards, i + 2·n_shards, …`` of the
+    original ``x`` (blocks of ``block`` consecutive rows dealt round-robin —
+    ScaLAPACK-style block-cyclic).  ``inv`` undoes it: ``x[perm][inv] == x``.
+
+    ``n`` must be divisible by ``n_shards · block`` (pad first); the cyclic
+    deal is what keeps the *symmetric* Gram's triangular tile grid balanced
+    across shards — contiguous row blocks would give the last shard ~2×
+    the PDE solves of the first.
+    """
+    if n % (n_shards * block) != 0:
+        raise ValueError(
+            f"block_cyclic_perm needs n divisible by n_shards*block, got "
+            f"n={n}, n_shards={n_shards}, block={block}")
+    n_blocks = n // block
+    # shard i's blocks, concatenated shard-by-shard
+    order = np.arange(n_blocks).reshape(-1, n_shards).T.reshape(-1)
+    perm = (order[:, None] * block + np.arange(block)[None, :]).reshape(-1)
+    inv = np.argsort(perm)
+    return perm, inv
+
+
+def gram_specs(mesh: Mesh, Bx: int, By: int, *,
+               row_axis: str = "data", col_axis: str = "model"
+               ) -> Tuple[P, P, P]:
+    """PartitionSpecs ``(rows_spec, cols_spec, gram_spec)`` for a (Bx, By)
+    Gram tiling: X rows over ``row_axis``, Y rows over ``col_axis``, the
+    Gram over both.  Reuses :func:`physical_spec`'s divisibility demotion —
+    a batch that does not divide its mesh axis is replicated instead of
+    erroring, so the same call works on any device count.
+    """
+    rules = {"batch": row_axis, "model": col_axis, None: None}
+    rows = physical_spec(("batch",), (Bx,), mesh, rules)
+    cols = physical_spec(("model",), (By,), mesh, rules)
+    gram = physical_spec(("batch", "model"), (Bx, By), mesh, rules)
+    return rows, cols, gram
+
 
 # logical specs by trailing path name; rank refers to the UNSTACKED param
 _RULES: Dict[str, Tuple[Optional[str], ...]] = {

@@ -1,0 +1,379 @@
+"""Sharded + streaming Gram engine: dense-oracle equivalence and the
+multidevice proof tier.
+
+In-process tests check the streaming reductions (``sigkernel_gram_reduce``
+and the ``streaming=`` losses) against the dense-Gram oracle for values and
+gradients — including a hypothesis sweep over backends, symmetric and
+asymmetric cases, and ragged ``lengths=`` — plus the
+``assert_streaming_reduction`` shape-guard semantics (fires on dense,
+stays quiet on streaming, de-aliases shape coincidences).
+
+The ``multidevice``-marked tests spawn subprocesses on a simulated 8-device
+host mesh (the ``simulated_mesh`` fixture) and prove the sharded engine:
+shard-count invariance (1 vs 4 vs 8 devices), equality with the
+single-device engine, ragged inputs surviving sharding, the symmetric
+pair-solve budget, and the streaming losses on the mesh.
+"""
+
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # everything except the random-shape property sweep runs without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="property tests need hypothesis: pip install -r requirements-dev.txt")
+
+import repro
+from repro.core import dispatch, gram, losses
+from repro.core.config import GridConfig, RBF
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=1e-4, atol=1e-6)
+
+
+def _paths(key, b, l, d, scale=0.3):
+    return jax.random.normal(jax.random.PRNGKey(key), (b, l, d)) * scale
+
+
+# ---------------------------------------------------------------------------
+# streaming reduce vs dense oracle (in-process, 1 device)
+# ---------------------------------------------------------------------------
+
+def test_reduce_matches_dense_sum_asymmetric():
+    X, Y = _paths(0, 7, 9, 2), _paths(1, 5, 9, 2)
+    K = repro.sigkernel_gram(X, Y)
+    s = repro.sigkernel_gram_reduce(X, Y, row_block=3)
+    np.testing.assert_allclose(float(s), float(np.asarray(K).sum()), **TOL)
+
+
+def test_reduce_matches_dense_sum_symmetric():
+    X = _paths(2, 7, 9, 2)
+    K = np.asarray(repro.sigkernel_gram(X))
+    s = repro.sigkernel_gram_reduce(X, row_block=2)
+    np.testing.assert_allclose(float(s), K.sum(), **TOL)
+    s_nd = repro.sigkernel_gram_reduce(X, row_block=2, include_diag=False)
+    np.testing.assert_allclose(float(s_nd), K.sum() - np.trace(K), **TOL)
+
+
+def test_reduce_include_diag_requires_symmetric():
+    X, Y = _paths(0, 4, 8, 2), _paths(1, 3, 8, 2)
+    with pytest.raises(ValueError, match="include_diag"):
+        repro.sigkernel_gram_reduce(X, Y, include_diag=False)
+
+
+def test_streaming_losses_match_dense_values_and_grads():
+    X, Y = _paths(3, 6, 9, 2), _paths(4, 5, 9, 2)
+    for unbiased in (True, False):
+        dense = losses.mmd2(X, Y, unbiased=unbiased, streaming=False)
+        stream = losses.mmd2(X, Y, unbiased=unbiased, row_block=2)
+        np.testing.assert_allclose(float(stream), float(dense), atol=1e-5)
+    gd = jax.grad(lambda q: losses.mmd2(q, Y))(X)
+    gs = jax.grad(lambda q: losses.mmd2(q, Y, row_block=2))(X)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(gd), **TOL)
+
+    sd = losses.scoring_rule(X, Y[0])
+    ss = losses.scoring_rule(X, Y[0], row_block=2)
+    np.testing.assert_allclose(float(ss), float(sd), atol=1e-5)
+    gd = jax.grad(lambda q: losses.scoring_rule(q, Y[0]))(X)
+    gs = jax.grad(lambda q: losses.scoring_rule(q, Y[0], row_block=2))(X)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(gd), **TOL)
+
+
+def test_streaming_auto_enables_on_row_block():
+    """streaming=None + row_block routes through the reduce path (same
+    value, and the guard's per-shape cache gets populated); explicit
+    streaming=False with row_block uses the blocked dense path."""
+    X, Y = _paths(5, 6, 9, 2), _paths(6, 4, 9, 2)
+    auto = losses.mmd2(X, Y, row_block=2)
+    off = losses.mmd2(X, Y, row_block=2, streaming=False)
+    on = losses.mmd2(X, Y, streaming=True)
+    np.testing.assert_allclose(float(auto), float(off), atol=1e-5)
+    np.testing.assert_allclose(float(on), float(off), atol=1e-5)
+
+
+def test_streaming_ragged_matches_dense():
+    X, Y = _paths(7, 7, 9, 2), _paths(8, 5, 11, 2)
+    lx = jnp.asarray([4, 9, 6, 7, 8, 5, 9])
+    ly = jnp.asarray([11, 3, 7, 5, 9])
+    dense = losses.mmd2(X, Y, lengths=lx, lengths_y=ly, unbiased=False,
+                        streaming=False)
+    stream = losses.mmd2(X, Y, lengths=lx, lengths_y=ly, unbiased=False,
+                         row_block=2)
+    np.testing.assert_allclose(float(stream), float(dense), atol=1e-5)
+    gd = jax.grad(lambda q: losses.mmd2(q, Y, lengths=lx, lengths_y=ly,
+                                        unbiased=False, streaming=False))(X)
+    gs = jax.grad(lambda q: losses.mmd2(q, Y, lengths=lx, lengths_y=ly,
+                                        unbiased=False, row_block=2))(X)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(gd), **TOL)
+
+
+def test_sig_aux_loss_streaming_passthrough():
+    H, T = _paths(9, 4, 8, 6), _paths(10, 4, 8, 2)
+    proj = jax.random.normal(jax.random.PRNGKey(11), (6, 2)) * 0.3
+    dense = losses.sig_aux_loss(H, T, proj=proj)
+    stream = losses.sig_aux_loss(H, T, proj=proj, row_block=2)
+    np.testing.assert_allclose(float(stream), float(dense), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# property sweep: streaming == dense oracle across the config lattice
+# ---------------------------------------------------------------------------
+
+def _sweep_case(bx, by, l, rb, backend, rbf, symmetric, ragged):
+    """Streaming reduce == dense Gram sum (value AND grad) for one config."""
+    X = _paths(bx * 100 + l, bx, l, 2)
+    kw = dict(backend=backend, grid=GridConfig(0, 0))
+    if rbf:
+        kw["static_kernel"] = RBF(sigma=1.2)
+    if symmetric:
+        args, lkw = (X,), {}
+        if ragged:
+            lkw["lengths"] = jnp.asarray(
+                [2 + (i * 3) % (l - 1) for i in range(bx)])
+        K = np.asarray(repro.sigkernel_gram(*args, **lkw, **kw))
+        tot = K.sum()
+    else:
+        Y = _paths(by * 100 + l + 1, by, l, 2)
+        args, lkw = (X, Y), {}
+        if ragged:
+            lkw["lengths"] = jnp.asarray(
+                [2 + (i * 3) % (l - 1) for i in range(bx)])
+            lkw["lengths_y"] = jnp.asarray(
+                [2 + (i * 2) % (l - 1) for i in range(by)])
+        K = np.asarray(repro.sigkernel_gram(*args, **lkw, **kw))
+        tot = K.sum()
+
+    def red(*a):
+        return repro.sigkernel_gram_reduce(*a, row_block=rb, **lkw, **kw)
+
+    np.testing.assert_allclose(float(red(*args)), tot, rtol=2e-4, atol=1e-5)
+    # gradients: streaming VJP == dense VJP
+    g_dense = jax.grad(
+        lambda q: repro.sigkernel_gram(q, *args[1:], **lkw, **kw).sum())(X)
+    g_stream = jax.grad(lambda q: red(q, *args[1:]))(X)
+    np.testing.assert_allclose(np.asarray(g_stream), np.asarray(g_dense),
+                               rtol=2e-4, atol=1e-5)
+
+
+# fixed lattice corners so the contract is exercised even without hypothesis
+@pytest.mark.parametrize("bx,by,l,rb,backend,rbf,symmetric,ragged", [
+    (5, 4, 9, 2, "reference", False, False, False),
+    (6, 3, 8, 1, "reference", False, True, False),
+    (7, 5, 9, 2, "antidiag", False, False, True),
+    (5, 4, 10, 3, "reference", True, True, True),
+    (4, 6, 7, 1, "antidiag", True, False, False),
+])
+def test_streaming_sweep_fixed(bx, by, l, rb, backend, rbf, symmetric,
+                               ragged):
+    _sweep_case(bx, by, l, rb, backend, rbf, symmetric, ragged)
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @settings(max_examples=12, deadline=None)
+    @given(
+        bx=st.integers(3, 7),
+        by=st.integers(2, 6),
+        l=st.integers(6, 11),
+        rb=st.integers(1, 3),
+        backend=st.sampled_from(["reference", "antidiag"]),
+        rbf=st.booleans(),
+        symmetric=st.booleans(),
+        ragged=st.booleans(),
+    )
+    def test_streaming_property_sweep(bx, by, l, rb, backend, rbf,
+                                      symmetric, ragged):
+        _sweep_case(bx, by, l, rb, backend, rbf, symmetric, ragged)
+
+
+# ---------------------------------------------------------------------------
+# the densify guard (satellite: regression for silent densification)
+# ---------------------------------------------------------------------------
+
+def test_guard_fires_on_dense_reduction():
+    """A reduction that materialises the full Gram must be caught — value
+    and VJP are both traced."""
+    def dense(x, y):
+        return repro.sigkernel_gram(x, y).sum()
+
+    with pytest.raises(gram.StreamingViolation, match=r"\(7, 5\)"):
+        gram.assert_streaming_reduction(
+            jax.value_and_grad(dense),
+            jax.ShapeDtypeStruct((7, 9, 2), jnp.float32),
+            jax.ShapeDtypeStruct((5, 9, 2), jnp.float32),
+            gram_shape=(7, 5))
+
+
+def test_guard_fires_on_dense_delta_stack():
+    """The (Bx, By, Lx, Ly) pairwise Δ stack is caught by the same prefix
+    test even when the Gram itself is reduced away immediately."""
+    def dense_sym(x):
+        return repro.sigkernel_gram(x, x, symmetric=False).sum()
+
+    with pytest.raises(gram.StreamingViolation):
+        gram.assert_streaming_reduction(
+            jax.value_and_grad(dense_sym),
+            jax.ShapeDtypeStruct((6, 9, 2), jnp.float32),
+            gram_shape=(6, 6))
+
+
+def test_guard_quiet_on_streaming_reduction():
+    def stream(x, y):
+        return repro.sigkernel_gram_reduce(x, y, row_block=2)
+
+    gram.assert_streaming_reduction(
+        jax.value_and_grad(stream),
+        jax.ShapeDtypeStruct((7, 9, 2), jnp.float32),
+        jax.ShapeDtypeStruct((5, 9, 2), jnp.float32),
+        gram_shape=(7, 5))
+
+
+def test_guard_survives_shape_coincidences():
+    """Regression: two false-positive classes the internal guard must
+    de-alias — a ragged pad width equal to Bx (the L=9 → bucket-16 edge-pad
+    VJP slices a (Bx, 7, d) cotangent when Bx == 7), and the rb=1 symmetric
+    pair chunk tracking Bx exactly.  Both used to raise StreamingViolation
+    on perfectly streaming reductions."""
+    X = _paths(12, 7, 9, 2)
+    lens = jnp.asarray([4, 9, 6, 7, 8, 5, 9])
+    v = losses.mmd2(X, _paths(13, 5, 9, 2), lengths=lens, unbiased=False,
+                    row_block=2)
+    assert np.isfinite(float(v))
+    s = losses.scoring_rule(X, _paths(13, 5, 9, 2)[0], row_block=1)
+    assert np.isfinite(float(s))
+
+
+def test_losses_guard_catches_injected_densify(monkeypatch):
+    """End-to-end regression: if the reduce path ever silently densifies,
+    mmd2(streaming=True) must raise instead of quietly materialising."""
+    def densified(sX, sY, kernel, backend, rb, lam1, lam2):
+        K = gram._gram_rows(sX, sY, kernel, backend, lam1, lam2, None)
+        return K.sum()
+
+    monkeypatch.setattr(gram, "_reduce_rows", densified)
+    gram._stream_checked.clear()
+    X, Y = _paths(14, 8, 9, 2), _paths(15, 6, 9, 2)
+    with pytest.raises(gram.StreamingViolation):
+        losses.mmd2(X, Y, row_block=2, unbiased=False)
+    gram._stream_checked.clear()
+
+
+# ---------------------------------------------------------------------------
+# multidevice tier: simulated 8-device host mesh (subprocesses)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_sharded_gram_shard_count_invariance(simulated_mesh):
+    """1-vs-4-vs-8-device sub-meshes of one 8-device process produce the
+    same Gram as the single-device engine — symmetric and asymmetric."""
+    simulated_mesh(textwrap.dedent("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        import repro
+        from repro.launch.mesh import make_gram_mesh
+        assert len(jax.devices()) == 8, len(jax.devices())
+        X = jax.random.normal(jax.random.PRNGKey(0), (13, 9, 2)) * 0.3
+        Y = jax.random.normal(jax.random.PRNGKey(1), (11, 9, 2)) * 0.3
+        K = np.asarray(repro.sigkernel_gram(X, Y))
+        Ks = np.asarray(repro.sigkernel_gram(X))
+        for n in (1, 4, 8):
+            mesh = make_gram_mesh(n)
+            Kn = np.asarray(repro.sigkernel_gram_sharded(X, Y, mesh=mesh))
+            np.testing.assert_allclose(Kn, K, rtol=1e-5, atol=1e-6)
+            Sn = np.asarray(repro.sigkernel_gram_sharded(X, mesh=mesh))
+            np.testing.assert_allclose(Sn, Ks, rtol=1e-5, atol=1e-6)
+        print("OK")
+    """))
+
+
+@pytest.mark.multidevice
+def test_sharded_gram_ragged_and_row_block(simulated_mesh):
+    """Ragged lengths= and per-device row_block sub-chunking survive
+    sharding on the full 8-device mesh."""
+    simulated_mesh(textwrap.dedent("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        import repro
+        from repro.launch.mesh import make_gram_mesh
+        X = jax.random.normal(jax.random.PRNGKey(0), (13, 9, 2)) * 0.3
+        Y = jax.random.normal(jax.random.PRNGKey(1), (11, 9, 2)) * 0.3
+        lens = jnp.asarray([4, 9, 6, 7, 8, 5, 9, 3, 9, 2, 8, 7, 5])
+        mesh = make_gram_mesh(8)
+        Kr = np.asarray(repro.sigkernel_gram(X, Y, lengths=lens))
+        Krs = np.asarray(repro.sigkernel_gram_sharded(
+            X, Y, lengths=lens, mesh=mesh))
+        np.testing.assert_allclose(Krs, Kr, rtol=1e-5, atol=1e-6)
+        K = np.asarray(repro.sigkernel_gram(X, Y))
+        Kb = np.asarray(repro.sigkernel_gram_sharded(
+            X, Y, mesh=mesh, row_block=2))
+        np.testing.assert_allclose(Kb, K, rtol=1e-5, atol=1e-6)
+        Ks = np.asarray(repro.sigkernel_gram(X))
+        Sb = np.asarray(repro.sigkernel_gram_sharded(
+            X, mesh=mesh, row_block=2))
+        np.testing.assert_allclose(Sb, Ks, rtol=1e-5, atol=1e-6)
+        print("OK")
+    """))
+
+
+@pytest.mark.multidevice
+def test_sharded_symmetric_pair_budget(simulated_mesh):
+    """The sharded symmetric fast path keeps the global PDE-solve budget at
+    the triangle count plus round-robin padding — not the full Bx**2."""
+    simulated_mesh(textwrap.dedent("""
+        import jax, numpy as np
+        import repro
+        from repro.core import dispatch
+        from repro.launch.mesh import make_gram_mesh
+        X = jax.random.normal(jax.random.PRNGKey(0), (13, 9, 2)) * 0.3
+        mesh = make_gram_mesh(8)
+        n_pairs = 13 * 14 // 2
+        budget = n_pairs + (-n_pairs) % 8
+        with dispatch.count_pair_solves() as c:
+            repro.sigkernel_gram_sharded(X, mesh=mesh)
+        assert c.total == budget, (c.total, budget)
+        assert c.total < 13 * 13, c.total
+        print("OK")
+    """))
+
+
+@pytest.mark.multidevice
+def test_streaming_losses_on_mesh(simulated_mesh):
+    """Streaming mmd2/scoring_rule values and grads match the dense oracle
+    inside an 8-device process (sharding and streaming compose)."""
+    simulated_mesh(textwrap.dedent("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.core import losses
+        X = jax.random.normal(jax.random.PRNGKey(0), (9, 9, 2)) * 0.3
+        Y = jax.random.normal(jax.random.PRNGKey(1), (7, 9, 2)) * 0.3
+        d = losses.mmd2(X, Y, streaming=False)
+        s = losses.mmd2(X, Y, row_block=2)
+        np.testing.assert_allclose(float(s), float(d), atol=1e-5)
+        gd = jax.grad(lambda q: losses.mmd2(q, Y, streaming=False))(X)
+        gs = jax.grad(lambda q: losses.mmd2(q, Y, row_block=2))(X)
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(gd),
+                                   rtol=1e-4, atol=1e-6)
+        print("OK")
+    """))
+
+
+@pytest.mark.multidevice
+def test_flagship_example_runs_on_mesh(simulated_mesh):
+    """examples/gram_matrix_distributed.py is the documented recipe — keep
+    it green on the simulated mesh."""
+    simulated_mesh(textwrap.dedent("""
+        import runpy
+        runpy.run_path("examples/gram_matrix_distributed.py",
+                       run_name="__main__")
+        print("OK")
+    """), timeout=900)

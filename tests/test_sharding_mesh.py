@@ -1,0 +1,201 @@
+"""Direct unit tests for the parallel/launch scaffolding.
+
+``parallel/sharding.py`` and ``launch/mesh.py`` carry the Gram engine's
+distribution layer (block-cyclic dealing, mesh factorisation, simulated-mesh
+env plumbing) plus the model-parameter rule tables; these were the
+least-covered modules in ``src/repro``.  Everything here is single-device —
+mesh-construction paths that need real devices use fakes or the local
+1-device mesh; true multi-device behaviour lives in
+``tests/test_distributed_gram.py`` (the ``multidevice`` tier).
+"""
+
+import os
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import mesh as M
+from repro.parallel import api as A
+from repro.parallel import sharding as SH
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# launch/mesh.py
+# ---------------------------------------------------------------------------
+
+def test_gram_mesh_shape_factorisations():
+    assert M.gram_mesh_shape(1) == (1, 1)
+    assert M.gram_mesh_shape(2) == (2, 1)
+    assert M.gram_mesh_shape(4) == (2, 2)
+    assert M.gram_mesh_shape(8) == (4, 2)
+    assert M.gram_mesh_shape(12) == (4, 3)
+    assert M.gram_mesh_shape(7) == (7, 1)       # primes: all on data
+    for n in (1, 2, 3, 4, 6, 8, 12, 16, 30):
+        nd, nm = M.gram_mesh_shape(n)
+        assert nd * nm == n and nd >= nm        # data gets the bigger factor
+
+
+def test_gram_mesh_shape_rejects_nonpositive():
+    with pytest.raises(ValueError, match=">= 1"):
+        M.gram_mesh_shape(0)
+
+
+def test_make_gram_mesh_local_device():
+    mesh = M.make_gram_mesh(1)
+    assert tuple(mesh.shape.keys()) == ("data", "model")
+    assert mesh.shape["data"] == 1 and mesh.shape["model"] == 1
+
+
+def test_make_gram_mesh_too_many_devices_points_at_flag():
+    n = len(jax.devices()) + 7
+    with pytest.raises(ValueError, match=M.HOST_DEVICE_FLAG):
+        M.make_gram_mesh(n)
+
+
+def test_host_device_flags_replaces_and_preserves():
+    base = ("--xla_cpu_foo=1 "
+            f"{M.HOST_DEVICE_FLAG}=2 --xla_bar=baz")
+    out = M.host_device_flags(8, base)
+    assert f"{M.HOST_DEVICE_FLAG}=8" in out
+    assert f"{M.HOST_DEVICE_FLAG}=2" not in out
+    assert "--xla_cpu_foo=1" in out and "--xla_bar=baz" in out
+    assert out.count(M.HOST_DEVICE_FLAG) == 1
+
+
+def test_simulated_mesh_env_is_a_copy():
+    env = {"XLA_FLAGS": "--xla_keep=1", "PATH": "/bin"}
+    out = M.simulated_mesh_env(4, env)
+    assert f"{M.HOST_DEVICE_FLAG}=4" in out["XLA_FLAGS"]
+    assert "--xla_keep=1" in out["XLA_FLAGS"]
+    assert env["XLA_FLAGS"] == "--xla_keep=1"   # caller env untouched
+    assert out["PATH"] == "/bin"
+    # default: copies the process env without mutating it
+    before = os.environ.get("XLA_FLAGS")
+    M.simulated_mesh_env(8)
+    assert os.environ.get("XLA_FLAGS") == before
+
+
+# ---------------------------------------------------------------------------
+# parallel/sharding.py — block-cyclic dealing and Gram specs
+# ---------------------------------------------------------------------------
+
+def test_block_cyclic_perm_round_trip():
+    x = np.arange(24 * 3).reshape(24, 3)
+    perm, inv = SH.block_cyclic_perm(24, n_shards=4, block=2)
+    assert np.array_equal(x[perm][inv], x)
+
+
+def test_block_cyclic_perm_deals_blocks_round_robin():
+    perm, _ = SH.block_cyclic_perm(12, n_shards=2, block=2)
+    dealt = np.arange(12)[perm]
+    # contiguous halves of the permuted order are the two shards
+    shard0, shard1 = dealt[:6], dealt[6:]
+    # shard 0 gets blocks 0, 2, 4 -> rows 0,1, 4,5, 8,9 (cyclic deal)
+    assert shard0.tolist() == [0, 1, 4, 5, 8, 9]
+    assert shard1.tolist() == [2, 3, 6, 7, 10, 11]
+
+
+def test_block_cyclic_perm_needs_divisibility():
+    with pytest.raises(ValueError, match="divisible"):
+        SH.block_cyclic_perm(10, n_shards=4, block=2)
+
+
+def test_get_shard_map_returns_transform():
+    sm = SH.get_shard_map()
+    assert callable(sm)
+
+
+def test_gram_specs_demote_to_replicated_when_indivisible():
+    # fake 2x2 mesh: physical_spec only reads mesh.shape
+    mesh = SimpleNamespace(shape={"data": 2, "model": 2})
+    rows, cols, g = SH.gram_specs(mesh, 8, 6, row_axis="data",
+                                  col_axis="model")
+    assert rows == P("data") and cols == P("model")
+    assert g == P("data", "model")
+    # 7 rows do not divide the 2-wide data axis -> replicated, not an error
+    rows7, _, g7 = SH.gram_specs(mesh, 7, 6)
+    assert rows7 == P(None) and g7 == P(None, "model")
+
+
+# ---------------------------------------------------------------------------
+# parallel/sharding.py — logical rules and physical specs
+# ---------------------------------------------------------------------------
+
+def test_logical_spec_for_known_and_unknown_names():
+    leaf2 = SimpleNamespace(ndim=2, shape=(64, 128))
+    assert SH.logical_spec_for(("layer", "w_gate"), leaf2) == \
+        ("fsdp", "model")
+    # scan-stacked: one extra leading layer dim -> prepended None
+    leaf3 = SimpleNamespace(ndim=3, shape=(4, 64, 128))
+    assert SH.logical_spec_for(("stack", "w_gate"), leaf3) == \
+        (None, "fsdp", "model")
+    # unknown name or unexpected rank -> fully replicated
+    assert SH.logical_spec_for(("x", "mystery"), leaf2) == (None, None)
+    leaf4 = SimpleNamespace(ndim=4, shape=(2, 2, 2, 2))
+    assert SH.logical_spec_for(("x", "w_gate"), leaf4) == \
+        (None, None, None, None)
+
+
+def test_physical_spec_divisibility_demotion():
+    mesh = SimpleNamespace(shape={"data": 4, "model": 2})
+    rules = {"fsdp": "data", "model": "model", None: None}
+    # divisible on both dims
+    assert SH.physical_spec(("fsdp", "model"), (8, 6), mesh, rules) == \
+        P("data", "model")
+    # 6 % 4 != 0 -> the fsdp dim is demoted to replicated
+    assert SH.physical_spec(("fsdp", "model"), (6, 6), mesh, rules) == \
+        P(None, "model")
+    # multi-axis: trailing axes dropped until the dim divides
+    rules2 = {"fsdp": ("data", "model"), None: None}
+    assert SH.physical_spec(("fsdp",), (8,), mesh, rules2) == \
+        P(("data", "model"))
+    assert SH.physical_spec(("fsdp",), (4,), mesh, rules2) == P("data")
+
+
+def test_physical_spec_each_mesh_axis_used_once():
+    mesh = SimpleNamespace(shape={"data": 2, "model": 2})
+    rules = {"batch": "data", "fsdp": "data", "model": "model", None: None}
+    # both logical names map to "data": only the first dim gets it
+    spec = SH.physical_spec(("batch", "fsdp"), (4, 4), mesh, rules)
+    assert spec == P("data", None)
+
+
+def test_api_resolve_dedup_and_rules_context():
+    with A.logical_rules(A.DEFAULT_RULES):
+        assert A.resolve("batch", None, None) == P("data", None, None)
+        assert A.resolve("batch", "model") == P("data", "model")
+        # mamba2-style rules map batch AND fsdp onto overlapping axes:
+        # left-to-right dedup gives the first dim the axis
+        ssm = dict(A.DEFAULT_RULES, batch=("data", "model"))
+        with A.logical_rules(ssm):
+            assert A.resolve("batch", "model") == P(("data", "model"), None)
+    assert A.current_rules() is None
+
+
+def test_api_shard_is_noop_without_rules():
+    x = jnp.ones((4, 3))
+    assert A.shard(x, "batch", None) is x
+
+
+def test_param_shardings_on_local_mesh():
+    """End-to-end rule-table resolution on the real 1-device mesh: every
+    leaf gets a NamedSharding and placement succeeds."""
+    mesh = M.make_host_mesh()
+    params = {
+        "emb": {"table": jnp.zeros((16, 8))},
+        "blk": {"attn": {"wq": jnp.zeros((8, 4, 2))},
+                "moe": {"w_gate": jnp.zeros((2, 8, 16))}},
+    }
+    shardings = SH.param_shardings(
+        jax.eval_shape(lambda: params), None, mesh, False)
+    for leaf, sh in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(shardings)):
+        assert sh.mesh.shape == mesh.shape
+        placed = jax.device_put(leaf, sh)
+        assert placed.shape == leaf.shape
