@@ -3,8 +3,10 @@
 The blessed public surface (API v1, see docs/api/public.md):
 
 * **Config objects** — :class:`TransformPipeline`, :class:`GridConfig`,
-  and the static-kernel lifts :class:`Linear` / :class:`RBF`
-  (:class:`StaticKernel` base).  All frozen pytree dataclasses.
+  :class:`LaunchConfig` (kernel launch parameters: tile/strip/block sizes;
+  bitwise-neutral), and the static-kernel lifts :class:`Linear` /
+  :class:`RBF` (:class:`StaticKernel` base).  All frozen pytree
+  dataclasses.
 * **Class entry points** — :class:`Signature`, :class:`LogSignature`,
   :class:`SigKernel` close over a config and are jit/vmap-friendly.
 * **Functional API** — :func:`signature`, :func:`logsignature`,
@@ -14,8 +16,8 @@ The blessed public surface (API v1, see docs/api/public.md):
 """
 
 from .api import LogSignature, SigKernel, Signature
-from .core.config import (GridConfig, Linear, RBF, StaticKernel,
-                          TransformPipeline)
+from .core.config import (GridConfig, LaunchConfig, Linear, RBF,
+                          StaticKernel, TransformPipeline)
 from .core.gram import (sigkernel_gram, sigkernel_gram_reduce,
                         sigkernel_gram_sharded)
 from .core.logsignature import logsignature
@@ -29,7 +31,8 @@ __version__ = "0.2.0"
 
 __all__ = [
     # config objects
-    "TransformPipeline", "GridConfig", "StaticKernel", "Linear", "RBF",
+    "TransformPipeline", "GridConfig", "LaunchConfig",
+    "StaticKernel", "Linear", "RBF",
     # class entry points
     "Signature", "LogSignature", "SigKernel",
     # functional API

@@ -8,15 +8,23 @@ first-class, *recorded* artifact instead of a side effect:
     repeats — paper §5 methodology) and a machine fingerprint.
 ``autotune``
     Measures every capable backend from :mod:`repro.core.dispatch` for a
-    given (op, shape, dtype, platform) key, caches the winner in an on-disk
-    JSON cache, and backs ``backend="auto"`` when the cache is warm.
+    given (op, shape, dtype, platform) key — and, per winning backend, a
+    small bounded sweep of :class:`repro.LaunchConfig` launch parameters —
+    caches the winners in an on-disk JSON cache, and backs
+    ``backend="auto"`` (plus ``launch=None`` resolution) when the cache is
+    warm.
+``roofline``
+    Achieved vs. peak FLOPs/bandwidth attribution for every bench entry
+    (HLO-derived counts via :mod:`repro.launch.hlo_analysis` where cheap,
+    analytic per-op models otherwise).  CLI:
+    ``python -m repro.bench.roofline BENCH_PR7.json``.
 ``workloads``
     The paper-aligned workload cells (signature Table 1, sig-kernel Table 2
     + Gram rows, log-signature Table 3, §3.4 gradient accuracy) at smoke /
     quick / full sizes, plus the CI smoke checks.
 ``suite``
     Runs a set of workloads and emits a schema-versioned BENCH JSON
-    (``BENCH_PR6.json`` at the repo root is the committed baseline) and a
+    (``BENCH_PR7.json`` at the repo root is the committed baseline) and a
     markdown summary.  CLI: ``python -m repro.bench [--smoke|--full]``.
 ``compare``
     Diffs two BENCH JSONs with machine-speed normalisation and per-entry
@@ -28,7 +36,7 @@ See docs/benchmarks.md for the JSON schema and the CI perf gate.
 
 import importlib
 
-__all__ = ["autotune", "compare", "suite", "timer", "workloads"]
+__all__ = ["autotune", "compare", "roofline", "suite", "timer", "workloads"]
 
 
 def __getattr__(name):

@@ -1,13 +1,17 @@
-"""Measurement-driven backend selection for ``backend="auto"``.
+"""Measurement-driven backend selection and launch-parameter search.
 
 :func:`tune` benchmarks every backend from :mod:`repro.core.dispatch` that
 can serve an op on the current platform (TPU-only backends are skipped off
-TPU — interpret mode measures nothing meaningful), and persists the winner
-in an on-disk JSON cache keyed by ``(op, platform, dtype, shape-bucket)``.
-:func:`lookup` is the read side: :func:`repro.core.dispatch.resolve`
-consults it when resolving ``"auto"`` and falls back to the static shape
-heuristics whenever the answer is ``None`` (cache cold, autotuning
-disabled, or a stale/corrupt cache file).
+TPU — interpret mode measures nothing meaningful), then sweeps a small
+bounded set of :class:`repro.core.config.LaunchConfig` candidates for the
+winning backend, and persists both in an on-disk JSON cache keyed by
+``(op, platform, dtype, shape-bucket)``.  :func:`lookup` /
+:func:`lookup_launch` are the read side: :func:`repro.core.dispatch.resolve`
+and :func:`repro.core.dispatch.resolve_launch` consult them when resolving
+``"auto"`` / an unset ``launch=`` and fall back to the static shape
+heuristics / library-default launch parameters whenever the answer is
+``None`` (cache cold, autotuning disabled, a stale/corrupt cache file, or
+— launch parameters only — a cache tuned on a different machine).
 
 Design points:
 
@@ -23,6 +27,14 @@ Design points:
 * **Fail open** — a corrupted cache file, an unknown schema version, or an
   entry naming a backend that no longer exists are all treated as a cold
   cache, never an error.
+* **Launch winners are machine-scoped** — tile shapes that win on one
+  box (VMEM budget, cache sizes, core count) can lose on another, so every
+  tuned entry is stamped with :func:`repro.bench.timer.machine_key`
+  (platform | device kind | device memory) and :func:`lookup_launch`
+  drops the launch parameters (never the whole entry path — fail-open to
+  the library defaults) when the stamp does not match the current machine.
+  Launch parameters never change the math, only the speed, so a wrong
+  fallback is a performance question, not a correctness one.
 
 Environment variables:
 
@@ -48,7 +60,7 @@ import jax.numpy as jnp
 from repro.core import dispatch
 from . import timer
 
-SCHEMA = 1
+SCHEMA = 2  # v2: entries gain "launch" / "launch_timings" / "machine"
 
 ENV_DISABLE = "REPRO_DISABLE_AUTOTUNE"
 ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
@@ -198,6 +210,35 @@ def lookup(op: str, shape, dtype="float32", *,
     return name if isinstance(name, str) else None
 
 
+def lookup_launch(op: str, shape, dtype="float32", *, ragged: bool = False):
+    """Cached winning :class:`LaunchConfig` for this key, or None.
+
+    Never measures.  Returns ``None`` — the library defaults — when the
+    cache is cold/disabled, when the entry predates launch sweeps (no
+    ``"launch"`` field or an all-default one), when the stored dict fails
+    :meth:`LaunchConfig.from_dict` validation, or when the entry's
+    ``"machine"`` stamp names a different machine (tile winners do not
+    travel).  Entries without a ``"machine"`` stamp are accepted: they can
+    only come from a hand-written cache, and rejecting them would make the
+    stamp impossible to test.
+    """
+    from repro.core.config import LaunchConfig
+    entry = cache_entry(op, shape, dtype, ragged=ragged)
+    if entry is None:
+        return None
+    raw = entry.get("launch")
+    if not isinstance(raw, dict) or not raw:
+        return None
+    stamp = entry.get("machine")
+    if isinstance(stamp, str) and stamp != timer.machine_key():
+        return None  # tuned on another box: fail open to defaults
+    try:
+        launch = LaunchConfig.from_dict(raw)
+    except (ValueError, TypeError):
+        return None
+    return None if launch.is_default else launch
+
+
 # ---------------------------------------------------------------------------
 # tuning
 # ---------------------------------------------------------------------------
@@ -208,6 +249,39 @@ def candidates(op: str) -> Tuple[str, ...]:
     if not dispatch.on_tpu():
         names = tuple(n for n in names if not dispatch.get(n).needs_tpu)
     return names or dispatch.backends_for(op)
+
+
+def launch_candidates(op: str, backend: str) -> Tuple:
+    """Bounded :class:`LaunchConfig` sweep for ``op`` on ``backend``.
+
+    The first candidate is always the all-default config (today's module
+    constants), so a sweep can only ever match or beat the untuned
+    library.  The lists are deliberately tiny — a handful of power-of-two
+    tile shapes per knob — because the sweep runs per cache key and every
+    candidate costs ``warmup + repeats`` full op executions.  Knobs that
+    the backend ignores are not swept (the reference scan has no tiles).
+    """
+    from repro.core.config import LaunchConfig
+    cands = [LaunchConfig()]
+    if op in ("signature", "logsignature"):
+        if backend == "pallas":
+            cands += [LaunchConfig(sig_bt=64),
+                      LaunchConfig(sig_lb=128),
+                      LaunchConfig(sig_bt=64, sig_lb=128)]
+    elif op == "sigkernel":
+        if backend == "pallas":
+            cands += [LaunchConfig(pde_strip=64), LaunchConfig(pde_strip=32)]
+        elif backend == "antidiag":
+            cands += [LaunchConfig(band_chunk=8), LaunchConfig(band_chunk=32)]
+    elif op == "gram":
+        if backend in ("pallas", "pallas_fused"):
+            cands += [LaunchConfig(pde_strip=64),
+                      LaunchConfig(gram_row_block=8),
+                      LaunchConfig(gram_row_block=32)]
+        else:
+            cands += [LaunchConfig(gram_row_block=8),
+                      LaunchConfig(gram_row_block=32)]
+    return tuple(cands)
 
 
 def _ragged_lengths(batch: int, points: int):
@@ -231,12 +305,15 @@ def _ragged_points(n: int) -> int:
     return bucket_length(n)
 
 
-def _runner(op: str, shape, dtype, backend: str, ragged: bool = False):
+def _runner(op: str, shape, dtype, backend: str, ragged: bool = False,
+            launch=None):
     """Zero-arg jitted callable exercising ``op`` at the bucketed shape.
 
     With ``ragged=True`` the runner passes a representative ``lengths=``
     spread (half- to full-length) so the measurement reflects the masked
-    variable-length workload the key denotes.
+    variable-length workload the key denotes.  ``launch`` (a
+    :class:`LaunchConfig`) is forwarded verbatim so launch sweeps measure
+    exactly what :func:`lookup_launch` will later apply.
     """
     from repro.core.gram import sigkernel_gram
     from repro.core.logsignature import logsignature
@@ -251,7 +328,8 @@ def _runner(op: str, shape, dtype, backend: str, ragged: bool = False):
                 * 0.2).astype(dtype)
         lens = _ragged_lengths(_TUNE_BATCH, pts) if ragged else None
         fn = signature if op == "signature" else logsignature
-        f = jax.jit(lambda p: fn(p, depth, backend=backend, lengths=lens))
+        f = jax.jit(lambda p: fn(p, depth, backend=backend, lengths=lens,
+                                 launch=launch))
         return lambda: f(path)
     if op == "sigkernel":
         nx, ny, d = shape
@@ -264,7 +342,8 @@ def _runner(op: str, shape, dtype, backend: str, ragged: bool = False):
         lx = _ragged_lengths(_TUNE_BATCH, px) if ragged else None
         ly = _ragged_lengths(_TUNE_BATCH, py) if ragged else None
         f = jax.jit(lambda a, b: sigkernel(a, b, backend=backend,
-                                           lengths_x=lx, lengths_y=ly))
+                                           lengths_x=lx, lengths_y=ly,
+                                           launch=launch))
         return lambda: f(x, y)
     if op == "gram":
         Bx, By, nx, ny, d = shape
@@ -277,7 +356,7 @@ def _runner(op: str, shape, dtype, backend: str, ragged: bool = False):
         ly = _ragged_lengths(By, py) if ragged else None
         f = jax.jit(lambda a, b: sigkernel_gram(
             a, b, backend=backend, symmetric=False,
-            lengths=lx, lengths_y=ly))
+            lengths=lx, lengths_y=ly, launch=launch))
         return lambda: f(X, Y)
     raise ValueError(f"no tuning runner for op {op!r}")
 
@@ -291,14 +370,50 @@ def measure(op: str, shape, dtype="float32", *, repeats: int = 3,
             for b in candidates(op)}
 
 
+def _launch_json_key(launch) -> str:
+    """Stable string key for a launch candidate in ``launch_timings``."""
+    return json.dumps(launch.to_dict(), sort_keys=True)
+
+
+def measure_launch(op: str, shape, dtype, backend: str, *,
+                   repeats: int = 3, warmup: int = 1,
+                   ragged: bool = False) -> Dict:
+    """Seconds per call for every launch candidate of the chosen backend.
+
+    Keys are :class:`LaunchConfig` instances (hashable).  A candidate that
+    fails to run — e.g. a tile shape the current kernel geometry rejects —
+    is skipped, never raised: the sweep must fail open to the defaults.
+    """
+    shape = key_shape(op, shape)
+    out = {}
+    for cand in launch_candidates(op, backend):
+        try:
+            out[cand] = timer.bench(
+                _runner(op, shape, dtype, backend, ragged, cand),
+                repeats=repeats, warmup=warmup)
+        except Exception:
+            continue
+    return out
+
+
 def tune(op: str, shape, dtype="float32", *, repeats: int = 3,
-         warmup: int = 1, force: bool = False, ragged: bool = False) -> str:
+         warmup: int = 1, force: bool = False, ragged: bool = False,
+         sweep_launch: bool = True) -> str:
     """Measure candidates, persist the winner, return its name.
 
     A warm cache key returns the stored winner with **zero** timed runs
     unless ``force=True``.  With autotuning disabled the measurement still
     happens (this is an explicit call) but nothing is persisted.
+
+    With ``sweep_launch=True`` (default) the winning backend's bounded
+    :func:`launch_candidates` are also measured and the fastest
+    :class:`LaunchConfig` is stored under the same key (``"launch"``),
+    stamped with :func:`repro.bench.timer.machine_key` so it never travels
+    to a different machine.  The all-default config is always a candidate,
+    so a tuned entry is never slower than the untuned library *on the
+    machine that tuned it*.
     """
+    from repro.core.config import LaunchConfig
     if not force:
         cached = lookup(op, shape, dtype, ragged=ragged)
         if cached is not None and cached in candidates(op):
@@ -306,10 +421,22 @@ def tune(op: str, shape, dtype="float32", *, repeats: int = 3,
     times = measure(op, shape, dtype, repeats=repeats, warmup=warmup,
                     ragged=ragged)
     winner = min(times, key=times.get)
+    best_launch = LaunchConfig()
+    launch_times: Dict = {}
+    if sweep_launch:
+        launch_times = measure_launch(op, shape, dtype, winner,
+                                      repeats=repeats, warmup=warmup,
+                                      ragged=ragged)
+        if launch_times:
+            best_launch = min(launch_times, key=launch_times.get)
     if enabled():
         _store(cache_key(op, shape, dtype, ragged=ragged), {
             "backend": winner,
             "timings": times,
+            "launch": best_launch.to_dict(),
+            "launch_timings": {_launch_json_key(c): t
+                               for c, t in launch_times.items()},
+            "machine": timer.machine_key(),
             "tuned_at": time.time(),
             "repeats": repeats,
         })

@@ -4,7 +4,7 @@
         [--tolerance 2.5] [--no-normalize] [--allow-missing]
 
 Designed for the CI perf gate, where BASELINE is the committed
-``BENCH_PR6.json`` (possibly produced on a different machine) and NEW is a
+``BENCH_PR7.json`` (possibly produced on a different machine) and NEW is a
 fresh run of the same mode.  Rules:
 
 * Entries are matched by ``name``; a baseline entry missing from the new
@@ -23,6 +23,11 @@ fresh run of the same mode.  Rules:
   1e-5 (f32 rounding differs across BLAS builds).
 * Entries with ``meta.gate == false`` (calibration probe, interpret-mode
   timings, the O(h) approx-backward baseline) are reported but never gate.
+* **Roofline deltas are never gated**: when both sides of a timing entry
+  carry ``"roofline"`` achieved-fraction fields (see
+  :mod:`repro.bench.roofline`), the change in achieved fraction of peak
+  FLOPs/bandwidth is reported as a ``ROOFLINE`` note — attribution for a
+  launch-parameter tuning win or loss, informative only.
 """
 
 from __future__ import annotations
@@ -105,6 +110,15 @@ def compare_docs(old_doc: dict, new_doc: dict, *, tolerance: float = 2.5,
                 regressions.append("SLOWER " + line)
             else:
                 notes.append(line)
+            ro = old.get("roofline") or {}
+            rn = new.get("roofline") or {}
+            if "frac_flops" in ro and "frac_flops" in rn:
+                notes.append(
+                    f"ROOFLINE {name}: frac-of-peak flops "
+                    f"{ro['frac_flops']:.4f} -> {rn['frac_flops']:.4f}, "
+                    f"bandwidth {ro.get('frac_bandwidth', 0.0):.4f} -> "
+                    f"{rn.get('frac_bandwidth', 0.0):.4f} "
+                    f"({rn.get('bound', '?')}-bound; non-gating)")
         elif old["kind"] == "accuracy":
             limit = max(old["value"] * accuracy_tolerance,
                         old["value"] + _ACCURACY_FLOOR)
@@ -126,7 +140,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.bench.compare",
         description="diff two BENCH JSONs; nonzero exit on regression")
-    ap.add_argument("baseline", help="committed BENCH json (e.g. BENCH_PR6.json)")
+    ap.add_argument("baseline", help="committed BENCH json (e.g. BENCH_PR7.json)")
     ap.add_argument("new", help="freshly produced BENCH json")
     ap.add_argument("--tolerance", type=float, default=2.5,
                     help="max normalized slowdown ratio (default 2.5)")

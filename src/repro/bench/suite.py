@@ -6,7 +6,7 @@ The JSON document (schema 1):
    "created_unix": float, "fingerprint": {...},  # timer.fingerprint()
    "entries": [ ... ]}                            # workloads entry dicts
 
-``BENCH_PR6.json`` at the repo root is the committed baseline, produced by
+``BENCH_PR7.json`` at the repo root is the committed baseline, produced by
 ``python -m repro.bench --smoke``; CI re-runs the same mode and gates on
 :mod:`repro.bench.compare`.  See docs/benchmarks.md.
 """

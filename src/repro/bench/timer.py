@@ -10,6 +10,12 @@ paper-exact numbers.
 JSON can be compared against a run from a different box with eyes open
 (compare.py normalises away uniform machine-speed differences; the
 fingerprint is for humans reading the artifact).
+
+``machine_key`` is the compact subset of the fingerprint that launch
+parameters actually depend on (platform, device kind, device memory):
+the autotune cache stamps it into every tuned entry so persisted
+launch-parameter winners are dropped — fail-open, back to the library
+defaults — when the cache file moves between machines.
 """
 
 from __future__ import annotations
@@ -41,12 +47,35 @@ def bench(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
     return best
 
 
+def device_memory_bytes() -> int:
+    """Accelerator (or host, on CPU backends) memory in bytes; 0 if unknown.
+
+    Tries the device's own accounting first (``memory_stats`` — present on
+    TPU/GPU and recent CPU runtimes), then the POSIX physical-memory
+    sysconf.  Never raises: an unknown size reports 0, which still
+    round-trips through :func:`machine_key` deterministically.
+    """
+    dev = jax.devices()[0]
+    try:
+        stats = dev.memory_stats() or {}
+        limit = stats.get("bytes_limit") or stats.get("bytes_reservable_limit")
+        if limit:
+            return int(limit)
+    except Exception:
+        pass
+    try:
+        return int(os.sysconf("SC_PAGE_SIZE") * os.sysconf("SC_PHYS_PAGES"))
+    except (ValueError, OSError, AttributeError):
+        return 0
+
+
 def fingerprint() -> Dict[str, object]:
     """Machine/runtime identity stamped into every BENCH JSON."""
     dev = jax.devices()[0]
     return {
         "platform": jax.default_backend(),
         "device_kind": getattr(dev, "device_kind", "unknown"),
+        "device_memory": device_memory_bytes(),
         "n_devices": jax.device_count(),
         "jax": jax.__version__,
         "numpy": np.__version__,
@@ -55,3 +84,16 @@ def fingerprint() -> Dict[str, object]:
         "machine": _platform.machine(),
         "cpu_count": os.cpu_count(),
     }
+
+
+def machine_key() -> str:
+    """``platform|device_kind|device_memory`` — the part of the fingerprint
+    launch parameters depend on.  Stamped into tuned autotune-cache entries;
+    a mismatch at lookup time drops the entry's launch parameters
+    (fail-open) instead of applying tiles sized for another machine."""
+    dev = jax.devices()[0]
+    return "|".join((
+        str(jax.default_backend()),
+        str(getattr(dev, "device_kind", "unknown")),
+        str(device_memory_bytes()),
+    ))

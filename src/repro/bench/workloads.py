@@ -43,7 +43,7 @@ from repro.core.sigkernel import (delta_matrix, sigkernel, solve_goursat,
                                   solve_goursat_grad_pde_approx)
 from repro.core.tensoralg import sig_dim
 
-from . import autotune, timer
+from . import autotune, roofline, timer
 
 MODES = ("smoke", "quick", "full")
 
@@ -54,18 +54,26 @@ def _check_mode(mode: str) -> str:
     return mode
 
 
-def _t(name: str, seconds: float, derived: str = "", **meta) -> dict:
-    return {"name": name, "kind": "time", "seconds": float(seconds),
-            "derived": derived, "meta": meta}
+def _t(name: str, seconds: float, derived: str = "", _fn=None, _args=(),
+       **meta) -> dict:
+    """Timed entry; every one carries a ``"roofline"`` dict (achieved vs.
+    peak FLOPs/bandwidth).  Pass ``_fn``/``_args`` — the benched callable —
+    to upgrade the analytic counts to HLO-derived ones (one extra
+    lower+compile, memoised on the entry name)."""
+    e = {"name": name, "kind": "time", "seconds": float(seconds),
+         "derived": derived, "meta": meta}
+    return roofline.attach(e, _fn, _args)
 
 
 def _acc(name: str, value: float, derived: str = "", **meta) -> dict:
-    return {"name": name, "kind": "accuracy", "value": float(value),
-            "derived": derived, "meta": meta}
+    e = {"name": name, "kind": "accuracy", "value": float(value),
+         "derived": derived, "meta": meta}
+    return roofline.attach(e)
 
 
 def _chk(name: str, derived: str = "ok", **meta) -> dict:
-    return {"name": name, "kind": "check", "derived": derived, "meta": meta}
+    e = {"name": name, "kind": "check", "derived": derived, "meta": meta}
+    return roofline.attach(e)
 
 
 def _paths(seed: int, B: int, L: int, d: int, scale: float) -> jax.Array:
@@ -91,7 +99,7 @@ def calibration(mode: str = "smoke", repeats: int = 3) -> List[dict]:
     t = timer.bench(probe, x, repeats=max(repeats, 3))
     return [_t("calibration_matmul_scan", t,
                "fixed 256x256 matmul scan (machine-speed probe)",
-               gate=False)]
+               _fn=probe, _args=(x,), gate=False)]
 
 
 # ---------------------------------------------------------------------------
@@ -119,7 +127,8 @@ def table1_signatures(mode: str = "quick", repeats: int = 5) -> List[dict]:
         t_hor = timer.bench(f_horner, path, repeats=repeats)
         entries.append(_t(f"{tag}_fwd_direct", t_dir, **meta))
         entries.append(_t(f"{tag}_fwd_horner", t_hor,
-                          f"speedup_vs_direct={t_dir / t_hor:.2f}x", **meta))
+                          f"speedup_vs_direct={t_dir / t_hor:.2f}x",
+                          _fn=f_horner, _args=(path,), **meta))
 
         g_auto = jax.jit(jax.grad(lambda p: signature_direct(p, N).sum()))
         g_rev = jax.jit(jax.grad(
@@ -177,7 +186,7 @@ def table2_sigkernels(mode: str = "quick", repeats: int = 5) -> List[dict]:
         entries.append(_t(f"{tag}_fwd_rowscan", t_scan, **meta))
         entries.append(_t(f"{tag}_fwd_wavefront", t_wave,
                           f"speedup_vs_rowscan={t_scan / t_wave:.2f}x",
-                          **meta))
+                          _fn=f_wave, _args=(kx, ky), **meta))
 
         g_auto = jax.jit(jax.grad(
             lambda x, y: solve_goursat(delta_matrix(x, y)).sum()))
@@ -212,8 +221,11 @@ def gram_backends(mode: str = "quick", repeats: int = 5,
                 f"speedup_vs_reference={t_ref / t:.2f}x"
             if b == "reference":
                 t_ref = t
+            # HLO-derived counts for the cheap-to-lower CPU backends; the
+            # interpret-mode Pallas rows fall back to the analytic model
+            hlo_fn = f if b in ("reference", "antidiag") else None
             entries.append(_t(f"{tag}_dense_{b}", t, derived,
-                              backend=b, **meta))
+                              _fn=hlo_fn, _args=(X, Y), backend=b, **meta))
         # symmetric fast path: ~half the PDE solves of the dense Kxx
         for b in backends:
             f_sym = jax.jit(lambda x, b=b: sigkernel_gram(x, backend=b))

@@ -4,7 +4,7 @@ from . import config
 from . import dispatch
 from . import lyndon
 from . import tensoralg
-from .config import (GridConfig, Linear, RBF, StaticKernel,
+from .config import (GridConfig, LaunchConfig, Linear, RBF, StaticKernel,
                      TransformPipeline, delta_from_gram)
 from .signature import (signature, signature_direct, signature_combine,
                         path_increments, transformed_dim)
@@ -23,7 +23,8 @@ from . import losses
 
 __all__ = [
     "config", "dispatch", "gram", "lyndon", "tensoralg",
-    "TransformPipeline", "GridConfig", "StaticKernel", "Linear", "RBF",
+    "TransformPipeline", "GridConfig", "LaunchConfig",
+    "StaticKernel", "Linear", "RBF",
     "delta_from_gram",
     "signature", "signature_direct",
     "signature_combine", "path_increments", "transformed_dim",

@@ -17,6 +17,14 @@ cleanly through ``jax.jit`` / ``jax.vmap`` / ``jax.grad`` boundaries:
     The independent dyadic refinement orders of the Goursat PDE grid.
     Both static (they enter shapes via bit-shifts).
 
+``LaunchConfig(pde_strip, sig_bt, sig_lb, gram_row_block, band_chunk)``
+    Kernel *launch parameters* — the tile/block/strip shapes that used to
+    be module constants (``_MAX_T``, ``_MAX_BT``/``_LB``, the Gram
+    ``row_block`` heuristic).  All static; all default to ``None`` ("use
+    the library default", bitwise-identical to the pre-tuning constants).
+    The autotune subsystem (:mod:`repro.bench.autotune`) sweeps a bounded
+    space of these per shape-bucket and persists the winner.
+
 ``StaticKernel`` — ``Linear(scale)`` / ``RBF(sigma)``
     The static-kernel *lift* under the signature kernel (KSig-style).
     ``Linear`` keeps the paper's one-matmul Δ from increments; ``RBF``
@@ -129,6 +137,104 @@ class GridConfig:
 
 
 _pytree_dataclass(GridConfig, data_fields=(), meta_fields=("lam1", "lam2"))
+
+
+# ---------------------------------------------------------------------------
+# LaunchConfig — kernel launch parameters (the autotune search space)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LaunchConfig:
+    """Kernel launch parameters: the tile/block/strip shapes of the hot paths.
+
+    Every field is **static** metadata (they set kernel block shapes and
+    jit-trace structure) and every field defaults to ``None`` — "use the
+    library default", which reproduces the pre-tuning constants bitwise.
+    Non-default values come from three places, in precedence order: an
+    explicit ``launch=`` kwarg on an entry point, the autotune cache
+    (:mod:`repro.bench.autotune` sweeps a small bounded space per
+    shape-bucket and persists the winner), and the defaults.
+
+    Attributes:
+      pde_strip: refined-row strip height per Goursat Pallas program
+        (cap on ``T``; default 128 = ``kernels.sigkernel_pde.ops._MAX_T``).
+        Must be a power of two; still shrunk to fit the VMEM budget and
+        clamped to at least one unrefined row (``1 << lam1``).
+      sig_bt: batch-tile (lane) cap of the signature Horner kernel
+        (default 128 = ``kernels.signature.ops._MAX_BT``). Power of two;
+        still shrunk to fit the VMEM budget.
+      sig_lb: length-block of the signature Horner kernel's grid
+        (default 256 = ``kernels.signature.ops._LB``). Power of two.
+      gram_row_block: Gram-engine row blocking (``row_block=``) applied
+        when the caller didn't pass one. Default ``None`` keeps today's
+        behaviour (dense, or the symmetric path's gather-budget heuristic).
+      band_chunk: antidiagonal-wavefront solver batching — at most this
+        many Goursat pair problems are vectorised per sweep
+        (``lax.map`` over chunks). Default: the whole flattened batch in
+        one sweep. Caps the live band memory for huge pair batches.
+    """
+
+    pde_strip: Optional[int] = None
+    sig_bt: Optional[int] = None
+    sig_lb: Optional[int] = None
+    gram_row_block: Optional[int] = None
+    band_chunk: Optional[int] = None
+
+    _POW2_FIELDS = ("pde_strip", "sig_bt", "sig_lb")
+
+    def __post_init__(self):
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v is None:
+                continue
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                raise ValueError(
+                    f"LaunchConfig.{f.name} must be None or a positive "
+                    f"Python int (it sets static kernel block shapes), "
+                    f"got {v!r}")
+            if f.name in self._POW2_FIELDS and v & (v - 1):
+                raise ValueError(
+                    f"LaunchConfig.{f.name} must be a power of two "
+                    f"(kernel tiling constraint), got {v}")
+
+    @property
+    def is_default(self) -> bool:
+        """True when every knob is at the library default."""
+        return all(getattr(self, f.name) is None
+                   for f in dataclasses.fields(self))
+
+    def to_dict(self) -> dict:
+        """JSON-friendly dict of the non-default knobs (autotune cache)."""
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)
+                if getattr(self, f.name) is not None}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LaunchConfig":
+        """Rebuild from :meth:`to_dict` output.
+
+        Unknown keys are dropped (fail-open: a cache written by a newer
+        version must not break an older library); known keys with invalid
+        values raise — callers treat that as a stale cache entry.
+        """
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in dict(d).items() if k in known})
+
+
+_pytree_dataclass(LaunchConfig, data_fields=(),
+                  meta_fields=("pde_strip", "sig_bt", "sig_lb",
+                               "gram_row_block", "band_chunk"))
+
+
+def resolve_launch(launch: Optional[LaunchConfig]) -> LaunchConfig:
+    """Default + type-check the ``launch=`` kwarg of the entry points."""
+    if launch is None:
+        return LaunchConfig()
+    if not isinstance(launch, LaunchConfig):
+        raise TypeError(
+            f"launch= expects a LaunchConfig, got {type(launch).__name__} "
+            f"(see docs/benchmarks.md, 'Launch-parameter tuning')")
+    return launch
 
 
 # ---------------------------------------------------------------------------

@@ -260,6 +260,47 @@ def _autotuned(op: str, shape, dtype, ragged: bool = False) -> Optional[str]:
     return name
 
 
+def _autotuned_launch(op: str, shape, dtype, ragged: bool = False):
+    """Tuned :class:`repro.core.config.LaunchConfig` for this key, or None.
+
+    Same fail-open discipline as :func:`_autotuned`: any problem — cold
+    cache, disabled autotune, unreadable file, a launch dict with invalid
+    values, a fingerprint from another machine — yields None and the
+    library defaults.  Lookups never measure anything.
+    """
+    if shape is None:
+        return None
+    try:
+        from repro.bench import autotune
+    except ImportError:
+        return None
+    if not autotune.enabled():
+        return None
+    try:
+        return autotune.lookup_launch(op, shape, dtype or "float32",
+                                      ragged=ragged)
+    except (ValueError, TypeError):
+        return None
+
+
+def resolve_launch(launch=None, *, op: str, shape=None, dtype=None,
+                   ragged: bool = False):
+    """Concrete :class:`LaunchConfig`: explicit > autotuned > defaults.
+
+    The companion of :func:`resolve` for kernel *launch parameters*: an
+    explicit ``launch=`` from the caller always wins; otherwise the
+    autotune cache may hold a swept winner for the same
+    ``(op, shape-bucket, dtype, platform, ragged)`` key that stores the
+    backend winner; otherwise every knob stays at the library default
+    (bitwise-identical to the pre-tuning constants).
+    """
+    from .config import LaunchConfig, resolve_launch as _check
+    if launch is not None:
+        return _check(launch)
+    tuned = _autotuned_launch(op, shape, dtype, ragged)
+    return tuned if tuned is not None else LaunchConfig()
+
+
 def resolve(backend: str, *, op: str, grid_cells: Optional[int] = None,
             shape=None, dtype=None, allow_fused: bool = True,
             ragged: bool = False) -> str:

@@ -87,49 +87,51 @@ def _pair_delta(sa: jax.Array, sb: jax.Array, kernel) -> jax.Array:
 
 
 def _solve_pairs(sa: jax.Array, sb: jax.Array, kernel, backend: str,
-                 lam1: int, lam2: int) -> jax.Array:
+                 lam1: int, lam2: int, launch=None) -> jax.Array:
     """Solve one batch of prepared pairs (P, ·, d) × (P, ·, d) -> (P,)."""
     if backend == "pallas_fused":
         from repro.kernels.sigkernel_pde import ops as pde_ops
         # fused kernels compute ⟨dx, dy⟩ in VMEM; fold a non-unit linear
         # scale into one side (scale·⟨dx, dy⟩ = ⟨scale·dx, dy⟩ exactly)
-        return pde_ops.solve_fused(_scale(sa, kernel.scale), sb, lam1, lam2)
+        return pde_ops.solve_fused(_scale(sa, kernel.scale), sb, lam1, lam2,
+                                   launch)
     return _sigkernel_from_delta(_pair_delta(sa, sb, kernel), lam1, lam2,
-                                 backend)
+                                 backend, launch)
 
 
 def _gram_block(sxb: jax.Array, sY: jax.Array, kernel, backend: str,
-                lam1: int, lam2: int) -> jax.Array:
+                lam1: int, lam2: int, launch=None) -> jax.Array:
     """Gram block from prepared streams (r, ·, d) × (By, ·, d) -> (r, By)."""
     if backend == "pallas_fused":
         from repro.kernels.sigkernel_pde import ops as pde_ops
-        return pde_ops.gram_fused(_scale(sxb, kernel.scale), sY, lam1, lam2)
+        return pde_ops.gram_fused(_scale(sxb, kernel.scale), sY, lam1, lam2,
+                                  launch)
     delta = _pair_delta(sxb[:, None], sY[None, :], kernel)
-    return _sigkernel_from_delta(delta, lam1, lam2, backend)
+    return _sigkernel_from_delta(delta, lam1, lam2, backend, launch)
 
 
 def _gram_rows(sX: jax.Array, sY: jax.Array, kernel, backend: str,
                lam1: int, lam2: int,
-               row_block: Optional[int]) -> jax.Array:
+               row_block: Optional[int], launch=None) -> jax.Array:
     """(Bx, ·, d) × (By, ·, d) -> (Bx, By), optionally ``row_block`` rows
     in flight at a time (``Bx`` zero-padded; padded rows dropped)."""
     Bx, By = sX.shape[0], sY.shape[0]
     if row_block is None:
-        return _gram_block(sX, sY, kernel, backend, lam1, lam2)
+        return _gram_block(sX, sY, kernel, backend, lam1, lam2, launch)
     pad = (-Bx) % row_block
     if pad:  # zero rows -> Δ = 0 -> k = 1 rows, dropped below: exact
         sX = jnp.pad(sX, ((0, pad), (0, 0), (0, 0)))
     n_blocks = (Bx + pad) // row_block
     sXb = sX.reshape(n_blocks, row_block, *sX.shape[1:])
     K = jax.lax.map(
-        lambda sxb: _gram_block(sxb, sY, kernel, backend, lam1, lam2),
+        lambda sxb: _gram_block(sxb, sY, kernel, backend, lam1, lam2, launch),
         sXb)
     return K.reshape(n_blocks * row_block, By)[:Bx]
 
 
 def _solve_pairs_chunked(sX: jax.Array, a_idx, b_idx, kernel, backend: str,
                          lam1: int, lam2: int,
-                         chunk: Optional[int]) -> jax.Array:
+                         chunk: Optional[int], launch=None) -> jax.Array:
     """k values for an explicit pair list into one stream batch, at most
     ``chunk`` pairs of replicated increments live at once.
 
@@ -143,13 +145,13 @@ def _solve_pairs_chunked(sX: jax.Array, a_idx, b_idx, kernel, backend: str,
     n = a_idx.shape[0]
     if chunk is None or chunk >= n:
         return _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend,
-                            lam1, lam2)
+                            lam1, lam2, launch)
     pad = (-n) % chunk
     a = jnp.concatenate([a_idx, jnp.zeros((pad,), a_idx.dtype)])
     b = jnp.concatenate([b_idx, jnp.zeros((pad,), b_idx.dtype)])
     k = jax.lax.map(
         lambda ab: _solve_pairs(sX[ab[0]], sX[ab[1]], kernel, backend,
-                                lam1, lam2),
+                                lam1, lam2, launch),
         (a.reshape(-1, chunk), b.reshape(-1, chunk)))
     return k.reshape(-1)[:n]
 
@@ -160,12 +162,14 @@ def _solve_pairs_chunked(sX: jax.Array, a_idx, b_idx, kernel, backend: str,
 
 def _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms, grid,
                     static_kernel, lam1, lam2, time_aug, lead_lag,
-                    use_pallas, solver, backend):
+                    use_pallas, solver, backend, launch=None):
     """The engine front-end every Gram entry point shares.
 
     Validates shapes/flags, resolves configs + legacy shims, pads ragged
-    batches, and resolves ``backend`` through the dispatch registry.
-    Returns ``(X, Y, cfg, grid_cfg, kernel, backend, symmetric)`` with
+    batches, and resolves ``backend`` through the dispatch registry and
+    ``launch`` through :func:`repro.core.dispatch.resolve_launch`
+    (explicit > autotuned > defaults).  Returns
+    ``(X, Y, cfg, grid_cfg, kernel, backend, symmetric, launch)`` with
     ``X``/``Y`` already ragged-padded (masking is burnt into the prepared
     streams downstream, so ``lengths`` are consumed here).
     """
@@ -202,12 +206,16 @@ def _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms, grid,
     Lx = cfg.transformed_steps(X.shape[1])
     Ly = Lx if Y is None else cfg.transformed_steps(Y.shape[1])
     By = X.shape[0] if Y is None else Y.shape[0]
+    key_shape = (X.shape[0], By, Lx << g.lam1, Ly << g.lam2,
+                 cfg.transformed_dim(X.shape[-1]))
     backend = dispatch.resolve(
         backend, op="gram", grid_cells=(Lx << g.lam1) * (Ly << g.lam2),
-        shape=(X.shape[0], By, Lx << g.lam1, Ly << g.lam2,
-               cfg.transformed_dim(X.shape[-1])),
+        shape=key_shape,
         dtype=X.dtype, allow_fused=kernel.lifts_increments, ragged=ragged)
-    return X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric
+    launch = dispatch.resolve_launch(launch, op="gram", shape=key_shape,
+                                     dtype=X.dtype, ragged=ragged)
+    return (X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric,
+            launch)
 
 
 def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
@@ -215,6 +223,7 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
                    symmetric: Optional[bool] = None,
                    lengths=None, lengths_y=None,
                    transforms=None, grid=None, static_kernel=None,
+                   launch=None,
                    lam1=UNSET, lam2=UNSET,
                    time_aug=UNSET, lead_lag=UNSET,
                    use_pallas=UNSET, solver=UNSET) -> jax.Array:
@@ -247,7 +256,14 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
         applied on-the-fly; basepoint included).
       grid: a :class:`repro.GridConfig` — dyadic refinement of the PDE grid.
       static_kernel: the static-kernel lift (:class:`repro.Linear` default,
-        :class:`repro.RBF` for the Gaussian lift via the Δ-from-Gram path).
+        :class:`repro.RBF` for the Gaussian lift via the Δ-from-gram path).
+      launch: an optional :class:`repro.LaunchConfig` of launch-parameter
+        overrides (PDE strip height, Gram ``row_block`` default, antidiag
+        band chunking).  ``None`` fields fall back to the autotuned winner
+        for this shape bucket (if a tuned cache is warm) and then to the
+        library defaults; an explicit ``row_block=`` argument beats
+        ``launch.gram_row_block``.  Launch parameters never change the
+        math — see docs/benchmarks.md § Launch-parameter tuning.
       lam1 / lam2 / time_aug / lead_lag: deprecated aliases for ``grid=`` /
         ``transforms=`` (DeprecationWarning once per call-site).
       use_pallas / solver: deprecated aliases (DeprecationWarning) mapped to
@@ -261,18 +277,21 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
     device mesh) and :func:`sigkernel_gram_reduce` (streaming ``ΣK``
     without materialising K — what ``mmd2(streaming=True)`` uses).
     """
-    X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric = \
+    X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric, launch = \
         _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms,
                         grid, static_kernel, lam1, lam2, time_aug, lead_lag,
-                        use_pallas, solver, backend)
+                        use_pallas, solver, backend, launch)
     lam1, lam2 = g.lam1, g.lam2
+    if row_block is None:  # explicit arg beats the launch knob
+        row_block = launch.gram_row_block
 
     sX = _prepare(X, cfg, kernel, lengths)
     sX = shard(sX, "batch", None, None)
     Bx = sX.shape[0]
 
     if symmetric:
-        return _symmetric_gram(sX, kernel, backend, row_block, lam1, lam2)
+        return _symmetric_gram(sX, kernel, backend, row_block, lam1, lam2,
+                               launch)
 
     sY = _prepare(Y, cfg, kernel, lengths_y)
     sY = shard(sY, "model", None, None)
@@ -283,7 +302,7 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
     else:
         n_blocks = (Bx + (-Bx) % row_block) // row_block
         dispatch.record_pair_solves(n_blocks * row_block * By)
-    K = _gram_rows(sX, sY, kernel, backend, lam1, lam2, row_block)
+    K = _gram_rows(sX, sY, kernel, backend, lam1, lam2, row_block, launch)
     return shard(K, "batch", "model")
 
 
@@ -301,7 +320,7 @@ def _auto_row_block(other: int, L: int, d: int) -> int:
 
 def _symmetric_gram(sX: jax.Array, kernel, backend: str,
                     row_block: Optional[int],
-                    lam1: int, lam2: int) -> jax.Array:
+                    lam1: int, lam2: int, launch=None) -> jax.Array:
     """Upper-triangle pair solve + mirror: Bx·(Bx+1)/2 (+ pad) PDE solves."""
     Bx = sX.shape[0]
     a_idx, b_idx = np.triu_indices(Bx)
@@ -313,13 +332,14 @@ def _symmetric_gram(sX: jax.Array, kernel, backend: str,
 
     if row_block is None:
         dispatch.record_pair_solves(n_pairs)
-        k = _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend, lam1, lam2)
+        k = _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend, lam1, lam2,
+                         launch)
     else:
         # a block of `row_block` Gram rows ~ row_block·Bx pairs of live Δ
         chunk = max(1, int(row_block)) * Bx
         dispatch.record_pair_solves(n_pairs + (-n_pairs) % chunk)
         k = _solve_pairs_chunked(sX, a_idx, b_idx, kernel, backend,
-                                 lam1, lam2, chunk)
+                                 lam1, lam2, chunk, launch)
 
     K = jnp.zeros((Bx, Bx), k.dtype).at[a_idx, b_idx].set(k)
     K = K + jnp.triu(K, k=1).T
@@ -421,6 +441,7 @@ def sigkernel_gram_reduce(X: jax.Array, Y: Optional[jax.Array] = None, *,
                           symmetric: Optional[bool] = None,
                           lengths=None, lengths_y=None,
                           transforms=None, grid=None, static_kernel=None,
+                          launch=None,
                           lam1=UNSET, lam2=UNSET,
                           time_aug=UNSET, lead_lag=UNSET,
                           use_pallas=UNSET, solver=UNSET,
@@ -459,11 +480,13 @@ def sigkernel_gram_reduce(X: jax.Array, Y: Optional[jax.Array] = None, *,
     # capture pre-padding abstract args for the guard: the re-entrant
     # closure below replays the padding itself
     guard_args = (X, Y, lengths, lengths_y)
-    X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric = \
+    X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric, launch = \
         _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms,
                         grid, static_kernel, lam1, lam2, time_aug, lead_lag,
-                        use_pallas, solver, backend)
+                        use_pallas, solver, backend, launch)
     lam1, lam2 = g.lam1, g.lam2
+    if row_block is None:  # explicit arg beats the launch knob
+        row_block = launch.gram_row_block
 
     sX = _prepare(X, cfg, kernel, lengths)
     Bx, L, d = sX.shape
@@ -479,13 +502,14 @@ def sigkernel_gram_reduce(X: jax.Array, Y: Optional[jax.Array] = None, *,
     if check_streaming and streams:
         _guard_reduce(guard_args, include_diag=include_diag,
                       backend=backend, row_block=rb, symmetric=symmetric,
-                      transforms=cfg, grid=g, static_kernel=kernel)
+                      transforms=cfg, grid=g, static_kernel=kernel,
+                      launch=launch)
 
     if symmetric:
         return _reduce_symmetric(sX, kernel, backend, rb, lam1, lam2,
-                                 include_diag)
+                                 include_diag, launch)
     sY = _prepare(Y, cfg, kernel, lengths_y)
-    return _reduce_rows(sX, sY, kernel, backend, rb, lam1, lam2)
+    return _reduce_rows(sX, sY, kernel, backend, rb, lam1, lam2, launch)
 
 
 def _guard_reduce(guard_args, **kw) -> None:
@@ -548,7 +572,7 @@ def _guard_reduce(guard_args, **kw) -> None:
 
 def _reduce_symmetric(sX: jax.Array, kernel, backend: str, row_block: int,
                       lam1: int, lam2: int,
-                      include_diag: bool) -> jax.Array:
+                      include_diag: bool, launch=None) -> jax.Array:
     """Σ over the symmetric Gram via the upper triangle: off-diagonal
     pairs weighted 2, diagonal 1 (or 0), padding 0."""
     Bx = sX.shape[0]
@@ -562,7 +586,8 @@ def _reduce_symmetric(sX: jax.Array, kernel, backend: str, row_block: int,
         chunk = Bx + 1
     if chunk >= n_pairs:
         dispatch.record_pair_solves(n_pairs)
-        k = _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend, lam1, lam2)
+        k = _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend, lam1, lam2,
+                         launch)
         return (jnp.asarray(w, k.dtype) * k).sum()
     pad = (-n_pairs) % chunk
     dispatch.record_pair_solves(n_pairs + pad)
@@ -575,7 +600,7 @@ def _reduce_symmetric(sX: jax.Array, kernel, backend: str, row_block: int,
 
     def block(abw):
         ai, bi, wi = abw
-        k = _solve_pairs(sX[ai], sX[bi], kernel, backend, lam1, lam2)
+        k = _solve_pairs(sX[ai], sX[bi], kernel, backend, lam1, lam2, launch)
         return (wi * k).sum()
 
     # checkpoint: lax.map would otherwise stack every block's Δ/grid
@@ -585,7 +610,8 @@ def _reduce_symmetric(sX: jax.Array, kernel, backend: str, row_block: int,
 
 
 def _reduce_rows(sX: jax.Array, sY: jax.Array, kernel, backend: str,
-                 row_block: int, lam1: int, lam2: int) -> jax.Array:
+                 row_block: int, lam1: int, lam2: int,
+                 launch=None) -> jax.Array:
     """Σ over the (Bx, By) Gram, ``row_block`` rows at a time."""
     Bx, By = sX.shape[0], sY.shape[0]
     rb = max(1, int(row_block))
@@ -595,7 +621,7 @@ def _reduce_rows(sX: jax.Array, sY: jax.Array, kernel, backend: str,
         rb = 2
     if rb >= Bx:
         dispatch.record_pair_solves(Bx * By)
-        return _gram_block(sX, sY, kernel, backend, lam1, lam2).sum()
+        return _gram_block(sX, sY, kernel, backend, lam1, lam2, launch).sum()
     pad = (-Bx) % rb
     n_blocks = (Bx + pad) // rb
     dispatch.record_pair_solves(n_blocks * rb * By)
@@ -607,7 +633,7 @@ def _reduce_rows(sX: jax.Array, sY: jax.Array, kernel, backend: str,
 
     def block(args):
         sxb, v = args
-        Kb = _gram_block(sxb, sY, kernel, backend, lam1, lam2)
+        Kb = _gram_block(sxb, sY, kernel, backend, lam1, lam2, launch)
         return jnp.where(v[:, None], Kb, 0.0).sum()
 
     parts = jax.lax.map(jax.checkpoint(block), (sXb, valid))
@@ -626,7 +652,7 @@ def sigkernel_gram_sharded(X: jax.Array, Y: Optional[jax.Array] = None, *,
                            symmetric: Optional[bool] = None,
                            lengths=None, lengths_y=None,
                            transforms=None, grid=None,
-                           static_kernel=None) -> jax.Array:
+                           static_kernel=None, launch=None) -> jax.Array:
     """:func:`sigkernel_gram` tiled over a device mesh via ``shard_map``.
 
     The (Bx, By) Gram tile grid is 2-D **block-cyclic** sharded: row tiles
@@ -665,11 +691,13 @@ def sigkernel_gram_sharded(X: jax.Array, Y: Optional[jax.Array] = None, *,
     docs/api/public.md § Distributed & streaming Grams and
     ``examples/gram_matrix_distributed.py``).
     """
-    X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric = \
+    X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric, launch = \
         _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms,
                         grid, static_kernel, UNSET, UNSET, UNSET, UNSET,
-                        UNSET, UNSET, backend)
+                        UNSET, UNSET, backend, launch)
     lam1, lam2 = g.lam1, g.lam2
+    if row_block is None:  # explicit arg beats the launch knob
+        row_block = launch.gram_row_block
     if mesh is None:
         from repro.launch.mesh import make_gram_mesh
         mesh = make_gram_mesh()
@@ -700,7 +728,7 @@ def sigkernel_gram_sharded(X: jax.Array, Y: Optional[jax.Array] = None, *,
 
         def local(a_loc, b_loc, sx):
             k = _solve_pairs_chunked(sx, a_loc[0], b_loc[0], kernel,
-                                     backend, lam1, lam2, chunk)
+                                     backend, lam1, lam2, chunk, launch)
             return k[None]
 
         k_dev = shard_map(
@@ -734,7 +762,8 @@ def sigkernel_gram_sharded(X: jax.Array, Y: Optional[jax.Array] = None, *,
     dispatch.record_pair_solves(sXp.shape[0] * sYp.shape[0])
 
     def local(sx, sy):
-        return _gram_rows(sx, sy, kernel, backend, lam1, lam2, row_block)
+        return _gram_rows(sx, sy, kernel, backend, lam1, lam2, row_block,
+                          launch)
 
     Kp = shard_map(local, mesh=mesh,
                    in_specs=(P(row_axis), P(col_axis)),

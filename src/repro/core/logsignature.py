@@ -97,7 +97,7 @@ def logsignature_from_increments(z: jax.Array, depth: int,
 
 def logsignature(path: jax.Array, depth: int, *, mode: str = "lyndon",
                  transforms=None, backend: str = "auto",
-                 stream: bool = False, lengths=None,
+                 stream: bool = False, lengths=None, launch=None,
                  time_aug=dispatch_mod.UNSET,
                  lead_lag=dispatch_mod.UNSET, use_pallas=None) -> jax.Array:
     """Truncated log-signature of a batch of piecewise-linear paths.
@@ -121,6 +121,10 @@ def logsignature(path: jax.Array, depth: int, *, mode: str = "lyndon",
         ragged batches — same semantics as :func:`repro.core.signature`
         (padding masked, per-path time grid, power-of-two length buckets;
         streamed prefixes repeat the final value past the true end).
+      launch: an optional :class:`repro.LaunchConfig` — same semantics as
+        :func:`repro.core.signature.signature` (``sig_bt`` / ``sig_lb``
+        tile the Pallas Horner kernel; bitwise-identical results across
+        launch configs; ignored off the pallas backend).
       time_aug / lead_lag: deprecated bool aliases for ``transforms=``
         (DeprecationWarning once per call-site; bitwise-identical results).
       use_pallas: deprecated alias — explicit bools warn and map to
@@ -152,13 +156,16 @@ def logsignature(path: jax.Array, depth: int, *, mode: str = "lyndon",
         sig_stream = _signature_stream_from_increments(z, depth)
         flat_log = ta.tensor_log(sig_stream, d, depth)
         return _project(flat_log, d, depth, mode)
+    key_shape = (z.shape[-2], z.shape[-1], depth)
     backend = dispatch.resolve(
-        backend, op="logsignature",
-        shape=(z.shape[-2], z.shape[-1], depth), dtype=z.dtype,
+        backend, op="logsignature", shape=key_shape, dtype=z.dtype,
         ragged=lengths is not None)
     if backend == "pallas":
         from repro.kernels.signature import ops as sig_ops
-        return sig_ops.logsignature_from_increments(z, depth, mode)
+        launch = dispatch.resolve_launch(launch, op="logsignature",
+                                         shape=key_shape, dtype=z.dtype,
+                                         ragged=lengths is not None)
+        return sig_ops.logsignature_from_increments(z, depth, mode, launch)
     return logsignature_from_increments(z, depth, mode)
 
 

@@ -202,12 +202,34 @@ def _solve_antidiag_one(delta: jax.Array, lam1: int, lam2: int) -> jax.Array:
     return last[nx - 1]
 
 
-def solve_goursat_antidiag(delta: jax.Array, lam1: int = 0, lam2: int = 0) -> jax.Array:
-    """Batched vectorised wavefront solve: (..., Lx, Ly) -> (...,)."""
-    fn = functools.partial(_solve_antidiag_one, lam1=lam1, lam2=lam2)
-    for _ in range(delta.ndim - 2):
-        fn = jax.vmap(fn)
-    return fn(delta)
+def solve_goursat_antidiag(delta: jax.Array, lam1: int = 0, lam2: int = 0,
+                           band_chunk: Optional[int] = None) -> jax.Array:
+    """Batched vectorised wavefront solve: (..., Lx, Ly) -> (...,).
+
+    ``band_chunk`` (a :class:`LaunchConfig` knob) caps how many Goursat
+    band solves are vectorised per sweep: the flattened pair batch is
+    processed ``band_chunk`` problems at a time under ``lax.map``, bounding
+    the live diagonal-buffer memory for huge batches.  Each pair's scan
+    arithmetic is untouched, so results are bitwise-identical to the
+    unchunked default (``None`` — the whole batch in one sweep); padding
+    pairs are all-zero Δ (solution ≡ 1) and dropped.
+    """
+    fn1 = functools.partial(_solve_antidiag_one, lam1=lam1, lam2=lam2)
+    batch_shape = delta.shape[:-2]
+    if band_chunk is None or not batch_shape:
+        fn = fn1
+        for _ in range(delta.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(delta)
+    flat = delta.reshape((-1,) + delta.shape[-2:])
+    B = flat.shape[0]
+    pad = (-B) % band_chunk
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((pad,) + flat.shape[1:], flat.dtype)])
+    chunks = flat.reshape((-1, band_chunk) + flat.shape[1:])
+    out = jax.lax.map(jax.vmap(fn1), chunks)
+    return out.reshape(-1)[:B].reshape(batch_shape)
 
 
 # ---------------------------------------------------------------------------
@@ -343,39 +365,44 @@ def _normalize_backend(backend) -> str:
     return backend
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
 def _sigkernel_from_delta(delta: jax.Array, lam1: int, lam2: int,
-                          backend="reference") -> jax.Array:
+                          backend="reference", launch=None) -> jax.Array:
     """Solve batched Goursat problems with the named (concrete) backend.
 
     ``backend`` is a resolved name from :mod:`repro.core.dispatch`
     ("reference" | "antidiag" | "pallas"; bools are accepted for
     backwards compatibility).  The custom VJP is the exact one-pass
-    backward (Alg 4) for every backend.
+    backward (Alg 4) for every backend.  ``launch`` is an optional
+    :class:`repro.core.config.LaunchConfig` (static, like the backend
+    name): ``pde_strip`` shapes the Pallas strips, ``band_chunk`` chunks
+    the antidiag pair batch; the reference scan is launch-free.
     """
     backend = _normalize_backend(backend)
     if backend == "pallas":
         from repro.kernels.sigkernel_pde import ops as pde_ops
-        return pde_ops.solve(delta, lam1, lam2)
+        return pde_ops.solve(delta, lam1, lam2, launch)
     if backend == "antidiag":
-        return solve_goursat_antidiag(delta, lam1, lam2)
+        return solve_goursat_antidiag(delta, lam1, lam2,
+                                      getattr(launch, "band_chunk", None))
     if backend == "reference":
         return solve_goursat(delta, lam1, lam2)
     raise ValueError(f"no Δ-solver implementation for backend {backend!r}")
 
 
-def _sk_fwd(delta, lam1, lam2, backend):
+def _sk_fwd(delta, lam1, lam2, backend, launch=None):
     backend = _normalize_backend(backend)
     if backend == "pallas":
         from repro.kernels.sigkernel_pde import ops as pde_ops
-        k, grid = pde_ops.solve_with_grid(delta, lam1, lam2)
+        k, grid = pde_ops.solve_with_grid(delta, lam1, lam2, launch)
     elif backend == "antidiag":
         # rematerialisation trade-off: save Δ only (Lx·Ly floats) and rebuild
         # the refined grid serially in the backward, instead of holding the
         # (nx+1)·(ny+1) grid — 4^λ larger — as residual like "reference" does.
         # Gradient-dominated small-grid workloads that prefer time over
         # memory should pass backend="reference" (docs/solver_guide.md).
-        k, grid = solve_goursat_antidiag(delta, lam1, lam2), None
+        k, grid = solve_goursat_antidiag(
+            delta, lam1, lam2, getattr(launch, "band_chunk", None)), None
     elif backend == "reference":
         grid = solve_goursat(delta, lam1, lam2, return_grid=True)
         k = grid[..., -1, -1]
@@ -384,12 +411,12 @@ def _sk_fwd(delta, lam1, lam2, backend):
     return k, (delta, grid)
 
 
-def _sk_bwd(lam1, lam2, backend, res, gbar):
+def _sk_bwd(lam1, lam2, backend, launch, res, gbar):
     backend = _normalize_backend(backend)
     delta, grid = res
     if backend == "pallas":
         from repro.kernels.sigkernel_pde import ops as pde_ops
-        ddelta = pde_ops.solve_grad(delta, grid, gbar, lam1, lam2)
+        ddelta = pde_ops.solve_grad(delta, grid, gbar, lam1, lam2, launch)
     else:
         if grid is None:  # antidiag saves Δ only; rebuild the grid exactly
             grid = solve_goursat(delta, lam1, lam2, return_grid=True)
@@ -401,7 +428,7 @@ _sigkernel_from_delta.defvjp(_sk_fwd, _sk_bwd)
 
 
 def sigkernel(x: jax.Array, y: jax.Array, *, transforms=None, grid=None,
-              static_kernel=None, backend: str = "auto",
+              static_kernel=None, backend: str = "auto", launch=None,
               lengths_x=None, lengths_y=None,
               lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
               use_pallas=UNSET) -> jax.Array:
@@ -431,6 +458,11 @@ def sigkernel(x: jax.Array, y: jax.Array, *, transforms=None, grid=None,
         that leave the Goursat boundary bitwise intact (see
         :func:`delta_matrix`).  Length axes are padded to power-of-two
         buckets so nearby sizes share one jit trace.
+      launch: an optional :class:`repro.LaunchConfig` — explicit kernel
+        launch parameters (Pallas strip height, antidiag band chunking).
+        Default ``None`` consults the autotune cache for a swept winner and
+        otherwise keeps the library defaults.  Results are independent of
+        the launch parameters (they only shape tiles/strips).
       lam1 / lam2 / time_aug / lead_lag / use_pallas: deprecated aliases
         for ``grid=`` / ``transforms=`` / ``backend=`` (DeprecationWarning
         once per call-site; bitwise-identical results).
@@ -451,15 +483,18 @@ def sigkernel(x: jax.Array, y: jax.Array, *, transforms=None, grid=None,
             "backend='pallas_fused' builds Δ from increments in VMEM and "
             f"only supports the linear lift, got "
             f"static_kernel={type(kernel).__name__}; pass backend='auto'")
+    Lx = cfg.transformed_steps(x.shape[-2])
+    Ly = cfg.transformed_steps(y.shape[-2])
+    key_shape = (Lx << lam1, Ly << lam2, cfg.transformed_dim(x.shape[-1]))
+    launch = dispatch.resolve_launch(launch, op="sigkernel",
+                                     shape=key_shape, dtype=x.dtype,
+                                     ragged=ragged)
     if backend in ("auto", "pallas_fused"):
         was_auto = backend == "auto"
-        Lx = cfg.transformed_steps(x.shape[-2])
-        Ly = cfg.transformed_steps(y.shape[-2])
         cells = (Lx << lam1) * (Ly << lam2)
         backend = dispatch.resolve(
             backend, op="sigkernel", grid_cells=cells,
-            shape=(Lx << lam1, Ly << lam2,
-                   cfg.transformed_dim(x.shape[-1])),
+            shape=key_shape,
             dtype=x.dtype, allow_fused=kernel.lifts_increments,
             ragged=ragged)
         if was_auto and backend == "pallas_fused" \
@@ -484,13 +519,13 @@ def sigkernel(x: jax.Array, y: jax.Array, *, transforms=None, grid=None,
             functools.reduce(lambda a, b: a * b, batch_shape, 1))
         k = pde_ops.solve_fused(dx.reshape((-1,) + dx.shape[-2:]),
                                 dy.reshape((-1,) + dy.shape[-2:]),
-                                lam1, lam2)
+                                lam1, lam2, launch)
         return k.reshape(batch_shape)
     delta = delta_matrix(x, y, transforms=cfg, static_kernel=kernel,
                          lengths_x=lengths_x, lengths_y=lengths_y)
     dispatch.record_pair_solves(
         functools.reduce(lambda a, b: a * b, delta.shape[:-2], 1))
-    return _sigkernel_from_delta(delta, lam1, lam2, backend)
+    return _sigkernel_from_delta(delta, lam1, lam2, backend, launch)
 
 
 def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, **kw) -> jax.Array:

@@ -171,6 +171,7 @@ _signature_core.defvjp(_signature_core_fwd, _signature_core_bwd)
 
 def signature(path: jax.Array, depth: int, *, transforms=None,
               backend: str = "auto", stream: bool = False, lengths=None,
+              launch=None,
               time_aug=UNSET, lead_lag=UNSET, use_pallas=None) -> jax.Array:
     """Truncated signature of a batch of piecewise-linear paths.
 
@@ -196,6 +197,13 @@ def signature(path: jax.Array, depth: int, *, transforms=None,
         (:func:`repro.core.transforms.pad_ragged`) so nearby max-lengths
         share one jit trace.  With ``stream=True``, prefix entries at or
         past a path's true end repeat its final signature.
+      launch: an optional :class:`repro.LaunchConfig`; its ``sig_bt`` /
+        ``sig_lb`` knobs set the Pallas kernel's batch-tile and
+        length-block shapes (``None`` fields fall back to the autotuned
+        winner for this shape bucket, then to the library defaults).
+        Tile geometry never changes the arithmetic — results are
+        bitwise-identical across launch configs.  Ignored by the pure-JAX
+        reference backend and the streamed scan.
       time_aug / lead_lag: deprecated bool aliases for ``transforms=``
         (DeprecationWarning once per call-site; bitwise-identical results).
       use_pallas: deprecated alias — ``True`` -> ``backend="pallas"``,
@@ -222,12 +230,16 @@ def signature(path: jax.Array, depth: int, *, transforms=None,
                 "— the streamed prefix scan is pure JAX; pass "
                 "backend='auto' or backend='reference'")
         return _signature_stream_from_increments(z, depth)
+    key_shape = (z.shape[-2], z.shape[-1], depth)
     backend = dispatch.resolve(
-        backend, op="signature", shape=(z.shape[-2], z.shape[-1], depth),
+        backend, op="signature", shape=key_shape,
         dtype=z.dtype, ragged=lengths is not None)
     if backend == "pallas":
         from repro.kernels.signature import ops as sig_ops
-        return sig_ops.signature_from_increments(z, depth)
+        launch = dispatch.resolve_launch(launch, op="signature",
+                                         shape=key_shape, dtype=z.dtype,
+                                         ragged=lengths is not None)
+        return sig_ops.signature_from_increments(z, depth, launch)
     return _signature_core(z, depth)
 
 

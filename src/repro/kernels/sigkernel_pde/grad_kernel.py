@@ -143,8 +143,8 @@ def bwd_kernel(delta_ref, delta_next_ref, cps_ref, gbar_ref, ddelta_ref,
 
 def build_bwd(batch: int, Lx: int, Ly: int, *, T: int, lam1: int, lam2: int,
               interpret: bool):
-    R = T >> lam1
-    assert R >= 1 and R << lam1 == T and Lx % R == 0
+    from .kernel import check_strip
+    R = check_strip(T, lam1, Lx)
     n_strips = Lx // R
     nx, ny = Lx << lam1, Ly << lam2
     n_steps = ny + T - 1

@@ -152,6 +152,29 @@ def _wavefront(blk, out_ref, cps_ref, brow_ref, *, T, lam1, lam2, ny,
         out_ref[0] = brow_ref[0, ny]
 
 
+
+def check_strip(T: int, lam1: int, Lx: int) -> int:
+    """Validate strip geometry; return R = T >> lam1 (unrefined rows/strip).
+
+    Raises ValueError (not a bare assert) naming the offending shape and the
+    LaunchConfig knob that lifts the limit.
+    """
+    R = T >> lam1
+    if R < 1 or R << lam1 != T:
+        raise ValueError(
+            f"Goursat strip height T={T} must be a power-of-two multiple of "
+            f"the dyadic refinement 2**lam1={1 << lam1} — raise "
+            f"LaunchConfig.pde_strip (or lower lam1); the default cap is "
+            f"{128}")
+    if Lx % R != 0:
+        raise ValueError(
+            f"Lx={Lx} rows are not a multiple of the R={R} unrefined rows "
+            f"per strip (T={T}, lam1={lam1}) — the ops.py wrappers zero-pad "
+            f"to the strip automatically; when calling the builders directly "
+            f"pad Lx or pick a LaunchConfig.pde_strip dividing it")
+    return R
+
+
 def build_fwd(batch: int, Lx: int, Ly: int, *, T: int, lam1: int, lam2: int,
               save_cps: bool, interpret: bool):
     """Construct the pallas_call for the forward solver.
@@ -159,9 +182,7 @@ def build_fwd(batch: int, Lx: int, Ly: int, *, T: int, lam1: int, lam2: int,
     Lx must be a multiple of R = T >> lam1 (ops.py zero-pads: Δ = 0 rows/cols
     leave the Goursat solution invariant since A(0) = B(0) = 1).
     """
-    R = T >> lam1
-    assert R >= 1 and R << lam1 == T, (T, lam1)
-    assert Lx % R == 0, (Lx, R)
+    R = check_strip(T, lam1, Lx)
     n_strips = Lx // R
     ny = Ly << lam2
 
@@ -194,8 +215,7 @@ def build_fwd(batch: int, Lx: int, Ly: int, *, T: int, lam1: int, lam2: int,
 def build_fwd_fused(batch: int, Lx: int, Ly: int, d: int, *, T: int,
                     lam1: int, lam2: int, interpret: bool):
     """Fused-Δ forward: inputs are increments dx (B, Lx, d), dy (B, Ly, d)."""
-    R = T >> lam1
-    assert R >= 1 and R << lam1 == T and Lx % R == 0
+    R = check_strip(T, lam1, Lx)
     n_strips = Lx // R
     ny = Ly << lam2
     kern = functools.partial(fused_fwd_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny)
@@ -231,8 +251,7 @@ def build_gram_fused(Bx: int, By: int, Lx: int, Ly: int, d: int, *, T: int,
     """Fused-Δ Gram: grid over (row path, col path, strip); dx/dy blocks are
     fetched from the ORIGINAL increment arrays by index map — neither Δ nor
     any pairwise replication of the paths ever exists in HBM."""
-    R = T >> lam1
-    assert R >= 1 and R << lam1 == T and Lx % R == 0
+    R = check_strip(T, lam1, Lx)
     n_strips = Lx // R
     ny = Ly << lam2
     kern = functools.partial(fused_gram_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny)

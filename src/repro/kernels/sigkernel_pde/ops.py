@@ -30,10 +30,12 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def choose_T(Lx: int, Ly: int, lam1: int, lam2: int) -> int:
-    """Largest power-of-two strip height whose VMEM working set fits."""
+def choose_T(Lx: int, Ly: int, lam1: int, lam2: int,
+             max_t: int = _MAX_T) -> int:
+    """Largest power-of-two strip height ≤ ``max_t`` whose VMEM working set
+    fits."""
     ny = Ly << lam2
-    T = _MAX_T
+    T = max_t
     while T > (1 << lam1):
         R = T >> lam1
         # Δ block + expanded M + skewed S_T (+ ~3x for bwd scratch)
@@ -52,10 +54,16 @@ def _pad_batched(delta: jax.Array, R: int):
     return delta, Lx + pad
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3))
-def _solve_flat(delta: jax.Array, lam1: int, lam2: int, with_cps: bool):
+def _max_t(launch) -> int:
+    """Strip-height cap from a LaunchConfig (``None`` -> module default)."""
+    return getattr(launch, "pde_strip", None) or _MAX_T
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def _solve_flat(delta: jax.Array, lam1: int, lam2: int, with_cps: bool,
+                launch=None):
     B, Lx, Ly = delta.shape
-    T = choose_T(Lx, Ly, lam1, lam2)
+    T = choose_T(Lx, Ly, lam1, lam2, max_t=_max_t(launch))
     delta, Lxp = _pad_batched(delta, T >> lam1)
     call = build_fwd(B, Lxp, Ly, T=T, lam1=lam1, lam2=lam2,
                      save_cps=with_cps, interpret=_on_cpu())
@@ -63,27 +71,29 @@ def _solve_flat(delta: jax.Array, lam1: int, lam2: int, with_cps: bool):
     return out
 
 
-def solve(delta: jax.Array, lam1: int = 0, lam2: int = 0) -> jax.Array:
+def solve(delta: jax.Array, lam1: int = 0, lam2: int = 0,
+          launch=None) -> jax.Array:
     """Final kernel values for Δ (..., Lx, Ly) -> (...,)."""
     batch_shape = delta.shape[:-2]
     flat = delta.reshape((-1,) + delta.shape[-2:]).astype(jnp.float32)
-    k = _solve_flat(flat, lam1, lam2, False)
+    k = _solve_flat(flat, lam1, lam2, False, launch)
     return k.reshape(batch_shape)
 
 
-def solve_with_grid(delta: jax.Array, lam1: int = 0, lam2: int = 0):
+def solve_with_grid(delta: jax.Array, lam1: int = 0, lam2: int = 0,
+                    launch=None):
     """Forward + residuals for the exact backward (checkpoint rows, not the
     full grid).  Returns (k, cps)."""
     batch_shape = delta.shape[:-2]
     flat = delta.reshape((-1,) + delta.shape[-2:]).astype(jnp.float32)
-    k, cps = _solve_flat(flat, lam1, lam2, True)
+    k, cps = _solve_flat(flat, lam1, lam2, True, launch)
     return k.reshape(batch_shape), cps
 
 
-@functools.partial(jax.jit, static_argnums=(3, 4))
-def _grad_flat(delta, cps, gbar, lam1, lam2):
+@functools.partial(jax.jit, static_argnums=(3, 4, 5))
+def _grad_flat(delta, cps, gbar, lam1, lam2, launch=None):
     B, Lx, Ly = delta.shape
-    T = choose_T(Lx, Ly, lam1, lam2)
+    T = choose_T(Lx, Ly, lam1, lam2, max_t=_max_t(launch))
     delta, Lxp = _pad_batched(delta, T >> lam1)
     call = build_bwd(B, Lxp, Ly, T=T, lam1=lam1, lam2=lam2,
                      interpret=_on_cpu())
@@ -92,12 +102,16 @@ def _grad_flat(delta, cps, gbar, lam1, lam2):
 
 
 def solve_grad(delta: jax.Array, cps: jax.Array, gbar: jax.Array,
-               lam1: int = 0, lam2: int = 0) -> jax.Array:
-    """Exact ∂F/∂Δ (paper Alg 4) from saved checkpoint rows."""
+               lam1: int = 0, lam2: int = 0, launch=None) -> jax.Array:
+    """Exact ∂F/∂Δ (paper Alg 4) from saved checkpoint rows.
+
+    ``launch`` must match the forward's — the checkpoint-row cadence is the
+    strip height, so backward strips must line up with the saved rows.
+    """
     batch_shape = delta.shape[:-2]
     flat = delta.reshape((-1,) + delta.shape[-2:]).astype(jnp.float32)
     g = gbar.reshape((-1,)).astype(jnp.float32)
-    dd = _grad_flat(flat, cps, g, lam1, lam2)
+    dd = _grad_flat(flat, cps, g, lam1, lam2, launch)
     return dd.reshape(batch_shape + dd.shape[-2:]).astype(delta.dtype)
 
 
@@ -110,13 +124,13 @@ def solve_grad(delta: jax.Array, cps: jax.Array, gbar: jax.Array,
 # recomputes strip interiors from the forward's checkpoint rows.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
 def _solve_fused_impl(dx: jax.Array, dy: jax.Array, lam1: int,
-                      lam2: int) -> jax.Array:
+                      lam2: int, launch=None) -> jax.Array:
     from .kernel import build_fwd_fused
     B, Lx, d = dx.shape
     Ly = dy.shape[1]
-    T = choose_T(Lx, Ly, lam1, lam2)
+    T = choose_T(Lx, Ly, lam1, lam2, max_t=_max_t(launch))
     R = T >> lam1
     pad = (-Lx) % R
     if pad:  # zero increments -> zero Δ rows -> exact no-ops
@@ -126,15 +140,15 @@ def _solve_fused_impl(dx: jax.Array, dy: jax.Array, lam1: int,
     return call(dx.astype(jnp.float32), dy.astype(jnp.float32))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def solve_fused(dx: jax.Array, dy: jax.Array, lam1: int = 0,
-                lam2: int = 0) -> jax.Array:
+                lam2: int = 0, launch=None) -> jax.Array:
     """k̂ final values from increments directly. dx: (B, Lx, d), dy: (B, Ly, d)."""
-    return _solve_fused_impl(dx, dy, lam1, lam2)
+    return _solve_fused_impl(dx, dy, lam1, lam2, launch)
 
 
-def _solve_fused_fwd(dx, dy, lam1, lam2):
-    return _solve_fused_impl(dx, dy, lam1, lam2), (dx, dy)
+def _solve_fused_fwd(dx, dy, lam1, lam2, launch):
+    return _solve_fused_impl(dx, dy, lam1, lam2, launch), (dx, dy)
 
 
 def _delta_pullback(dd, dx, dy):
@@ -144,25 +158,25 @@ def _delta_pullback(dd, dx, dy):
     return ddx.astype(dx.dtype), ddy.astype(dy.dtype)
 
 
-def _solve_fused_bwd(lam1, lam2, res, gbar):
+def _solve_fused_bwd(lam1, lam2, launch, res, gbar):
     dx, dy = res
     delta = jnp.einsum("bid,bjd->bij", dx.astype(jnp.float32),
                        dy.astype(jnp.float32))
-    _, cps = solve_with_grid(delta, lam1, lam2)
-    dd = solve_grad(delta, cps, gbar, lam1, lam2)
+    _, cps = solve_with_grid(delta, lam1, lam2, launch)
+    dd = solve_grad(delta, cps, gbar, lam1, lam2, launch)
     return _delta_pullback(dd, dx, dy)
 
 
 solve_fused.defvjp(_solve_fused_fwd, _solve_fused_bwd)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
 def _gram_fused_impl(dX: jax.Array, dY: jax.Array, lam1: int,
-                     lam2: int) -> jax.Array:
+                     lam2: int, launch=None) -> jax.Array:
     from .kernel import build_gram_fused
     Bx, Lx, d = dX.shape
     By, Ly = dY.shape[0], dY.shape[1]
-    T = choose_T(Lx, Ly, lam1, lam2)
+    T = choose_T(Lx, Ly, lam1, lam2, max_t=_max_t(launch))
     R = T >> lam1
     pad = (-Lx) % R
     if pad:
@@ -172,26 +186,26 @@ def _gram_fused_impl(dX: jax.Array, dY: jax.Array, lam1: int,
     return call(dX.astype(jnp.float32), dY.astype(jnp.float32))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def gram_fused(dX: jax.Array, dY: jax.Array, lam1: int = 0,
-               lam2: int = 0) -> jax.Array:
+               lam2: int = 0, launch=None) -> jax.Array:
     """Full Gram from increments. dX: (Bx, Lx, d), dY: (By, Ly, d) -> (Bx, By)."""
-    return _gram_fused_impl(dX, dY, lam1, lam2)
+    return _gram_fused_impl(dX, dY, lam1, lam2, launch)
 
 
-def _gram_fused_fwd(dX, dY, lam1, lam2):
-    return _gram_fused_impl(dX, dY, lam1, lam2), (dX, dY)
+def _gram_fused_fwd(dX, dY, lam1, lam2, launch):
+    return _gram_fused_impl(dX, dY, lam1, lam2, launch), (dX, dY)
 
 
-def _gram_fused_bwd(lam1, lam2, res, gbar):
+def _gram_fused_bwd(lam1, lam2, launch, res, gbar):
     # The reverse sweep materialises the Bx·By pairwise Δ block — bound it by
     # row-blocking the Gram (repro.core.gram), which confines this to one
     # block at a time.
     dX, dY = res
     delta = jnp.einsum("aid,bjd->abij", dX.astype(jnp.float32),
                        dY.astype(jnp.float32))
-    _, cps = solve_with_grid(delta, lam1, lam2)
-    dd = solve_grad(delta, cps, gbar, lam1, lam2)
+    _, cps = solve_with_grid(delta, lam1, lam2, launch)
+    dd = solve_grad(delta, cps, gbar, lam1, lam2, launch)
     ddX = jnp.einsum("abij,bjd->aid", dd, dY.astype(dd.dtype))
     ddY = jnp.einsum("abij,aid->bjd", dd, dX.astype(dd.dtype))
     return ddX.astype(dX.dtype), ddY.astype(dY.dtype)

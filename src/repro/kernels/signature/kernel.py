@@ -84,7 +84,12 @@ def horner_kernel(z_ref, out_ref, a_ref, *, d: int, depth: int, LB: int,
 def build_horner(n_tiles: int, Lp: int, d: int, depth: int, *, BT: int,
                  LB: int, interpret: bool):
     """pallas_call for increments laid out as (n_tiles, Lp, d, BT), Lp % LB == 0."""
-    assert Lp % LB == 0
+    if Lp % LB != 0:
+        raise ValueError(
+            f"Horner kernel needs the padded length Lp={Lp} to be a "
+            f"multiple of the length block LB={LB} — pick a "
+            f"LaunchConfig.sig_lb that divides the padded length (the "
+            f"ops.py wrapper pads to the block automatically)")
     n_lb = Lp // LB
     sd = sig_dim(d, depth)
     kern = functools.partial(

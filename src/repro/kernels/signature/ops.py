@@ -29,10 +29,11 @@ def default_use_pallas() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def choose_BT(d: int, depth: int, LB: int) -> int:
+def choose_BT(d: int, depth: int, LB: int, max_bt: int = _MAX_BT) -> int:
+    """Largest batch tile ≤ ``max_bt`` whose working set fits the VMEM budget."""
     sd = sig_dim(d, depth)
     bmax = d ** max(depth - 1, 1)
-    BT = _MAX_BT
+    BT = max_bt
     while BT > 8:
         if 4 * BT * (2 * sd + 2 * bmax + LB * d) <= _VMEM_BUDGET:
             break
@@ -40,11 +41,13 @@ def choose_BT(d: int, depth: int, LB: int) -> int:
     return BT
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _horner_flat(z: jax.Array, depth: int) -> jax.Array:
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _horner_flat(z: jax.Array, depth: int, launch=None) -> jax.Array:
+    from repro.core.config import resolve_launch
+    launch = resolve_launch(launch)
     B, Lm1, d = z.shape
-    LB = min(_LB, max(Lm1, 1))
-    BT = choose_BT(d, depth, LB)
+    LB = min(launch.sig_lb or _LB, max(Lm1, 1))
+    BT = choose_BT(d, depth, LB, max_bt=launch.sig_bt or _MAX_BT)
     Bp = -(-B // BT) * BT
     Lp = -(-Lm1 // LB) * LB
     zp = jnp.pad(z.astype(jnp.float32), ((0, Bp - B), (0, Lp - Lm1), (0, 0)))
@@ -56,21 +59,31 @@ def _horner_flat(z: jax.Array, depth: int) -> jax.Array:
     return out.transpose(0, 2, 1).reshape(Bp, sd)[:B]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
-def signature_from_increments(z: jax.Array, depth: int) -> jax.Array:
-    """Truncated signature of increment streams z (..., L-1, d) via Pallas."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def signature_from_increments(z: jax.Array, depth: int,
+                              launch=None) -> jax.Array:
+    """Truncated signature of increment streams z (..., L-1, d) via Pallas.
+
+    ``launch`` is an optional :class:`repro.core.config.LaunchConfig` whose
+    ``sig_bt`` / ``sig_lb`` knobs set the batch-tile and length-block shapes
+    (``None`` fields keep the module defaults).  The tile geometry never
+    changes the per-path arithmetic — results are bitwise-identical across
+    launch configs.
+    """
     batch_shape = z.shape[:-2]
     flat = z.reshape((-1,) + z.shape[-2:])
-    sig = _horner_flat(flat, depth)
+    sig = _horner_flat(flat, depth, launch)
     return sig.reshape(batch_shape + sig.shape[-1:]).astype(z.dtype)
 
 
-def _fwd(z, depth):
-    sig = signature_from_increments(z, depth)
+def _fwd(z, depth, launch):
+    sig = signature_from_increments(z, depth, launch)
     return sig, (z, sig)
 
 
-def _bwd(depth, res, g):
+def _bwd(depth, launch, res, g):
+    # The exact §2.4 time-reversed backward is pure JAX — tile-shape free,
+    # so every LaunchConfig shares the one validated implementation.
     from repro.core.signature import _signature_core_bwd
     z, sig = res
     return _signature_core_bwd(depth, (z, sig.astype(jnp.float32)),
@@ -81,7 +94,8 @@ signature_from_increments.defvjp(_fwd, _bwd)
 
 
 def logsignature_from_increments(z: jax.Array, depth: int,
-                                 mode: str = "lyndon") -> jax.Array:
+                                 mode: str = "lyndon",
+                                 launch=None) -> jax.Array:
     """Fused increments -> log-signature via the Pallas Horner kernel.
 
     The Horner recursion (the O(L) hot loop) runs through the same
@@ -97,5 +111,5 @@ def logsignature_from_increments(z: jax.Array, depth: int,
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     d = z.shape[-1]
-    sig = signature_from_increments(z, depth)
+    sig = signature_from_increments(z, depth, launch)
     return _project(tensor_log(sig, d, depth), d, depth, mode)

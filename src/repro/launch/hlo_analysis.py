@@ -13,7 +13,12 @@ Heuristics (documented in EXPERIMENTS.md §Roofline):
     all-gather        R·(n-1)/n     reduce-scatter  R·(n-1)
     all-reduce        2·R·(n-1)/n   all-to-all      R·(n-1)/n
     collective-permute R
-* dot FLOPs = 2 · |result| · |contracting dims of lhs|.
+* dot FLOPs = 2 · |result| · |contracting dims of lhs|;
+* elementwise arithmetic FLOPs (``arith_flops``) = |result| per elementwise
+  op (transcendentals counted once, like XLA's cost model) — the dominant
+  term for the scan-heavy Goursat PDE kernels, whose wavefront updates are
+  VPU adds/multiplies with almost no dots.  Both counts aggregate through
+  while-loop trip counts identically.
 """
 
 from __future__ import annotations
@@ -29,6 +34,21 @@ _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
+
+#: elementwise HLO opcodes counted as one arithmetic FLOP per result
+#: element (matching XLA's cost model: transcendentals are 1, fused
+#: multiply-adds appear as separate multiply + add instructions)
+ELEMENTWISE_OPS = frozenset((
+    "add", "subtract", "multiply", "divide", "power", "negate", "abs",
+    "maximum", "minimum", "exponential", "exponential-minus-one", "log",
+    "log-plus-one", "sqrt", "rsqrt", "cbrt", "tanh", "sine", "cosine",
+    "atan2", "logistic", "remainder", "round-nearest-afz",
+    "round-nearest-even", "floor", "ceil", "sign", "erf", "expm1", "log1p",
+))
+
+#: opcode position: "<shape> <opcode>(" right after the result shape
+_OPCODE_RE = re.compile(
+    r"^\(?[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?\s+([a-z][\w\-]*)\(")
 
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.*)$")
 _SHAPE_RE = re.compile(r"^\(?([a-z0-9]+)\[([0-9,]*)\]")
@@ -88,23 +108,32 @@ def _group_size(line: str, default: int = 1) -> int:
 
 class HloStats:
     def __init__(self):
-        self.flops = 0.0
+        self.flops = 0.0          # dot (MXU) flops
+        self.arith_flops = 0.0    # elementwise (VPU) flops
         self.collective: Dict[str, Dict[str, float]] = {
             c: {"count": 0.0, "out_bytes": 0.0, "traffic": 0.0}
             for c in COLLECTIVES}
 
     def add(self, other: "HloStats", mult: float = 1.0):
         self.flops += other.flops * mult
+        self.arith_flops += other.arith_flops * mult
         for c in COLLECTIVES:
             for k in self.collective[c]:
                 self.collective[c][k] += other.collective[c][k] * mult
+
+    @property
+    def total_flops(self) -> float:
+        """Dot + elementwise FLOPs — what a roofline compute term wants."""
+        return self.flops + self.arith_flops
 
     @property
     def total_traffic(self) -> float:
         return sum(c["traffic"] for c in self.collective.values())
 
     def to_dict(self):
-        return {"flops": self.flops, "collectives": self.collective,
+        return {"flops": self.flops, "arith_flops": self.arith_flops,
+                "total_flops": self.total_flops,
+                "collectives": self.collective,
                 "total_traffic": self.total_traffic}
 
 
@@ -180,16 +209,27 @@ def analyze(hlo: str) -> HloStats:
                     st.collective[c]["out_bytes"] += float(nbytes)
                     st.collective[c]["traffic"] += float(tr)
                     break
+            # elementwise arithmetic flops (one per result element)
+            om = _OPCODE_RE.match(rhs)
+            if om and om.group(1) in ELEMENTWISE_OPS and sh is not None:
+                st.arith_flops += float(math.prod(sh[1]) if sh[1] else 1)
+                continue
             # dot flops
             if re.search(r"\sdot\(", rhs) and sh is not None:
                 dtype, dims = sh
                 res = math.prod(dims) if dims else 1
                 ld = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
-                ops = re.search(r"dot\((%?[\w.\-]+),?\s*(%?[\w.\-]+)?", rhs)
                 k = 1
-                if ld and ops:
-                    lhs = ops.group(1).lstrip("%")
-                    lsh = tbl.get(lhs)
+                if ld:
+                    inner = rhs.split("dot(", 1)[1]
+                    # lhs operand either carries an inline shape prefix
+                    # ("f32[256,256]{1,0} %name") or is a bare name whose
+                    # shape the definition table knows
+                    lsh = _parse_shape(inner)
+                    if lsh is None:
+                        opm = re.match(r"\s*(%?[\w.\-]+)", inner)
+                        lsh = tbl.get(opm.group(1).lstrip("%")) if opm \
+                            else None
                     if lsh:
                         for d in ld.group(1).split(","):
                             if d:

@@ -163,3 +163,107 @@ def test_ragged_cache_key_is_separate(cache):
     # the ragged measurement populated only the ragged key
     assert autotune.lookup("sigkernel", SHAPE, ragged=True) == winner
     assert autotune.lookup("sigkernel", SHAPE) is None
+
+
+# ---------------------------------------------------------------------------
+# launch-parameter sweep (cache schema v2)
+# ---------------------------------------------------------------------------
+
+def test_schema1_cache_fails_open_to_cold(cache):
+    """Pre-launch-sweep (schema 1) caches are ignored entirely — the entry
+    layout changed, so re-tuning is the only safe recovery."""
+    key = autotune.cache_key("sigkernel", SHAPE)
+    cache.write_text(json.dumps({"schema": 1,
+                                 "entries": {key: {"backend": "antidiag"}}}),
+                     encoding="utf-8")
+    autotune.invalidate_memo()
+    assert autotune.lookup("sigkernel", SHAPE) is None
+    assert autotune.lookup_launch("sigkernel", SHAPE) is None
+
+
+def test_launch_candidates_bounded_and_default_first():
+    from repro.core.config import LaunchConfig
+    for op in ("signature", "logsignature", "sigkernel", "gram"):
+        for backend in autotune.candidates(op):
+            cands = autotune.launch_candidates(op, backend)
+            assert cands[0] == LaunchConfig()  # defaults always compete
+            assert len(cands) <= 8  # the sweep stays bounded
+            assert len(set(cands)) == len(cands)
+
+
+def test_tune_stores_launch_and_machine_stamp(cache):
+    autotune.tune("sigkernel", SHAPE, repeats=1)
+    entry = autotune.cache_entry("sigkernel", SHAPE)
+    assert isinstance(entry["launch"], dict)
+    assert entry["machine"] == timer.machine_key()
+    assert isinstance(entry["launch_timings"], dict)
+    # the winning launch round-trips through lookup_launch (None == the
+    # defaults won, also a valid outcome of a real sweep)
+    from repro.core.config import LaunchConfig
+    got = autotune.lookup_launch("sigkernel", SHAPE)
+    assert got is None or isinstance(got, LaunchConfig)
+
+
+def _write_entry(cache, key, entry):
+    cache.write_text(json.dumps({"schema": autotune.SCHEMA,
+                                 "entries": {key: entry}}), encoding="utf-8")
+    autotune.invalidate_memo()
+
+
+def test_lookup_launch_machine_scoping(cache):
+    from repro.core.config import LaunchConfig
+    key = autotune.cache_key("sigkernel", SHAPE)
+    base = {"backend": "antidiag", "timings": {"antidiag": 1e-3}}
+
+    # same machine: the tuned launch applies
+    _write_entry(cache, key, {**base, "launch": {"band_chunk": 8},
+                              "machine": timer.machine_key()})
+    assert autotune.lookup_launch("sigkernel", SHAPE) == \
+        LaunchConfig(band_chunk=8)
+    # ... and flows through dispatch.resolve_launch when none is explicit
+    assert dispatch.resolve_launch(None, op="sigkernel", shape=SHAPE,
+                                   dtype="float32") == \
+        LaunchConfig(band_chunk=8)
+    # an explicit launch= always beats the cache
+    assert dispatch.resolve_launch(LaunchConfig(band_chunk=2),
+                                   op="sigkernel", shape=SHAPE) == \
+        LaunchConfig(band_chunk=2)
+
+    # different machine: tile winners do not travel — fail open to defaults
+    _write_entry(cache, key, {**base, "launch": {"band_chunk": 8},
+                              "machine": "tpu|v5e|17179869184"})
+    assert autotune.lookup_launch("sigkernel", SHAPE) is None
+    assert dispatch.resolve_launch(None, op="sigkernel", shape=SHAPE) == \
+        LaunchConfig()
+    # the backend winner itself still applies (it is portable enough,
+    # and compare.py normalises machine speed)
+    assert autotune.lookup("sigkernel", SHAPE) == "antidiag"
+
+
+def test_lookup_launch_rejects_invalid_payloads(cache):
+    key = autotune.cache_key("sigkernel", SHAPE)
+    base = {"backend": "antidiag", "machine": timer.machine_key()}
+    # pre-sweep entry: no launch field at all
+    _write_entry(cache, key, base)
+    assert autotune.lookup_launch("sigkernel", SHAPE) is None
+    # all-default / empty launch dict
+    _write_entry(cache, key, {**base, "launch": {}})
+    assert autotune.lookup_launch("sigkernel", SHAPE) is None
+    # a knob that fails LaunchConfig validation (24 is not a power of two)
+    _write_entry(cache, key, {**base, "launch": {"pde_strip": 24}})
+    assert autotune.lookup_launch("sigkernel", SHAPE) is None
+    # unknown keys are dropped by from_dict, leaving the defaults
+    _write_entry(cache, key, {**base, "launch": {"warp_count": 4}})
+    assert autotune.lookup_launch("sigkernel", SHAPE) is None
+
+
+def test_lookup_launch_disabled_env(cache, monkeypatch):
+    from repro.core.config import LaunchConfig
+    key = autotune.cache_key("sigkernel", SHAPE)
+    _write_entry(cache, key, {"backend": "antidiag",
+                              "launch": {"band_chunk": 8},
+                              "machine": timer.machine_key()})
+    monkeypatch.setenv(autotune.ENV_DISABLE, "1")
+    assert autotune.lookup_launch("sigkernel", SHAPE) is None
+    assert dispatch.resolve_launch(None, op="sigkernel", shape=SHAPE) == \
+        LaunchConfig()

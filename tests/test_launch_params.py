@@ -1,0 +1,269 @@
+"""Launch parameters are schedule-only: bitwise-identical values AND
+gradients under non-default :class:`repro.LaunchConfig` knobs vs. the
+library defaults, on every backend that consumes them — including ragged
+(``lengths=``) batches and the symmetric Gram fast path.
+
+Shape discipline for the Pallas PDE strips: trailing zero-padding of a
+partial strip is NOT ulp-stable (fl((left+up)−upleft) drifts on padded
+rows), so the bitwise contract is stated — and tested — for strip heights
+that divide the unrefined row count Lx.  The ``ops.py`` wrappers enforce
+exactly that by padding to the strip, hence L = 129 (Lx = 128) with
+strips 16/32/64 below.  Everything else (signature tiles, band chunking,
+Gram row blocking, ragged end-aligned padding) is bitwise unconditionally.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import LaunchConfig
+from repro.bench import autotune
+from repro.core.gram import sigkernel_gram, sigkernel_gram_reduce
+from repro.core.logsignature import logsignature
+from repro.core.signature import signature
+from repro.core.sigkernel import sigkernel
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(autouse=True)
+def _cold_autotune_cache(tmp_path, monkeypatch):
+    # default-launch baselines must resolve to the library defaults, not to
+    # whatever a developer machine's warm autotune cache last persisted
+    monkeypatch.setenv(autotune.ENV_CACHE, str(tmp_path / "autotune.json"))
+    autotune.invalidate_memo()
+    yield
+    autotune.invalidate_memo()
+
+
+def _bits(a) -> bytes:
+    return np.asarray(a).tobytes()
+
+
+def _paths(seed: int, B: int, L: int, d: int, scale: float = 0.1):
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, L, d)) * scale
+
+
+# ---------------------------------------------------------------------------
+# config object validation
+# ---------------------------------------------------------------------------
+
+def test_launch_config_validation():
+    assert LaunchConfig().is_default
+    assert not LaunchConfig(band_chunk=4).is_default
+    with pytest.raises(ValueError, match="power of two"):
+        LaunchConfig(pde_strip=24)
+    with pytest.raises(ValueError, match="positive Python int"):
+        LaunchConfig(gram_row_block=0)
+    rt = LaunchConfig.from_dict(LaunchConfig(pde_strip=32,
+                                             band_chunk=3).to_dict())
+    assert rt == LaunchConfig(pde_strip=32, band_chunk=3)
+
+
+def test_launch_config_is_static_and_hashable():
+    cfgs = {LaunchConfig(), LaunchConfig(sig_bt=64)}
+    assert len(cfgs) == 2
+    leaves, _ = jax.tree_util.tree_flatten(LaunchConfig(pde_strip=32))
+    assert leaves == []  # all-meta pytree: jit-stable, no tracers
+
+
+# ---------------------------------------------------------------------------
+# signature / logsignature: Pallas Horner BT/LB tiles
+# ---------------------------------------------------------------------------
+
+_SIG_LAUNCHES = [LaunchConfig(sig_bt=2), LaunchConfig(sig_lb=8),
+                 LaunchConfig(sig_bt=2, sig_lb=8)]
+
+
+@pytest.mark.parametrize("launch", _SIG_LAUNCHES)
+def test_signature_tiles_bitwise(launch):
+    p = _paths(0, 5, 33, 3, 0.2)  # B=5 > sig_bt, L-1=32 > sig_lb: real tiling
+    want = signature(p, 4, backend="pallas")
+    got = signature(p, 4, backend="pallas", launch=launch)
+    assert _bits(got) == _bits(want)
+
+    g_want = jax.grad(lambda q: signature(q, 4, backend="pallas").sum())(p)
+    g_got = jax.grad(lambda q: signature(
+        q, 4, backend="pallas", launch=launch).sum())(p)
+    assert _bits(g_got) == _bits(g_want)
+
+
+def test_signature_ragged_tiles_bitwise():
+    p = _paths(1, 5, 33, 3, 0.2)
+    lens = jnp.array([33, 9, 17, 33, 5])
+    launch = LaunchConfig(sig_bt=2, sig_lb=8)
+    want = signature(p, 3, backend="pallas", lengths=lens)
+    got = signature(p, 3, backend="pallas", lengths=lens, launch=launch)
+    assert _bits(got) == _bits(want)
+    g_want = jax.grad(lambda q: signature(
+        q, 3, backend="pallas", lengths=lens).sum())(p)
+    g_got = jax.grad(lambda q: signature(
+        q, 3, backend="pallas", lengths=lens, launch=launch).sum())(p)
+    assert _bits(g_got) == _bits(g_want)
+
+
+def test_logsignature_tiles_bitwise():
+    p = _paths(2, 5, 33, 3, 0.2)
+    launch = LaunchConfig(sig_bt=2, sig_lb=8)
+    for mode in ("lyndon", "expand"):
+        want = logsignature(p, 3, mode=mode, backend="pallas")
+        got = logsignature(p, 3, mode=mode, backend="pallas", launch=launch)
+        assert _bits(got) == _bits(want), mode
+    g_want = jax.grad(lambda q: logsignature(
+        q, 3, backend="pallas").sum())(p)
+    g_got = jax.grad(lambda q: logsignature(
+        q, 3, backend="pallas", launch=launch).sum())(p)
+    assert _bits(g_got) == _bits(g_want)
+
+
+def test_reference_backend_ignores_launch_bitwise():
+    p = _paths(3, 4, 20, 3, 0.2)
+    want = signature(p, 4, backend="reference")
+    got = signature(p, 4, backend="reference",
+                    launch=LaunchConfig(sig_bt=2, sig_lb=8, band_chunk=2))
+    assert _bits(got) == _bits(want)
+
+
+# ---------------------------------------------------------------------------
+# sigkernel: Pallas PDE strip heights + antidiag band chunking
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strip", [16, 32, 64])
+def test_sigkernel_pallas_strip_bitwise(strip):
+    x = _paths(4, 2, 129, 3)  # Lx = 128: every tested strip divides it
+    y = _paths(5, 2, 129, 3)
+    want = sigkernel(x, y, backend="pallas")
+    got = sigkernel(x, y, backend="pallas",
+                    launch=LaunchConfig(pde_strip=strip))
+    assert _bits(got) == _bits(want)
+
+
+def test_sigkernel_pallas_strip_grad_bitwise():
+    x = _paths(4, 2, 129, 3)
+    y = _paths(5, 2, 129, 3)
+    g_want = jax.grad(lambda a, b: sigkernel(
+        a, b, backend="pallas").sum(), argnums=(0, 1))(x, y)
+    g_got = jax.grad(lambda a, b: sigkernel(
+        a, b, backend="pallas", launch=LaunchConfig(pde_strip=32)).sum(),
+        argnums=(0, 1))(x, y)
+    for gw, gg in zip(g_want, g_got):
+        assert _bits(gg) == _bits(gw)
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 8])
+def test_sigkernel_antidiag_band_chunk_bitwise(chunk):
+    x = _paths(6, 5, 20, 3)
+    y = _paths(7, 5, 20, 3)
+    launch = LaunchConfig(band_chunk=chunk)
+    want = sigkernel(x, y, backend="antidiag")
+    got = sigkernel(x, y, backend="antidiag", launch=launch)
+    assert _bits(got) == _bits(want)
+    g_want = jax.grad(lambda a: sigkernel(a, y, backend="antidiag").sum())(x)
+    g_got = jax.grad(lambda a: sigkernel(
+        a, y, backend="antidiag", launch=launch).sum())(x)
+    assert _bits(g_got) == _bits(g_want)
+
+
+# ---------------------------------------------------------------------------
+# Gram engine: row blocking, symmetric fast path, ragged batches
+# ---------------------------------------------------------------------------
+
+def test_gram_row_block_bitwise():
+    X = _paths(8, 5, 16, 3)
+    Y = _paths(9, 4, 16, 3)
+    want = sigkernel_gram(X, Y, backend="antidiag", symmetric=False)
+    for rb in (1, 2, 3):
+        got = sigkernel_gram(X, Y, backend="antidiag", symmetric=False,
+                             launch=LaunchConfig(gram_row_block=rb))
+        assert _bits(got) == _bits(want), rb
+    g_want = jax.grad(lambda a: sigkernel_gram(
+        a, Y, backend="antidiag", symmetric=False).sum())(X)
+    g_got = jax.grad(lambda a: sigkernel_gram(
+        a, Y, backend="antidiag", symmetric=False,
+        launch=LaunchConfig(gram_row_block=2, band_chunk=4)).sum())(X)
+    assert _bits(g_got) == _bits(g_want)
+
+
+def test_gram_symmetric_fast_path_launch_bitwise():
+    X = _paths(10, 5, 16, 3)
+    launch = LaunchConfig(gram_row_block=2, band_chunk=4)
+    want = sigkernel_gram(X, backend="antidiag")
+    got = sigkernel_gram(X, backend="antidiag", launch=launch)
+    assert _bits(got) == _bits(want)
+    # the symmetric backward scatter-adds pair cotangents, and row blocking
+    # reorders that accumulation — a pre-existing ulp-level property of the
+    # row_block= kwarg.  The launch knob's contract is therefore: bitwise
+    # equal to the SAME explicit row_block, and allclose to the dense default.
+    g_kwarg = jax.grad(lambda a: sigkernel_gram(
+        a, backend="antidiag", row_block=2,
+        launch=LaunchConfig(band_chunk=4)).sum())(X)
+    g_launch = jax.grad(lambda a: sigkernel_gram(
+        a, backend="antidiag", launch=launch).sum())(X)
+    assert _bits(g_launch) == _bits(g_kwarg)
+    g_dense = jax.grad(lambda a: sigkernel_gram(
+        a, backend="antidiag").sum())(X)
+    np.testing.assert_allclose(np.asarray(g_launch), np.asarray(g_dense),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_gram_ragged_launch_bitwise():
+    from repro.core.config import TransformPipeline
+    cfg = TransformPipeline(time_aug=True)
+    X = _paths(11, 4, 16, 3)
+    Y = _paths(12, 4, 16, 3)
+    lx = jnp.array([16, 9, 12, 5])
+    ly = jnp.array([7, 16, 10, 16])
+    launch = LaunchConfig(gram_row_block=2, band_chunk=2)
+    want = sigkernel_gram(X, Y, transforms=cfg, symmetric=False,
+                          lengths=lx, lengths_y=ly)
+    got = sigkernel_gram(X, Y, transforms=cfg, symmetric=False,
+                         lengths=lx, lengths_y=ly, launch=launch)
+    assert _bits(got) == _bits(want)
+    g_want = jax.grad(lambda a: sigkernel_gram(
+        a, Y, transforms=cfg, symmetric=False,
+        lengths=lx, lengths_y=ly).sum())(X)
+    g_got = jax.grad(lambda a: sigkernel_gram(
+        a, Y, transforms=cfg, symmetric=False,
+        lengths=lx, lengths_y=ly, launch=launch).sum())(X)
+    assert _bits(g_got) == _bits(g_want)
+
+
+def test_gram_pallas_ragged_strip_plumbing_bitwise():
+    # ragged batches end-align (leading padding), which IS ulp-stable;
+    # an explicit full-height strip must reproduce the default schedule
+    x = _paths(13, 2, 65, 3)  # Lx = 64
+    y = _paths(14, 2, 65, 3)
+    lx = jnp.array([65, 40])
+    ly = jnp.array([50, 65])
+    want = sigkernel_gram(x, y, backend="pallas", symmetric=False,
+                          lengths=lx, lengths_y=ly)
+    got = sigkernel_gram(x, y, backend="pallas", symmetric=False,
+                         lengths=lx, lengths_y=ly,
+                         launch=LaunchConfig(pde_strip=128))
+    assert _bits(got) == _bits(want)
+
+
+def test_gram_reduce_launch_bitwise():
+    X = _paths(15, 5, 16, 3)
+    Y = _paths(16, 4, 16, 3)
+    launch = LaunchConfig(band_chunk=4)
+    want = sigkernel_gram_reduce(X, Y, row_block=2)
+    got = sigkernel_gram_reduce(X, Y, row_block=2, launch=launch)
+    assert _bits(got) == _bits(want)
+    g_want = jax.grad(lambda a: sigkernel_gram_reduce(X, a, row_block=2))(Y)
+    g_got = jax.grad(lambda a: sigkernel_gram_reduce(
+        X, a, row_block=2, launch=launch))(Y)
+    assert _bits(g_got) == _bits(g_want)
+
+
+# ---------------------------------------------------------------------------
+# guard rails: shape errors name the knob instead of bare-asserting
+# ---------------------------------------------------------------------------
+
+def test_strip_geometry_error_names_launch_knob():
+    from repro.kernels.sigkernel_pde.kernel import check_strip
+    with pytest.raises(ValueError, match="LaunchConfig.pde_strip"):
+        check_strip(2, 2, 16)  # T=2 < 2**lam1
+    with pytest.raises(ValueError, match="LaunchConfig.pde_strip"):
+        check_strip(12, 2, 16)  # T not a pow2-multiple of 2**lam1
