@@ -4,9 +4,10 @@ The blessed public surface (API v1, see docs/api/public.md):
 
 * **Config objects** — :class:`TransformPipeline`, :class:`GridConfig`,
   :class:`LaunchConfig` (kernel launch parameters: tile/strip/block sizes;
-  bitwise-neutral), and the static-kernel lifts :class:`Linear` /
-  :class:`RBF` (:class:`StaticKernel` base).  All frozen pytree
-  dataclasses.
+  bitwise-neutral), :class:`FeatureConfig` (approximate sig-kernel feature
+  maps: ``rff`` / ``nystroem``), and the static-kernel lifts
+  :class:`Linear` / :class:`RBF` (:class:`StaticKernel` base).  All frozen
+  pytree dataclasses.
 * **Class entry points** — :class:`Signature`, :class:`LogSignature`,
   :class:`SigKernel` close over a config and are jit/vmap-friendly.
 * **Functional API** — :func:`signature`, :func:`logsignature`,
@@ -18,6 +19,7 @@ The blessed public surface (API v1, see docs/api/public.md):
 from .api import LogSignature, SigKernel, Signature
 from .core.config import (GridConfig, LaunchConfig, Linear, RBF,
                           StaticKernel, TransformPipeline)
+from .core.features import FeatureConfig
 from .core.gram import (sigkernel_gram, sigkernel_gram_reduce,
                         sigkernel_gram_sharded)
 from .core.logsignature import logsignature
@@ -31,7 +33,7 @@ __version__ = "0.2.0"
 
 __all__ = [
     # config objects
-    "TransformPipeline", "GridConfig", "LaunchConfig",
+    "TransformPipeline", "GridConfig", "LaunchConfig", "FeatureConfig",
     "StaticKernel", "Linear", "RBF",
     # class entry points
     "Signature", "LogSignature", "SigKernel",

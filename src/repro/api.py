@@ -26,8 +26,9 @@ from typing import Optional
 
 import jax
 
-from .core.config import (GridConfig, Linear, RBF, StaticKernel,
+from .core.config import (GridConfig, Linear, StaticKernel,
                           TransformPipeline, _pytree_dataclass as _pytree)
+from .core.features import FeatureConfig
 from .core import gram as _gram
 from .core import losses as _losses
 from .core.logsignature import logsignature as _logsignature
@@ -88,16 +89,28 @@ class SigKernel:
 
     Differentiable end-to-end: the Goursat solve uses the exact one-pass
     §3.4 backward, the static-kernel Gram its (exact) autodiff.
+
+    ``features=`` (a :class:`repro.FeatureConfig`) switches ``gram`` /
+    ``mmd2`` / ``scoring_rule`` onto the approximate feature-map backends
+    (``"rff"`` / ``"nystroem"``); ``error_budget=`` instead lets
+    ``backend="auto"`` pick one when the autotune frontier proves it fits
+    the budget.  ``__call__`` (single pair) always uses the exact solve.
     """
 
     static_kernel: StaticKernel = Linear()
     transforms: TransformPipeline = TransformPipeline()
     grid: GridConfig = GridConfig()
     backend: str = "auto"
+    features: Optional[FeatureConfig] = None
+    error_budget: Optional[float] = None
 
     def _kw(self):
         return dict(transforms=self.transforms, grid=self.grid,
                     static_kernel=self.static_kernel, backend=self.backend)
+
+    def _gram_kw(self):
+        return dict(self._kw(), features=self.features,
+                    error_budget=self.error_budget)
 
     def __call__(self, x: jax.Array, y: jax.Array, *,
                  lengths_x=None, lengths_y=None) -> jax.Array:
@@ -110,7 +123,7 @@ class SigKernel:
              lengths=None, lengths_y=None) -> jax.Array:
         return _gram.sigkernel_gram(X, Y, row_block=row_block,
                                     symmetric=symmetric, lengths=lengths,
-                                    lengths_y=lengths_y, **self._kw())
+                                    lengths_y=lengths_y, **self._gram_kw())
 
     def mmd2(self, X: jax.Array, Y: jax.Array, *, unbiased: bool = True,
              row_block: Optional[int] = None,
@@ -119,7 +132,7 @@ class SigKernel:
         return _losses.mmd2(X, Y, unbiased=unbiased, row_block=row_block,
                             streaming=streaming,
                             lengths=lengths, lengths_y=lengths_y,
-                            **self._kw())
+                            **self._gram_kw())
 
     def scoring_rule(self, X: jax.Array, y: jax.Array, *,
                      row_block: Optional[int] = None,
@@ -128,12 +141,12 @@ class SigKernel:
         return _losses.scoring_rule(X, y, row_block=row_block,
                                     streaming=streaming,
                                     lengths=lengths, length_y=length_y,
-                                    **self._kw())
+                                    **self._gram_kw())
 
 
 _pytree(Signature, data_fields=("transforms",),
         meta_fields=("depth", "backend", "stream"))
 _pytree(LogSignature, data_fields=("transforms",),
         meta_fields=("depth", "mode", "backend", "stream"))
-_pytree(SigKernel, data_fields=("static_kernel", "transforms"),
-        meta_fields=("grid", "backend"))
+_pytree(SigKernel, data_fields=("static_kernel", "transforms", "features"),
+        meta_fields=("grid", "backend", "error_budget"))

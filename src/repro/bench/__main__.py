@@ -1,7 +1,8 @@
 """Benchmark suite CLI.
 
-    PYTHONPATH=src python -m repro.bench [--smoke | --full] [--repeats N]
-                                         [--out BENCH_PR7.json] [--md PATH]
+    PYTHONPATH=src python -m repro.bench [--smoke | --quick | --full]
+                                         [--repeats N] [--out BENCH_PR8.json]
+                                         [--md PATH]
 
 Runs the paper-aligned workloads (signature Table 1, sig-kernel + Gram
 Table 2, log-signature Table 3, §3.4 gradient accuracy; ``--smoke`` adds
@@ -25,6 +26,10 @@ def main(argv=None) -> int:
     mode_group.add_argument("--smoke", action="store_true",
                             help="tiny CI shapes + backend agreement + "
                                  "autotune round-trip")
+    mode_group.add_argument("--quick", action="store_true",
+                            help="scaled-down paper cells (the default; "
+                                 "the flag exists so cron jobs can say "
+                                 "what they mean)")
     mode_group.add_argument("--full", action="store_true",
                             help="the paper's exact cells (slow on CPU)")
     ap.add_argument("--repeats", type=int, default=None,
@@ -32,7 +37,7 @@ def main(argv=None) -> int:
                          "5 full; paper methodology is 50)")
     ap.add_argument("--out", default=None,
                     help="output JSON path, or '-' to skip writing "
-                         "(default: BENCH_PR7.json in --smoke mode — the "
+                         "(default: BENCH_PR8.json in --smoke mode — the "
                          "committed CI baseline — else BENCH_<mode>.json)")
     ap.add_argument("--md", default=None,
                     help="also write the markdown summary to this path")
@@ -46,7 +51,7 @@ def main(argv=None) -> int:
         # only smoke mode may touch the committed baseline by default —
         # quick/full documents have a different entry set and would poison
         # the CI compare job if committed accidentally
-        args.out = "BENCH_PR7.json" if mode == "smoke" \
+        args.out = "BENCH_PR8.json" if mode == "smoke" \
             else f"BENCH_{mode}.json"
     doc = suite.run_suite(mode, repeats=args.repeats,
                           progress=lambda m: print(m, file=sys.stderr))

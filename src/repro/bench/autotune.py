@@ -116,17 +116,28 @@ def key_shape(op: str, shape) -> Tuple[int, ...]:
     return bucket(shape[:n]) + tuple(int(s) for s in shape[n:])
 
 
-def cache_key(op: str, shape, dtype="float32", *, ragged: bool = False) -> str:
-    """``op|platform|dtype|b1xb2x...[|ragged]`` — the on-disk cache key.
+def cache_key(op: str, shape, dtype="float32", *, ragged: bool = False,
+              approx: bool = False) -> str:
+    """``op|platform|dtype|b1xb2x...[|ragged][|approx]`` — the on-disk key.
 
     ``ragged=True`` (variable-length ``lengths=`` workloads) is part of the
     key: the same padded shape does very different work when most of it is
     masked, so a dense winner must never shadow the ragged measurement and
     vice versa.
+
+    ``approx=True`` keys the accuracy-vs-speed *frontier* entry
+    (:func:`tune_frontier`) for the same problem.  Frontier entries answer
+    a different question than exact-winner entries ("cheapest within a
+    caller error budget" vs "fastest exact"), so they live under their own
+    suffix and neither lookup can ever shadow the other.
     """
     dims = "x".join(str(s) for s in key_shape(op, shape))
     key = f"{op}|{jax.default_backend()}|{jnp.dtype(dtype).name}|{dims}"
-    return key + "|ragged" if ragged else key
+    if ragged:
+        key += "|ragged"
+    if approx:
+        key += "|approx"
+    return key
 
 
 # ---------------------------------------------------------------------------
@@ -185,13 +196,17 @@ def _store(key: str, entry: dict) -> None:
     invalidate_memo()
 
 
-def cache_entry(op: str, shape, dtype="float32", *,
-                ragged: bool = False) -> Optional[dict]:
-    """Full cached record (backend, timings, tuned_at) or None."""
+def cache_entry(op: str, shape, dtype="float32", *, ragged: bool = False,
+                approx: bool = False) -> Optional[dict]:
+    """Full cached record (backend, timings, tuned_at) or None.
+
+    ``approx=True`` reads the frontier entry (:func:`tune_frontier`) for
+    the same problem instead of the exact-winner entry.
+    """
     if not enabled():
         return None
     entry = _entries(cache_path()).get(
-        cache_key(op, shape, dtype, ragged=ragged))
+        cache_key(op, shape, dtype, ragged=ragged, approx=approx))
     return entry if isinstance(entry, dict) else None
 
 
@@ -244,11 +259,19 @@ def lookup_launch(op: str, shape, dtype="float32", *, ragged: bool = False):
 # ---------------------------------------------------------------------------
 
 def candidates(op: str) -> Tuple[str, ...]:
-    """Backends worth measuring for ``op`` on the current platform."""
-    names = dispatch.backends_for(op)
+    """Backends worth measuring for ``op`` on the current platform.
+
+    Approximate feature-map backends are excluded: the exact-winner sweep
+    compares like-for-like results; approximations compete on the separate
+    accuracy-vs-speed frontier (:func:`tune_frontier` / ``approx=True``
+    cache keys).
+    """
+    names = tuple(n for n in dispatch.backends_for(op)
+                  if not dispatch.get(n).approximate)
     if not dispatch.on_tpu():
         names = tuple(n for n in names if not dispatch.get(n).needs_tpu)
-    return names or dispatch.backends_for(op)
+    return names or tuple(n for n in dispatch.backends_for(op)
+                          if not dispatch.get(n).approximate)
 
 
 def launch_candidates(op: str, backend: str) -> Tuple:
@@ -441,3 +464,146 @@ def tune(op: str, shape, dtype="float32", *, repeats: int = 3,
             "repeats": repeats,
         })
     return winner
+
+
+# ---------------------------------------------------------------------------
+# accuracy-vs-speed frontier (approximate feature-map backends)
+# ---------------------------------------------------------------------------
+
+#: default rank sweep for frontier tuning — a few octaves, because the RFF
+#: error shrinks like 1/sqrt(rank): doubling twice per point covers the
+#: useful budget range without turning the sweep into a benchmark itself
+_FRONTIER_RANKS = (8, 32, 128)
+
+
+def _frontier_data(shape, dtype, ragged: bool):
+    """Deterministic Gram inputs at the bucketed key shape (cf. _runner)."""
+    Bx, By, nx, ny, d = shape
+    key = jax.random.PRNGKey(0)
+    px = _ragged_points(nx) if ragged else nx + 1
+    py = _ragged_points(ny) if ragged else ny + 1
+    X = (jax.random.normal(key, (Bx, px, d)) * 0.1).astype(dtype)
+    Y = (jax.random.normal(jax.random.PRNGKey(1), (By, py, d)) * 0.1
+         ).astype(dtype)
+    lx = _ragged_lengths(Bx, px) if ragged else None
+    ly = _ragged_lengths(By, py) if ragged else None
+    return X, Y, lx, ly
+
+
+def tune_frontier(op: str, shape, dtype="float32", *, ranks=_FRONTIER_RANKS,
+                  repeats: int = 3, warmup: int = 1, ragged: bool = False,
+                  force: bool = False) -> dict:
+    """Measure the method × rank accuracy-vs-speed frontier; persist it.
+
+    ``op`` must be ``"gram"`` — the feature maps in
+    :mod:`repro.core.features` approximate Gram inner products, nothing
+    else.  For every approximate backend in the registry and every rank in
+    ``ranks`` this measures steady-state seconds per call and the relative
+    Frobenius error against the exact engine's Gram at the *bucketed* key
+    shape, plus the exact engine's own wall clock as the bar every frontier
+    point must beat.  The result is stored under the ``approx=True`` cache
+    key (:func:`cache_key`), machine-stamped: the seconds — both the
+    "beats exact" gate and the cheapest-point ordering — only mean anything
+    on the box that measured them.
+
+    A warm key returns the stored entry with zero measurements unless
+    ``force=True``; with autotuning disabled the measurement still happens
+    but nothing is persisted.  A (method, rank) point that fails to run is
+    skipped, never raised — an absent point can only make
+    :func:`lookup_budget` more conservative.
+    """
+    from repro.core import features as ft
+    from repro.core.gram import sigkernel_gram
+    if op != "gram":
+        raise ValueError(
+            f"frontier tuning only supports op='gram' (got {op!r}): the "
+            "feature maps approximate Gram inner products only")
+    shape = key_shape(op, shape)
+    key = cache_key(op, shape, dtype, ragged=ragged, approx=True)
+    if not force:
+        entry = _entries(cache_path()).get(key)
+        if isinstance(entry, dict) and isinstance(entry.get("frontier"),
+                                                  list):
+            return entry
+    X, Y, lx, ly = _frontier_data(shape, dtype, ragged)
+    exact_backend = dispatch.resolve("auto", op="gram", shape=shape,
+                                     dtype=dtype, ragged=ragged)
+    f_exact = jax.jit(lambda a, b: sigkernel_gram(
+        a, b, backend=exact_backend, symmetric=False,
+        lengths=lx, lengths_y=ly))
+    exact_seconds = timer.bench(lambda: f_exact(X, Y), repeats=repeats,
+                                warmup=warmup)
+    K = f_exact(X, Y)
+    k_norm = max(float(jnp.linalg.norm(K)), 1e-30)
+    methods = tuple(n for n in dispatch.backends_for("gram")
+                    if dispatch.get(n).approximate)
+    points = []
+    for method in methods:
+        for rank in ranks:
+            feats = ft.FeatureConfig(method=method, rank=int(rank))
+            f = jax.jit(lambda a, b, fc=feats: sigkernel_gram(
+                a, b, features=fc, symmetric=False,
+                lengths=lx, lengths_y=ly))
+            try:
+                Ka = jax.block_until_ready(f(X, Y))
+                secs = timer.bench(lambda: f(X, Y), repeats=repeats,
+                                   warmup=0)
+            except Exception:
+                continue  # absent point = conservative, not fatal
+            rel = float(jnp.linalg.norm(Ka - K)) / k_norm
+            points.append({"backend": method, "rank": int(rank),
+                           "rel_err": rel, "seconds": secs})
+    entry = {
+        "frontier": points,
+        "exact_backend": exact_backend,
+        "exact_seconds": exact_seconds,
+        "machine": timer.machine_key(),
+        "tuned_at": time.time(),
+        "repeats": repeats,
+    }
+    if enabled():
+        _store(key, entry)
+    return entry
+
+
+def lookup_budget(op: str, shape, dtype="float32", error_budget=None, *,
+                  ragged: bool = False) -> Optional[Tuple[str, int]]:
+    """Cheapest measured frontier point fitting ``error_budget``, or None.
+
+    Never measures.  Returns ``(backend_name, rank)`` for the fastest
+    frontier point whose measured relative error is ``<= error_budget``
+    *and* whose wall clock beat the exact engine's — an approximation that
+    is both less accurate and slower has no reason to exist.  Fail-open on
+    everything else: cold/disabled cache, malformed entry, no qualifying
+    point, or a ``"machine"`` stamp naming a different box (the seconds in
+    a frontier do not travel; entries without a stamp are accepted, as in
+    :func:`lookup_launch`, so hand-written caches remain testable).
+    """
+    if error_budget is None:
+        return None
+    budget = float(error_budget)
+    entry = cache_entry(op, shape, dtype, ragged=ragged, approx=True)
+    if entry is None:
+        return None
+    stamp = entry.get("machine")
+    if isinstance(stamp, str) and stamp != timer.machine_key():
+        return None
+    points = entry.get("frontier")
+    exact_s = entry.get("exact_seconds")
+    if not isinstance(points, list) or not isinstance(exact_s, (int, float)):
+        return None
+    best = None
+    for p in points:
+        if not isinstance(p, dict):
+            continue
+        try:
+            name = str(p["backend"])
+            rank = int(p["rank"])
+            rel = float(p["rel_err"])
+            secs = float(p["seconds"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if rel <= budget and secs <= exact_s and (
+                best is None or secs < best[2]):
+            best = (name, rank, secs)
+    return None if best is None else (best[0], best[1])

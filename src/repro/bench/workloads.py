@@ -160,7 +160,10 @@ _GRAM_CELLS = {
 
 
 def _usable_gram_backends() -> List[str]:
-    backends = list(dispatch.backends_for("gram"))
+    # approximate feature-map backends answer a different question (an
+    # approximation of the Gram); they get their own frontier workload
+    backends = [b for b in dispatch.backends_for("gram")
+                if not dispatch.get(b).approximate]
     if not dispatch.on_tpu():
         # interpret-mode Pallas timings measure nothing meaningful and
         # dominate CPU wall-clock; smoke_checks covers those for correctness
@@ -334,7 +337,9 @@ def ragged_gram(mode: str = "smoke", repeats: int = 3) -> List[dict]:
         # — sweeps EVERY registered backend; quick/full would drag
         # interpret-mode Pallas through big grids for hours on CPU, so they
         # check the usable set (same policy as smoke_checks vs gram timing)
-        agree_backends = dispatch.backends_for("gram") if mode == "smoke" \
+        agree_backends = [
+            b for b in dispatch.backends_for("gram")
+            if not dispatch.get(b).approximate] if mode == "smoke" \
             else _usable_gram_backends()
         lx_np, ly_np = np.asarray(lx), np.asarray(ly)
         pairs = [(i, (i + 1) % B) for i in range(min(B, 4))]
@@ -605,6 +610,10 @@ def smoke_checks(mode: str = "smoke", repeats: int = 1) -> List[dict]:
     entries = []
     K_ref = sigkernel_gram(X, Y, backend="reference", symmetric=False)
     for b in dispatch.backends_for("gram"):
+        if dispatch.get(b).approximate:
+            # feature-map backends approximate K_ref, they don't match it
+            # within exact tolerances — checked separately below
+            continue
         K = sigkernel_gram(X, Y, backend=b, symmetric=False)
         np.testing.assert_allclose(K, K_ref, rtol=5e-4, atol=1e-5,
                                    err_msg=f"smoke: {b} disagrees")
@@ -614,6 +623,27 @@ def smoke_checks(mode: str = "smoke", repeats: int = 1) -> List[dict]:
         assert np.isfinite(np.asarray(g)).all(), \
             f"smoke: {b} grad not finite"
         entries.append(_chk(f"smoke_gram_{b}", backend=b))
+    # approximate feature-map backends: finite + in the right ballpark of
+    # the exact Gram (the frontier workload measures the error precisely),
+    # with a differentiable path and — for rff — zero PDE pair-solves
+    from repro.core.features import FeatureConfig
+    for b, feats in (("rff", FeatureConfig("rff", rank=128, depth=4)),
+                     ("nystroem", FeatureConfig("nystroem", rank=B))):
+        with dispatch.count_pair_solves() as c:
+            Ka = sigkernel_gram(X, Y, backend=b, symmetric=False,
+                                features=feats)
+        rel = float(np.abs(np.asarray(Ka) - np.asarray(K_ref)).max()
+                    / np.abs(np.asarray(K_ref)).max())
+        assert rel < 0.5, f"smoke: {b} rel err {rel:.2f} out of ballpark"
+        if b == "rff":
+            assert c.total == 0, f"smoke: rff issued {c.total} PDE solves"
+        ga = jax.grad(lambda q: sigkernel_gram(
+            q, Y, backend=b, symmetric=False, features=feats).sum())(X)
+        assert np.isfinite(np.asarray(ga)).all(), \
+            f"smoke: {b} grad not finite"
+        entries.append(_chk(f"smoke_gram_{b}",
+                            f"rel_err={rel:.2e};solves={c.total}",
+                            backend=b))
     with dispatch.count_pair_solves() as c:
         sigkernel_gram(X, backend="pallas_fused")
     budget = B * (B + 1) // 2
@@ -626,6 +656,59 @@ def smoke_checks(mode: str = "smoke", repeats: int = 1) -> List[dict]:
             k, sigkernel(X, Y, backend="reference"), rtol=5e-4, atol=1e-5,
             err_msg=f"smoke: sigkernel {b} disagrees")
         entries.append(_chk(f"smoke_sigkernel_{b}", backend=b))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# accuracy-vs-speed frontier — the approximate feature-map backends
+# (rff / nystroem) swept over rank, each point measured for wall clock AND
+# relative Frobenius error against the exact Gram, then persisted via
+# autotune.tune_frontier so backend="auto" + error_budget= can legally pick
+# the cheapest approximation that fits the caller's budget
+# ---------------------------------------------------------------------------
+
+#: (gram key shape, rank sweep) per mode — key shape as autotune.cache_key
+#: documents it: (Bx, By, nx, ny, d)
+_FRONTIER_CELLS = {
+    "smoke": ((4, 4, 12, 12, 3), (8, 32)),
+    "quick": ((8, 8, 32, 32, 4), (8, 32, 128)),
+    "full": ((32, 32, 128, 128, 8), (32, 128, 512)),
+}
+
+
+def approx_frontier(mode: str = "smoke", repeats: int = 3) -> List[dict]:
+    """Frontier entries: one timed + one accuracy row per (method, rank).
+
+    Timings are ``gate=False`` — approximation wall clock at bench shapes
+    is dominated by fixed overheads and too noisy to gate — but the
+    relative-error rows are gated: the estimators are deterministic (fixed
+    feature keys), so an error regression is a real math regression.  The
+    sweep also *persists* the frontier (``force=True`` re-measures every
+    run), which is what arms :func:`repro.core.dispatch.resolve_approx`
+    for this shape bucket on this machine.
+    """
+    shape, ranks = _FRONTIER_CELLS[_check_mode(mode)]
+    entry = autotune.tune_frontier("gram", shape, ranks=ranks,
+                                   repeats=repeats, force=True)
+    bshape = autotune.key_shape("gram", shape)
+    meta = dict(op="gram", shape=list(bshape))
+    entries = [_t("approx_frontier_exact", entry["exact_seconds"],
+                  f"backend={entry['exact_backend']}", gate=False, **meta)]
+    for p in entry["frontier"]:
+        tag = f"approx_frontier_{p['backend']}_r{p['rank']}"
+        entries.append(_t(
+            f"{tag}_time", p["seconds"],
+            f"vs_exact={entry['exact_seconds'] / p['seconds']:.2f}x",
+            gate=False, backend=p["backend"], rank=p["rank"], **meta))
+        entries.append(_acc(
+            f"{tag}_rel_err", p["rel_err"], f"rel_err={p['rel_err']:.2e}",
+            backend=p["backend"], rank=p["rank"], **meta))
+    # budget round-trip on the freshly-persisted frontier.  gate=False: at
+    # tiny shapes no point may beat the exact engine's wall clock, and
+    # "None (exact wins)" is then the *correct* answer, not a regression.
+    found = autotune.lookup_budget("gram", shape, "float32", 0.5)
+    entries.append(_chk("approx_frontier_budget_lookup",
+                        f"budget=0.5->{found}", gate=False, **meta))
     return entries
 
 

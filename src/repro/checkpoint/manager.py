@@ -22,7 +22,7 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import numpy as np

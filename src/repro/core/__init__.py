@@ -6,6 +6,8 @@ from . import lyndon
 from . import tensoralg
 from .config import (GridConfig, LaunchConfig, Linear, RBF, StaticKernel,
                      TransformPipeline, delta_from_gram)
+from .features import FeatureConfig
+from . import features
 from .signature import (signature, signature_direct, signature_combine,
                         path_increments, transformed_dim)
 from .logsignature import (logsignature, logsignature_combine,
@@ -22,8 +24,8 @@ from . import gram
 from . import losses
 
 __all__ = [
-    "config", "dispatch", "gram", "lyndon", "tensoralg",
-    "TransformPipeline", "GridConfig", "LaunchConfig",
+    "config", "dispatch", "features", "gram", "lyndon", "tensoralg",
+    "TransformPipeline", "GridConfig", "LaunchConfig", "FeatureConfig",
     "StaticKernel", "Linear", "RBF",
     "delta_from_gram",
     "signature", "signature_direct",

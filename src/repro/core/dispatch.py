@@ -22,6 +22,13 @@ Registered backends:
     Fused-Δ Pallas PDE kernels: Δ is built in VMEM from the increments and
     never exists in HBM.  Gram-capable; differentiable via the checkpointed
     exact backward (which re-materialises Δ for the reverse sweep only).
+``"rff"`` / ``"nystroem"``
+    Approximate feature-map Gram backends (:mod:`repro.core.features`):
+    random Fourier signature features and Nyström landmark low-rank.
+    Flagged ``approximate=True`` — never resolved for an exact request;
+    ``"auto"`` may pick them only when the caller passes an
+    ``error_budget=`` and the autotune cache holds a measured frontier
+    entry meeting it (:func:`resolve_approx`).
 ``"auto"``
     Measured winner from the on-disk autotune cache when one exists for the
     (op, shape, dtype, platform) key (:mod:`repro.bench.autotune`);
@@ -72,6 +79,11 @@ class BackendSpec:
     needs_tpu: bool
     #: consumes path increments directly — Δ never exists in HBM
     fused: bool = False
+    #: result is an *approximation* (feature-map inner products, not the
+    #: exact PDE kernel) — refused unless the caller opted in with
+    #: ``features=`` / ``error_budget=``; never an ``"auto"`` winner for
+    #: an exact request
+    approximate: bool = False
 
 
 _REGISTRY: Dict[str, BackendSpec] = {}
@@ -109,6 +121,14 @@ register(BackendSpec("pallas", frozenset(OPS), grad_exact=True,
 register(BackendSpec("pallas_fused", frozenset({"sigkernel", "gram"}),
                      grad_exact=True, gram_capable=True, needs_tpu=True,
                      fused=True))
+# feature-map approximations: differentiable (plain JAX autodiff through
+# the feature maps — not the paper's one-pass exact-Gram backward, hence
+# grad_exact=False), Gram-capable by construction (phi is (B, F); no B×B
+# intermediate ever forms), platform-agnostic
+register(BackendSpec("rff", frozenset({"gram"}), grad_exact=False,
+                     gram_capable=True, needs_tpu=False, approximate=True))
+register(BackendSpec("nystroem", frozenset({"gram"}), grad_exact=False,
+                     gram_capable=True, needs_tpu=False, approximate=True))
 
 
 # ---------------------------------------------------------------------------
@@ -257,6 +277,10 @@ def _autotuned(op: str, shape, dtype, ragged: bool = False) -> Optional[str]:
         return None  # stale entry: backend renamed/removed since tuning
     if spec.needs_tpu and not on_tpu():
         return None  # never let a stale entry force interpret mode
+    if spec.approximate:
+        # exact-winner cache keys must never return an approximation; the
+        # budgeted path goes through resolve_approx → lookup_budget
+        return None
     return name
 
 
@@ -303,7 +327,7 @@ def resolve_launch(launch=None, *, op: str, shape=None, dtype=None,
 
 def resolve(backend: str, *, op: str, grid_cells: Optional[int] = None,
             shape=None, dtype=None, allow_fused: bool = True,
-            ragged: bool = False) -> str:
+            ragged: bool = False, allow_approximate: bool = False) -> str:
     """Resolve ``"auto"`` to a concrete backend name for ``op``.
 
     When ``shape`` is given (the per-op cache-key shape documented in
@@ -318,9 +342,26 @@ def resolve(backend: str, *, op: str, grid_cells: Optional[int] = None,
     which a fused kernel cannot build in VMEM.  ``ragged=True`` marks a
     variable-length (``lengths=``) workload: its autotune cache key is kept
     separate from the dense key of the same padded shape.
+
+    ``allow_approximate=False`` (the default) means the caller wants the
+    exact kernel: backends flagged ``approximate=True`` are *refused* even
+    when named explicitly — opting in requires ``features=`` or
+    ``error_budget=`` on the Gram/loss entry points, which resolve with
+    ``allow_approximate=True``.  ``"auto"`` never returns an approximate
+    backend from this function either way (the budgeted route is
+    :func:`resolve_approx`).
     """
     if backend != "auto":
-        return _validate(backend, op)
+        name = _validate(backend, op)
+        if get(name).approximate and not allow_approximate:
+            raise ValueError(
+                f"backend {name!r} is flagged approximate=True (feature-map "
+                f"inner products, not the exact PDE kernel) and an exact "
+                f"result was requested; pass features=FeatureConfig(...) or "
+                f"error_budget= to opt in (docs/api/public.md, 'Approximate "
+                f"kernels'), or pick an exact backend: "
+                f"{tuple(n for n in backends_for(op) if not get(n).approximate)}")
+        return name
     tuned = _autotuned(op, shape, dtype, ragged)
     if tuned is not None and (allow_fused or not get(tuned).fused):
         return tuned
@@ -331,6 +372,45 @@ def resolve(backend: str, *, op: str, grid_cells: Optional[int] = None,
     if grid_cells is not None and grid_cells >= _ANTIDIAG_MIN_CELLS:
         return "antidiag"
     return "reference"
+
+
+def resolve_approx(op: str, shape=None, dtype=None, *,
+                   error_budget: float, ragged: bool = False
+                   ) -> Optional[Tuple[str, int]]:
+    """Cheapest approximate backend meeting ``error_budget``, or None.
+
+    The only road by which ``"auto"`` may legally land on an approximate
+    backend: the caller supplied an explicit relative-error budget, and the
+    autotune cache holds a *measured* accuracy-vs-speed frontier for this
+    ``(op, shape-bucket, dtype, platform)`` key
+    (:func:`repro.bench.autotune.tune_frontier`, run by the bench suite's
+    ``approx_frontier`` workload) with an entry whose measured relative
+    error fits the budget *and* that beat the exact engine's wall clock.
+    Returns ``(backend_name, rank)`` or None — same fail-open discipline as
+    :func:`_autotuned`: cold cache, disabled autotune, unreadable file,
+    foreign machine stamp, or no qualifying point all mean None (→ the
+    exact engine).
+    """
+    if shape is None or error_budget is None:
+        return None
+    try:
+        from repro.bench import autotune
+    except ImportError:
+        return None
+    if not autotune.enabled():
+        return None
+    try:
+        found = autotune.lookup_budget(op, shape, dtype or "float32",
+                                       error_budget, ragged=ragged)
+    except (ValueError, TypeError):
+        return None
+    if found is None:
+        return None
+    name, rank = found
+    spec = _REGISTRY.get(name)
+    if spec is None or op not in spec.ops or not spec.approximate:
+        return None  # stale frontier entry
+    return name, int(rank)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,312 @@
+"""Sub-quadratic signature-kernel approximations as feature maps.
+
+Every loss in the library costs O(B²) Goursat PDE solves through the exact
+Gram engine.  This module provides the two classic low-rank escapes (KSig
+user's guide, arxiv 2501.07145) as *feature maps* ``phi(X) ∈ R^{B×F}``
+whose inner products approximate the exact signature-kernel Gram,
+
+    K[a, b] = k(X_a, Y_b)  ≈  ⟨phi(X)_a, phi(Y)_b⟩,
+
+so MMD-style losses become O(B·F) end-to-end — the full (B, B) Gram (and
+the (B, B, Lx, Ly) pairwise Δ stack) never exists, in the value *or* the
+gradient (the streaming guard of :mod:`repro.core.gram` proves it).
+
+``"rff"`` — Random Fourier signature features
+    The static-kernel lift is replaced by its random-Fourier feature map
+    (exact for :class:`repro.Linear`; the classic Bochner ``cos(Wx + b)``
+    features for :class:`repro.RBF`), and the lifted path's *truncated
+    signature* is sketched by tensor random projections: one projection
+    draw ``u_1, …, u_n`` turns the level-n signature tensor into the
+    scalar iterated sum ``Σ_{i_1<…<i_n} Π_k ⟨u_k, dz_{i_k}⟩`` — an
+    O(L·depth) scan per draw, unbiased because
+    ``E[⟨u_1⊗…⊗u_n, S⟩·⟨u_1⊗…⊗u_n, T⟩] = ⟨S, T⟩`` for independent
+    isotropic ``u_k``.  ``rank`` independent draws are averaged, so the
+    feature dimension is ``1 + rank·depth`` and the variance shrinks as
+    1/rank.  No PDE solves at all.
+
+``"nystroem"`` — landmark (pivoted-Cholesky) low-rank approximation
+    ``rank`` landmark paths are greedily selected from a ``pool``-sized
+    candidate subset by pivoted Cholesky on the *exact* landmark Gram
+    (the classic trace-norm-greedy rule: each pivot is the largest
+    residual diagonal), and ``phi(A) = K(A, Z)·L_w^{-T}`` with
+    ``L_w = chol(K(Z, Z) + jitter·I)``, so
+    ``phi(A)·phi(B)^T = K(A,Z)·K(Z,Z)^{-1}·K(Z,B)`` — the Nyström
+    approximation, exact when ``rank`` reaches the Gram's numerical rank.
+    Costs O(pool²) + O(B·rank) exact PDE solves — linear in B.
+
+Both maps are plain differentiable JAX (the Nyström pivot *selection* is
+detached via ``stop_gradient``; everything it gathers stays on the tape),
+compose with every :class:`repro.TransformPipeline` / static-kernel lift /
+``lengths=`` ragged batch, and are deterministic given the ``key`` leaf of
+:class:`FeatureConfig`.
+
+The entry points live in :mod:`repro.core.gram`: pass
+``features=FeatureConfig(...)`` (or a caller error budget, see
+``docs/api/public.md`` § Approximate kernels) to ``sigkernel_gram``,
+``sigkernel_gram_reduce``, ``mmd2``, ``scoring_rule`` or
+``sig_aux_loss``; the dispatch registry routes the ``"rff"`` /
+``"nystroem"`` backend names here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import Linear, RBF, _pytree_dataclass
+from . import transforms as tf
+
+#: methods a FeatureConfig may name (also the dispatch backend names)
+METHODS = ("rff", "nystroem")
+
+#: floor added to pivoted-Cholesky residuals before the sqrt — keeps the
+#: selection loop finite when the residual underflows at full rank
+_PIVOT_TINY = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureConfig:
+    """Configuration of one approximate sig-kernel feature map.
+
+    A frozen pytree: ``method``/``rank``/``depth``/``lift_dim``/``pool``
+    are static metadata (they set feature shapes and trace structure);
+    ``key`` and ``jitter`` are data leaves, so the same trace serves any
+    seed and the Cholesky jitter stays tunable under ``jit``.
+
+    Attributes:
+      method: ``"rff"`` (random Fourier signature features, no PDE solves)
+        or ``"nystroem"`` (landmark low-rank, O(B·rank) exact solves).
+      rank: approximation rank R — the number of independent projection
+        draws (rff; feature dim ``1 + rank·depth``) or landmarks
+        (nystroem; feature dim ``rank``, silently clamped to the available
+        pool for small batches).  Accuracy rises and speedup falls with R:
+        the bench frontier workload maps the trade-off.
+      key: PRNG key leaf making the map deterministic and reproducible;
+        ``None`` means ``jax.random.PRNGKey(0)``.  Two configs differing
+        only in ``key`` share one jit trace.
+      depth: rff only — signature truncation depth of the sketch.  The
+        exact kernel's level-n term decays like ``‖path‖^{2n}/(n!)²``, so
+        small depths already capture paper-scale paths.
+      lift_dim: rff only — random-Fourier dimension m of the static-kernel
+        lift (ignored for :class:`repro.Linear`, which lifts exactly).
+      pool: nystroem only — candidate-subset size the pivoted-Cholesky
+        selection sees.  0 (default) means ``min(B, 4·rank)``.
+      jitter: nystroem only — diagonal regulariser of the landmark Gram
+        Cholesky.
+    """
+
+    method: str = "rff"
+    rank: int = 32
+    key: Optional[jax.Array] = None
+    depth: int = 4
+    lift_dim: int = 64
+    pool: int = 0
+    jitter: float = 1e-6
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(
+                f"FeatureConfig.method must be one of {METHODS}, got "
+                f"{self.method!r}")
+        for name, lo in (("rank", 1), ("depth", 1), ("lift_dim", 1),
+                         ("pool", 0)):
+            v = getattr(self, name)
+            if not isinstance(v, int) or isinstance(v, bool) or v < lo:
+                raise ValueError(
+                    f"FeatureConfig.{name} must be a Python int >= {lo} "
+                    f"(it sets static feature shapes), got {v!r}")
+
+    def resolved_key(self) -> jax.Array:
+        return jax.random.PRNGKey(0) if self.key is None else self.key
+
+    def feature_dim(self, batch: int) -> int:
+        """Static feature dimension F of ``phi`` for a batch of ``batch``."""
+        if self.method == "rff":
+            return 1 + self.rank * self.depth
+        return min(self.rank, self.pool_size(batch))
+
+    def pool_size(self, batch: int) -> int:
+        """Concrete nystroem candidate-pool size for a batch of ``batch``."""
+        pool = self.pool if self.pool else 4 * self.rank
+        return max(1, min(int(pool), int(batch)))
+
+
+_pytree_dataclass(FeatureConfig, data_fields=("key", "jitter"),
+                  meta_fields=("method", "rank", "depth", "lift_dim",
+                               "pool"))
+
+
+def resolve_features(features) -> Optional[FeatureConfig]:
+    """Type-check the ``features=`` kwarg of the Gram entry points."""
+    if features is None or isinstance(features, FeatureConfig):
+        return features
+    raise TypeError(
+        f"features= expects a FeatureConfig, got "
+        f"{type(features).__name__} (see docs/api/public.md, "
+        f"'Approximate kernels')")
+
+
+# ---------------------------------------------------------------------------
+# random Fourier signature features
+# ---------------------------------------------------------------------------
+
+def _rff_lift(points: jax.Array, kernel, key: jax.Array,
+              m: int) -> jax.Array:
+    """Pointwise feature map of the static-kernel lift: (..., L, d) -> (..., L, m').
+
+    ``Linear(scale)`` lifts exactly (``√scale·x``, no randomness, m' = d);
+    ``RBF(sigma)`` uses Bochner features ``√(2/m)·cos(x·W + b)`` with
+    ``W ~ N(0, I/σ²)``, ``b ~ U[0, 2π)`` — ``E⟨z(x), z(y)⟩ = κ(x, y)``.
+    ``sigma`` stays on the tape (W is the standard-normal draw divided by
+    it), so kernel hyper-parameter gradients survive the approximation.
+    """
+    d = points.shape[-1]
+    if isinstance(kernel, Linear):
+        scale = jnp.asarray(kernel.scale, points.dtype)
+        return points * jnp.sqrt(scale)
+    if isinstance(kernel, RBF):
+        kw, kb = jax.random.split(key)
+        w = jax.random.normal(kw, (d, m), points.dtype) \
+            / jnp.asarray(kernel.sigma, points.dtype)
+        b = jax.random.uniform(kb, (m,), points.dtype, 0.0, 2.0 * jnp.pi)
+        return jnp.sqrt(2.0 / m) * jnp.cos(points @ w + b)
+    raise ValueError(
+        f"rff features support Linear/RBF static kernels, got "
+        f"{type(kernel).__name__}")
+
+
+def _sig_projection_scan(inc: jax.Array, proj: jax.Array) -> jax.Array:
+    """Tensor-random-projected signature levels of an increment stream.
+
+    inc: (B, L, m) increments; proj: (rank, depth, m) projection draws.
+    Returns (B, rank, depth): entry ``[b, r, n-1]`` is the level-n
+    *continuous* (piecewise-linear) signature ``S_n`` contracted with
+    ``u_1 ⊗ … ⊗ u_n``.  By Chen's identity the path signature is the
+    ordered product of per-segment exponentials ``exp⊗(dz_l)``, so each
+    scan step folds a whole segment in exactly:
+
+        new_P[k] = Σ_{j≤k} P[j] · ⟨u_{j+1}, dz_l⟩ … ⟨u_k, dz_l⟩ / (k−j)!
+
+    The ``1/(k−j)!`` within-segment powers are what distinguish this from
+    the strict iterated *sum* (the discrete-time signature) — dropping
+    them leaves an O(‖dz‖²) bias against the Goursat PDE solution, which
+    integrates the continuous kernel.  O(depth²) work per step, with
+    depth ≤ ~6 — negligible next to the einsum.  Trailing zero increments
+    (ragged padding) are exact no-ops.
+    """
+    B = inc.shape[0]
+    rank, depth, _ = proj.shape
+    # s[l, b, r, k] = ⟨proj[r, k], dz_l⟩
+    s = jnp.einsum("blm,rkm->lbrk", inc, proj)
+    p0 = jnp.concatenate(
+        [jnp.ones((B, rank, 1), inc.dtype),
+         jnp.zeros((B, rank, depth), inc.dtype)], axis=-1)
+
+    def step(p, s_l):
+        new = [p[..., 0]]                       # level 0 stays 1
+        for k in range(1, depth + 1):
+            acc = p[..., k]
+            prod = None
+            fact = 1.0
+            for j in range(k - 1, -1, -1):      # prod = s_{j+1} ⋯ s_k
+                prod = s_l[..., j] if prod is None else prod * s_l[..., j]
+                fact *= (k - j)
+                acc = acc + p[..., j] * prod * (1.0 / fact)
+            new.append(acc)
+        return jnp.stack(new, axis=-1), None
+
+    p, _ = jax.lax.scan(step, p0, s)
+    return p[..., 1:]
+
+
+def rff_features(paths: jax.Array, feats: FeatureConfig, pipeline,
+                 kernel, lengths=None) -> jax.Array:
+    """Random Fourier signature features phi(paths) ∈ (B, 1 + rank·depth).
+
+    ``⟨phi(x), phi(y)⟩`` is an unbiased estimate (over the projection
+    draws; and the Bochner draw for RBF lifts) of the depth-truncated
+    signature kernel of the transformed, lifted paths — the quantity the
+    Goursat PDE computes untruncated.  Ragged ``lengths=`` reuse the
+    transform layer's clamped-padding semantics, so padded rows contribute
+    exactly-zero increments and padding content (even NaN) never reaches
+    the features.
+    """
+    if paths.ndim != 3:
+        raise ValueError(
+            f"rff_features expects (B, L, d) paths, got {paths.shape}")
+    key = feats.resolved_key()
+    k_lift, k_proj = jax.random.split(key)
+    # transform first (start-aligned: trailing zero increments are no-ops
+    # for the iterated-sum scan, mirroring the signature Horner kernels)
+    points = tf.transform_path(paths, pipeline, lengths, align="start")
+    z = _rff_lift(points, kernel, k_lift, feats.lift_dim)
+    inc = z[:, 1:] - z[:, :-1]
+    proj = jax.random.normal(k_proj,
+                             (feats.rank, feats.depth, z.shape[-1]),
+                             inc.dtype)
+    levels = _sig_projection_scan(inc, proj)             # (B, rank, depth)
+    flat = levels.reshape(inc.shape[0], feats.rank * feats.depth)
+    flat = flat / jnp.sqrt(jnp.asarray(feats.rank, flat.dtype))
+    one = jnp.ones((inc.shape[0], 1), flat.dtype)        # level-0 term
+    return jnp.concatenate([one, flat], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Nyström landmark selection (pivoted Cholesky) + feature solve
+# ---------------------------------------------------------------------------
+
+def pivoted_cholesky(G: jax.Array, rank: int):
+    """Greedy rank-``rank`` pivoted Cholesky of a PSD Gram ``G`` (n, n).
+
+    Returns ``(piv, resid)``: the selected pivot indices (rank,) int32 in
+    selection order, and the residual diagonal trace after each step
+    (rank,) — ``resid[-1]`` bounds ``‖G − L·L^T‖_tr``, the classic
+    certificate that ``rank`` was enough.  Selection runs on
+    ``stop_gradient(G)``: which landmarks win is a discrete choice with no
+    useful derivative, while everything the caller *gathers at* those
+    indices stays differentiable.
+    """
+    n = G.shape[0]
+    if not 1 <= rank <= n:
+        raise ValueError(
+            f"pivoted_cholesky rank must be in [1, {n}], got {rank}")
+    Gs = jax.lax.stop_gradient(G)
+
+    def step(carry, _):
+        d, L, j = carry
+        p = jnp.argmax(d)
+        dp = jnp.maximum(d[p], _PIVOT_TINY)
+        # residual column at the pivot: G[:, p] − L·L[p]
+        col = Gs[:, p] - L @ L[p]
+        lj = col / jnp.sqrt(dp)
+        L = jax.lax.dynamic_update_index_in_dim(
+            L.T, lj, j, axis=0).T                         # L[:, j] = lj
+        d = jnp.maximum(d - lj * lj, 0.0)
+        d = d.at[p].set(0.0)                              # never re-picked
+        return (d, L, j + 1), (p.astype(jnp.int32), d.sum())
+
+    d0 = jnp.diagonal(Gs)
+    L0 = jnp.zeros((n, rank), Gs.dtype)
+    (_, _, _), (piv, resid) = jax.lax.scan(
+        step, (d0, L0, 0), None, length=rank)
+    return piv, resid
+
+
+def nystroem_factor(G_landmarks: jax.Array, jitter) -> jax.Array:
+    """Lower Cholesky factor of the landmark Gram ``W + jitter·I``."""
+    W = G_landmarks
+    eye = jnp.eye(W.shape[0], dtype=W.dtype)
+    return jnp.linalg.cholesky(W + jnp.asarray(jitter, W.dtype) * eye)
+
+
+def nystroem_phi(K_cross: jax.Array, Lw: jax.Array) -> jax.Array:
+    """Nyström features from an exact cross-Gram: ``K(A, Z)·L_w^{-T}``.
+
+    ``phi(A)·phi(B)^T = K(A,Z)·(L_w·L_w^T)^{-1}·K(Z,B)`` — the Nyström
+    approximation of ``K(A, B)``.
+    """
+    return jax.scipy.linalg.solve_triangular(
+        Lw, K_cross.T, lower=True).T

@@ -50,6 +50,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from . import dispatch
+from . import features as ft
 from . import transforms as tf
 from .config import (_maybe_scale as _scale, delta_from_gram,
                      resolve_kernel_configs)
@@ -162,16 +163,27 @@ def _solve_pairs_chunked(sX: jax.Array, a_idx, b_idx, kernel, backend: str,
 
 def _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms, grid,
                     static_kernel, lam1, lam2, time_aug, lead_lag,
-                    use_pallas, solver, backend, launch=None):
+                    use_pallas, solver, backend, launch=None,
+                    features=None, error_budget=None):
     """The engine front-end every Gram entry point shares.
 
     Validates shapes/flags, resolves configs + legacy shims, pads ragged
     batches, and resolves ``backend`` through the dispatch registry and
     ``launch`` through :func:`repro.core.dispatch.resolve_launch`
     (explicit > autotuned > defaults).  Returns
-    ``(X, Y, cfg, grid_cfg, kernel, backend, symmetric, launch)`` with
-    ``X``/``Y`` already ragged-padded (masking is burnt into the prepared
-    streams downstream, so ``lengths`` are consumed here).
+    ``(X, Y, cfg, grid_cfg, kernel, backend, symmetric, launch, feats)``
+    with ``X``/``Y`` already ragged-padded (masking is burnt into the
+    prepared streams downstream, so ``lengths`` are consumed here).
+
+    ``feats`` is the active :class:`repro.core.features.FeatureConfig` or
+    None (= exact engine).  An approximation activates one of three ways:
+    an explicit ``features=`` config; an explicit approximate *backend
+    name* (``"rff"``/``"nystroem"``) together with ``features=`` or
+    ``error_budget=`` (without either the dispatch layer refuses — the
+    capability-flag contract); or ``backend="auto"`` + ``error_budget=``
+    when the autotune cache holds a measured frontier point meeting the
+    budget (:func:`repro.core.dispatch.resolve_approx`) — never
+    otherwise.
     """
     if X.ndim != 3 or (Y is not None and Y.ndim != 3):
         raise ValueError(
@@ -208,14 +220,95 @@ def _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms, grid,
     By = X.shape[0] if Y is None else Y.shape[0]
     key_shape = (X.shape[0], By, Lx << g.lam1, Ly << g.lam2,
                  cfg.transformed_dim(X.shape[-1]))
-    backend = dispatch.resolve(
-        backend, op="gram", grid_cells=(Lx << g.lam1) * (Ly << g.lam2),
-        shape=key_shape,
-        dtype=X.dtype, allow_fused=kernel.lifts_increments, ragged=ragged)
+
+    feats = ft.resolve_features(features)
+    if feats is not None and backend not in ("auto", feats.method):
+        raise ValueError(
+            f"features=FeatureConfig(method={feats.method!r}) conflicts "
+            f"with backend={backend!r}; pass backend='auto' or "
+            f"backend={feats.method!r}")
+    explicit_approx = (backend in dispatch.backends_for("gram")
+                       and dispatch.get(backend).approximate)
+    if feats is None and explicit_approx and error_budget is not None:
+        # explicit approx backend + a budget: take the measured frontier
+        # rank when the cache is warm, the library default otherwise
+        found = dispatch.resolve_approx(
+            "gram", key_shape, X.dtype, error_budget=error_budget,
+            ragged=ragged)
+        rank = found[1] if found is not None and found[0] == backend \
+            else ft.FeatureConfig.rank
+        feats = ft.FeatureConfig(method=backend, rank=rank)
+    if feats is None and backend == "auto" and error_budget is not None:
+        found = dispatch.resolve_approx(
+            "gram", key_shape, X.dtype, error_budget=error_budget,
+            ragged=ragged)
+        if found is not None:
+            feats = ft.FeatureConfig(method=found[0], rank=found[1])
+
+    if feats is not None:
+        backend = dispatch.resolve(feats.method, op="gram",
+                                   allow_approximate=True)
+    else:
+        backend = dispatch.resolve(
+            backend, op="gram", grid_cells=(Lx << g.lam1) * (Ly << g.lam2),
+            shape=key_shape,
+            dtype=X.dtype, allow_fused=kernel.lifts_increments,
+            ragged=ragged)
     launch = dispatch.resolve_launch(launch, op="gram", shape=key_shape,
                                      dtype=X.dtype, ragged=ragged)
     return (X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric,
-            launch)
+            launch, feats)
+
+
+# ---------------------------------------------------------------------------
+# approximate feature maps — phi(X) whose inner products ≈ the exact Gram
+# ---------------------------------------------------------------------------
+
+def _nystroem_maps(sX, sY, feats, kernel, backend, lam1, lam2, launch):
+    """Nyström features from prepared streams: phi = K(·, Z) · L_w^{-T}.
+
+    Landmarks Z are pivoted-Cholesky-selected from a ``pool``-sized random
+    subset of X (the pool Gram costs pool² exact solves — B-independent);
+    the per-path cost is one row of ``rank`` exact solves.  The selection
+    indices are detached (``stop_gradient``); every gathered value stays
+    differentiable.
+    """
+    Bx = sX.shape[0]
+    pool = feats.pool_size(Bx)
+    rank = min(feats.rank, pool)
+    pool_idx = jax.random.permutation(feats.resolved_key(), Bx)[:pool]
+    sP = sX[pool_idx]
+    dispatch.record_pair_solves(
+        pool * pool + Bx * rank + (0 if sY is None else sY.shape[0] * rank))
+    G_pool = _gram_block(sP, sP, kernel, backend, lam1, lam2, launch)
+    piv, _ = ft.pivoted_cholesky(G_pool, rank)
+    sZ = sP[piv]
+    Lw = ft.nystroem_factor(G_pool[piv][:, piv], feats.jitter)
+    phiX = ft.nystroem_phi(
+        _gram_rows(sX, sZ, kernel, backend, lam1, lam2, None, launch), Lw)
+    if sY is None:
+        return phiX, None
+    phiY = ft.nystroem_phi(
+        _gram_rows(sY, sZ, kernel, backend, lam1, lam2, None, launch), Lw)
+    return phiX, phiY
+
+
+def _feature_maps(X, Y, feats, cfg, g, kernel, lengths, lengths_y, launch):
+    """phi(X), phi(Y) under ONE shared feature-map draw (phi(Y) is None
+    when ``Y`` is) — sharing the draw is what makes ⟨phi(X), phi(Y)⟩ a
+    kernel approximation rather than noise."""
+    if feats.method == "rff":
+        phiX = ft.rff_features(X, feats, cfg, kernel, lengths)
+        phiY = None if Y is None else \
+            ft.rff_features(Y, feats, cfg, kernel, lengths_y)
+        return phiX, phiY
+    # nystroem: the pool/cross Grams use the exact engine's auto backend
+    exact = dispatch.resolve("auto", op="gram",
+                             allow_fused=kernel.lifts_increments)
+    sX = _prepare(X, cfg, kernel, lengths)
+    sY = None if Y is None else _prepare(Y, cfg, kernel, lengths_y)
+    return _nystroem_maps(sX, sY, feats, kernel, exact, g.lam1, g.lam2,
+                          launch)
 
 
 def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
@@ -223,7 +316,7 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
                    symmetric: Optional[bool] = None,
                    lengths=None, lengths_y=None,
                    transforms=None, grid=None, static_kernel=None,
-                   launch=None,
+                   launch=None, features=None, error_budget=None,
                    lam1=UNSET, lam2=UNSET,
                    time_aug=UNSET, lead_lag=UNSET,
                    use_pallas=UNSET, solver=UNSET) -> jax.Array:
@@ -264,6 +357,19 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
         library defaults; an explicit ``row_block=`` argument beats
         ``launch.gram_row_block``.  Launch parameters never change the
         math — see docs/benchmarks.md § Launch-parameter tuning.
+      features: a :class:`repro.FeatureConfig` activating an *approximate*
+        feature-map backend (``"rff"`` / ``"nystroem"``): the result is
+        ``phi(X) @ phi(Y).T ≈ K`` with no B×B PDE solve grid — O(B·rank)
+        work, differentiable by plain autodiff through the feature maps,
+        deterministic given the config's ``key`` leaf.  See
+        docs/api/public.md § Approximate kernels.
+      error_budget: a relative-error budget allowing ``backend="auto"`` to
+        *legally* pick an approximation: used only when the autotune cache
+        holds a measured accuracy-vs-speed frontier point for this shape
+        bucket meeting the budget (the bench suite's ``approx_frontier``
+        workload records them); otherwise the exact engine runs.  Without
+        ``features=``/``error_budget=``, approximate backends are refused
+        even when named explicitly.
       lam1 / lam2 / time_aug / lead_lag: deprecated aliases for ``grid=`` /
         ``transforms=`` (DeprecationWarning once per call-site).
       use_pallas / solver: deprecated aliases (DeprecationWarning) mapped to
@@ -277,13 +383,21 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
     device mesh) and :func:`sigkernel_gram_reduce` (streaming ``ΣK``
     without materialising K — what ``mmd2(streaming=True)`` uses).
     """
-    X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric, launch = \
+    (X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric, launch,
+     feats) = \
         _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms,
                         grid, static_kernel, lam1, lam2, time_aug, lead_lag,
-                        use_pallas, solver, backend, launch)
+                        use_pallas, solver, backend, launch,
+                        features=features, error_budget=error_budget)
     lam1, lam2 = g.lam1, g.lam2
     if row_block is None:  # explicit arg beats the launch knob
         row_block = launch.gram_row_block
+
+    if feats is not None:
+        phiX, phiY = _feature_maps(X, Y, feats, cfg, g, kernel, lengths,
+                                   lengths_y, launch)
+        K = phiX @ (phiX if phiY is None else phiY).T
+        return shard(K, "batch", "model")
 
     sX = _prepare(X, cfg, kernel, lengths)
     sX = shard(sX, "batch", None, None)
@@ -441,7 +555,7 @@ def sigkernel_gram_reduce(X: jax.Array, Y: Optional[jax.Array] = None, *,
                           symmetric: Optional[bool] = None,
                           lengths=None, lengths_y=None,
                           transforms=None, grid=None, static_kernel=None,
-                          launch=None,
+                          launch=None, features=None, error_budget=None,
                           lam1=UNSET, lam2=UNSET,
                           time_aug=UNSET, lead_lag=UNSET,
                           use_pallas=UNSET, solver=UNSET,
@@ -464,11 +578,18 @@ def sigkernel_gram_reduce(X: jax.Array, Y: Optional[jax.Array] = None, *,
         (or ``row_block · Bx`` symmetric pairs) in flight.  Default: the
         largest block that fits the engine's pair-gather budget (for small
         problems that is one block, i.e. dense-equivalent).
+      features / error_budget: activate an approximate feature-map backend
+        exactly as in :func:`sigkernel_gram`.  The reduction then becomes
+        pure feature algebra — ``ΣK = ⟨Σ_a phi(X)_a, Σ_b phi(Y)_b⟩`` and
+        the diag-dropped symmetric sum ``‖Σ phi‖² − Σ_a ‖phi_a‖²`` — so
+        peak memory is O(B·rank) with no row blocking needed, in the value
+        and the grad (the streaming-shape guard covers this path too).
       check_streaming: run :func:`assert_streaming_reduction` on this
         reduction (value + grad) once per shape/config key before
         executing — the guard ``mmd2``/``scoring_rule`` enable whenever a
         streaming path is requested.  Skipped when one block covers the
-        whole batch (streaming degenerates to dense by construction).
+        whole batch (streaming degenerates to dense by construction) —
+        except on the feature path, which is checked whenever requested.
 
     Returns a scalar (f32), differentiable with the same exact one-pass
     backward as the Gram itself.
@@ -480,13 +601,34 @@ def sigkernel_gram_reduce(X: jax.Array, Y: Optional[jax.Array] = None, *,
     # capture pre-padding abstract args for the guard: the re-entrant
     # closure below replays the padding itself
     guard_args = (X, Y, lengths, lengths_y)
-    X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric, launch = \
+    (X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric, launch,
+     feats) = \
         _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms,
                         grid, static_kernel, lam1, lam2, time_aug, lead_lag,
-                        use_pallas, solver, backend, launch)
+                        use_pallas, solver, backend, launch,
+                        features=features, error_budget=error_budget)
     lam1, lam2 = g.lam1, g.lam2
     if row_block is None:  # explicit arg beats the launch knob
         row_block = launch.gram_row_block
+
+    if feats is not None:
+        if check_streaming:
+            _guard_reduce(guard_args, include_diag=include_diag,
+                          backend=backend,
+                          row_block=1 if row_block is None else row_block,
+                          symmetric=symmetric, transforms=cfg, grid=g,
+                          static_kernel=kernel, launch=launch,
+                          features=feats)
+        phiX, phiY = _feature_maps(X, Y if not symmetric else None, feats,
+                                   cfg, g, kernel, lengths, lengths_y,
+                                   launch)
+        if symmetric:
+            s = phiX.sum(axis=0)
+            total = s @ s
+            if not include_diag:  # ΣK − tr(K), in feature space
+                total = total - (phiX * phiX).sum()
+            return total
+        return phiX.sum(axis=0) @ phiY.sum(axis=0)
 
     sX = _prepare(X, cfg, kernel, lengths)
     Bx, L, d = sX.shape
@@ -652,7 +794,8 @@ def sigkernel_gram_sharded(X: jax.Array, Y: Optional[jax.Array] = None, *,
                            symmetric: Optional[bool] = None,
                            lengths=None, lengths_y=None,
                            transforms=None, grid=None,
-                           static_kernel=None, launch=None) -> jax.Array:
+                           static_kernel=None, launch=None,
+                           features=None, error_budget=None) -> jax.Array:
     """:func:`sigkernel_gram` tiled over a device mesh via ``shard_map``.
 
     The (Bx, By) Gram tile grid is 2-D **block-cyclic** sharded: row tiles
@@ -690,12 +833,26 @@ def sigkernel_gram_sharded(X: jax.Array, Y: Optional[jax.Array] = None, *,
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see
     docs/api/public.md § Distributed & streaming Grams and
     ``examples/gram_matrix_distributed.py``).
+
+    ``features=`` / ``error_budget=`` compose here too: with an
+    approximation active there is no per-pair solve grid to tile, so the
+    feature maps are computed once and the (Bx, By) result is the sharded
+    matmul ``phi(X) @ phi(Y).T`` — rows annotated to the ``"batch"`` axis,
+    columns to ``"model"``, partitioned by XLA under the active mesh.
     """
-    X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric, launch = \
+    (X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric, launch,
+     feats) = \
         _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms,
                         grid, static_kernel, UNSET, UNSET, UNSET, UNSET,
-                        UNSET, UNSET, backend, launch)
+                        UNSET, UNSET, backend, launch,
+                        features=features, error_budget=error_budget)
     lam1, lam2 = g.lam1, g.lam2
+    if feats is not None:
+        phiX, phiY = _feature_maps(X, Y, feats, cfg, g, kernel, lengths,
+                                   lengths_y, launch)
+        phiX = shard(phiX, "batch", None)
+        K = phiX @ (phiX if phiY is None else shard(phiY, "model", None)).T
+        return shard(K, "batch", "model")
     if row_block is None:  # explicit arg beats the launch knob
         row_block = launch.gram_row_block
     if mesh is None:

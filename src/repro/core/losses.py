@@ -29,20 +29,23 @@ from .dispatch import UNSET
 from .gram import sigkernel_gram, sigkernel_gram_reduce
 
 
-def _use_streaming(streaming: Optional[bool],
-                   row_block: Optional[int]) -> bool:
+def _use_streaming(streaming: Optional[bool], row_block: Optional[int],
+                   approx: bool = False) -> bool:
     """``streaming=None`` means auto: stream iff the caller bounded memory
     with ``row_block=`` (the only reason to pay the reduction's extra
-    trace); explicit True/False always wins."""
+    trace) — or an approximation is active (``features=`` /
+    ``error_budget=``), whose whole point is O(B·rank) memory: the
+    feature-space reduction never forms a B×B Gram, so streaming is the
+    natural default.  Explicit True/False always wins."""
     if streaming is None:
-        return row_block is not None
+        return row_block is not None or approx
     return bool(streaming)
 
 
 def mmd2(X: jax.Array, Y: jax.Array, *, transforms=None, grid=None,
          static_kernel=None, unbiased: bool = True, backend: str = "auto",
          row_block: Optional[int] = None, streaming: Optional[bool] = None,
-         lengths=None, lengths_y=None,
+         lengths=None, lengths_y=None, features=None, error_budget=None,
          lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
          use_pallas=UNSET) -> jax.Array:
     """Squared MMD between two path distributions under the signature kernel.
@@ -70,6 +73,12 @@ def mmd2(X: jax.Array, Y: jax.Array, *, transforms=None, grid=None,
     (abstract trace, no FLOPs, once per shape) guards against the streaming
     path silently densifying.
 
+    ``features=`` (a :class:`repro.FeatureConfig`) or ``error_budget=``
+    activate the approximate feature-map backends exactly as in
+    :func:`repro.core.gram.sigkernel_gram`; all three Gram terms then
+    reduce in feature space — O(B·rank) memory end-to-end, streaming by
+    default (see docs/api/public.md § Approximate kernels).
+
     The unbiased estimator divides by ``b·(b−1)`` and therefore needs at
     least two samples on each side — a single-sample batch raises instead of
     silently returning NaN; use ``unbiased=False`` for ``b = 1``.
@@ -83,9 +92,11 @@ def mmd2(X: jax.Array, Y: jax.Array, *, transforms=None, grid=None,
     cfg, g, kernel = resolve_kernel_configs(
         transforms, grid, static_kernel, time_aug=time_aug,
         lead_lag=lead_lag, lam1=lam1, lam2=lam2)
+    approx = features is not None or error_budget is not None
     kw = dict(transforms=cfg, grid=g, static_kernel=kernel,
-              backend=backend, row_block=row_block, use_pallas=use_pallas)
-    if _use_streaming(streaming, row_block):
+              backend=backend, row_block=row_block, use_pallas=use_pallas,
+              features=features, error_budget=error_budget)
+    if _use_streaming(streaming, row_block, approx):
         rkw = dict(kw, check_streaming=True)
         sxx_sum = sigkernel_gram_reduce(X, lengths=lengths,
                                         include_diag=not unbiased, **rkw)
@@ -117,6 +128,7 @@ def scoring_rule(X: jax.Array, y: jax.Array, *, transforms=None, grid=None,
                  row_block: Optional[int] = None,
                  streaming: Optional[bool] = None,
                  lengths=None, length_y=None,
+                 features=None, error_budget=None,
                  lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
                  use_pallas=UNSET) -> jax.Array:
     """Sig-kernel score  E[k(X,X')]/2 − E[k(X,y)]  for one observation y (L, d).
@@ -128,6 +140,8 @@ def scoring_rule(X: jax.Array, y: jax.Array, *, transforms=None, grid=None,
     gives the observation's true point count.  ``streaming=`` streams both
     terms as per-block partial sums exactly as in :func:`mmd2` (auto-on when
     ``row_block=`` is set) — the (B, B) ensemble Gram never exists.
+    ``features=`` / ``error_budget=`` activate the approximate feature-map
+    backends (streaming by default), as in :func:`mmd2`.
     """
     b = X.shape[0]
     if b < 2:
@@ -137,10 +151,12 @@ def scoring_rule(X: jax.Array, y: jax.Array, *, transforms=None, grid=None,
     cfg, g, kernel = resolve_kernel_configs(
         transforms, grid, static_kernel, time_aug=time_aug,
         lead_lag=lead_lag, lam1=lam1, lam2=lam2)
+    approx = features is not None or error_budget is not None
     kw = dict(transforms=cfg, grid=g, static_kernel=kernel,
-              backend=backend, row_block=row_block, use_pallas=use_pallas)
+              backend=backend, row_block=row_block, use_pallas=use_pallas,
+              features=features, error_budget=error_budget)
     ly = None if length_y is None else jnp.reshape(length_y, (1,))
-    if _use_streaming(streaming, row_block):
+    if _use_streaming(streaming, row_block, approx):
         rkw = dict(kw, check_streaming=True)
         exx_sum = sigkernel_gram_reduce(X, lengths=lengths,
                                         include_diag=False, **rkw)
@@ -158,6 +174,7 @@ def sig_aux_loss(hidden: jax.Array, target: jax.Array, *, proj: jax.Array,
                  backend: str = "auto", row_block: Optional[int] = None,
                  streaming: Optional[bool] = None,
                  lengths=None, lengths_target=None,
+                 features=None, error_budget=None,
                  lam1=UNSET, lam2=UNSET, time_aug=UNSET, lead_lag=UNSET,
                  use_pallas=UNSET) -> jax.Array:
     """Auxiliary sig-kernel loss between a model's hidden trajectory and a
@@ -170,8 +187,10 @@ def sig_aux_loss(hidden: jax.Array, target: jax.Array, *, proj: jax.Array,
     packed batches of variable-length sequences.  The legacy
     ``time_aug=``/``lead_lag=`` bools are accepted as the same deprecated
     aliases its siblings :func:`mmd2`/:func:`scoring_rule` take (one
-    DeprecationWarning per call-site, identical results).  ``streaming=``
-    passes through to :func:`mmd2`.
+    DeprecationWarning per call-site, identical results).  ``streaming=``,
+    ``features=`` and ``error_budget=`` pass through to :func:`mmd2` — an
+    active approximation makes the auxiliary loss O(B·rank), which is what
+    lets it ride along every training step of a large model.
     """
     cfg, g, kernel = resolve_kernel_configs(
         transforms, grid, static_kernel, time_aug=time_aug,
@@ -182,4 +201,5 @@ def sig_aux_loss(hidden: jax.Array, target: jax.Array, *, proj: jax.Array,
     return mmd2(path, target, transforms=cfg, grid=g, static_kernel=kernel,
                 unbiased=False, backend=backend, row_block=row_block,
                 streaming=streaming, lengths=lengths,
-                lengths_y=lengths_target, use_pallas=use_pallas)
+                lengths_y=lengths_target, features=features,
+                error_budget=error_budget, use_pallas=use_pallas)

@@ -332,8 +332,6 @@ def solve_goursat_grad_pde_approx(delta: jax.Array, grid: jax.Array,
     rev = delta[..., ::-1, ::-1]
     g_grid = solve_goursat(rev, lam1, lam2, return_grid=True)[..., ::-1, ::-1]
     scale = 2.0 ** (-(lam1 + lam2))
-    p = delta * scale
-    rep = functools.partial(jnp.repeat, axis=-1)
     # cell (s,t) refined values of k̂ and adjoint
     Lx, Ly = delta.shape[-2:]
 

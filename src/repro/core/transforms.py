@@ -208,7 +208,6 @@ def time_augment(path: jax.Array, t0: float = 0.0, t1: float = 1.0,
 
 def lead_lag(path: jax.Array) -> jax.Array:
     """X^LL_{t_i} = (X^Lead_{t_i}, X^Lag_{t_i}) ∈ R^{2d}, length 2L-1."""
-    L = path.shape[-2]
     rep = jnp.repeat(path, 2, axis=-2)              # x0 x0 x1 x1 ... (2L)
     leadc = rep[..., 1:, :]                          # lead: x0 x1 x1 x2 x2 ... (2L-1)
     lagc = rep[..., :-1, :]                          # lag:  x0 x0 x1 x1 x2 ... (2L-1)

@@ -58,8 +58,8 @@ def horner_kernel(z_ref, out_ref, a_ref, *, d: int, depth: int, LB: int,
         """Tensor product with a level-1 increment: contiguous in this layout."""
         return (a[:, None, :] * z[None, :, :]).reshape(-1, BT)
 
-    def step(l, carry):
-        z = z_ref[0, l]                                   # (d, BT)
+    def step(li, carry):
+        z = z_ref[0, li]                                  # (d, BT)
         # --- Horner's scheme (paper Alg 2), levels updated in reverse ---
         for k in range(depth, 1, -1):
             B = z / float(k)

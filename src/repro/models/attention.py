@@ -88,7 +88,7 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     qs = (q / math.sqrt(D)).astype(q.dtype).reshape(B, S, KV, G, D)
 
     def step(carry, j):
-        m, l, acc = carry
+        m, lsum, acc = carry
         kj = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, axis=1)
         vj = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=1)
         pj = jax.lax.dynamic_slice_in_dim(kv_pos, j * chunk, chunk, axis=0)
@@ -104,7 +104,7 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         m_new = jnp.maximum(m, s.max(axis=-1))
         corr = jnp.exp(m - m_new)
         p_ = jnp.exp(s - m_new[..., None])
-        l_new = l * corr + p_.sum(axis=-1)
+        l_new = lsum * corr + p_.sum(axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bskgc,bckd->bskgd", p_.astype(v.dtype), vj,
             preferred_element_type=jnp.float32)
@@ -113,8 +113,9 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     m0 = jnp.full((B, S, KV, G), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, S, KV, G), jnp.float32)
     a0 = jnp.zeros((B, S, KV, G, D), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_chunks))
-    out = acc / jnp.maximum(l[..., None], 1e-30)
+    (m, lsum, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                     jnp.arange(n_chunks))
+    out = acc / jnp.maximum(lsum[..., None], 1e-30)
     return out.reshape(B, S, H, D).astype(q.dtype)
 
 
@@ -171,7 +172,6 @@ def decode_attention(p, x, cache: Dict, cur_len: jax.Array, *,
     a ring buffer indexed cur_len % window.
     """
     dt = x.dtype
-    pos = cur_len[None] if cur_len.ndim == 0 else cur_len
     q, k, v = qkv(p, x, jnp.reshape(cur_len, (1,)), rope_theta)
     if window:
         slot = (cur_len % window).astype(jnp.int32)

@@ -9,7 +9,7 @@ sigmoid gate (Qwen-MoE) and fine-grained routed experts (DBRX).
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,1 +1,4 @@
 from .api import shard, logical_rules, resolve, DEFAULT_RULES, MULTIPOD_RULES
+
+__all__ = ["shard", "logical_rules", "resolve", "DEFAULT_RULES",
+           "MULTIPOD_RULES"]

@@ -10,7 +10,7 @@ mechanism that makes all ten archs shardable with one rule table.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

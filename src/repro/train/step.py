@@ -8,7 +8,6 @@ across microbatches via lax.scan; AdamW updates the sharded master copy.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,8 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.optim.compression import (quantize_int8, dequantize,
-                                     init_error_feedback)
+from repro.optim.compression import quantize_int8, dequantize
 
 jax.config.update("jax_platform_name", "cpu")
 

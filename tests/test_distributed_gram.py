@@ -41,8 +41,8 @@ jax.config.update("jax_platform_name", "cpu")
 TOL = dict(rtol=1e-4, atol=1e-6)
 
 
-def _paths(key, b, l, d, scale=0.3):
-    return jax.random.normal(jax.random.PRNGKey(key), (b, l, d)) * scale
+def _paths(key, b, L, d, scale=0.3):
+    return jax.random.normal(jax.random.PRNGKey(key), (b, L, d)) * scale
 
 
 # ---------------------------------------------------------------------------
@@ -129,9 +129,9 @@ def test_sig_aux_loss_streaming_passthrough():
 # property sweep: streaming == dense oracle across the config lattice
 # ---------------------------------------------------------------------------
 
-def _sweep_case(bx, by, l, rb, backend, rbf, symmetric, ragged):
+def _sweep_case(bx, by, L, rb, backend, rbf, symmetric, ragged):
     """Streaming reduce == dense Gram sum (value AND grad) for one config."""
-    X = _paths(bx * 100 + l, bx, l, 2)
+    X = _paths(bx * 100 + L, bx, L, 2)
     kw = dict(backend=backend, grid=GridConfig(0, 0))
     if rbf:
         kw["static_kernel"] = RBF(sigma=1.2)
@@ -139,17 +139,17 @@ def _sweep_case(bx, by, l, rb, backend, rbf, symmetric, ragged):
         args, lkw = (X,), {}
         if ragged:
             lkw["lengths"] = jnp.asarray(
-                [2 + (i * 3) % (l - 1) for i in range(bx)])
+                [2 + (i * 3) % (L - 1) for i in range(bx)])
         K = np.asarray(repro.sigkernel_gram(*args, **lkw, **kw))
         tot = K.sum()
     else:
-        Y = _paths(by * 100 + l + 1, by, l, 2)
+        Y = _paths(by * 100 + L + 1, by, L, 2)
         args, lkw = (X, Y), {}
         if ragged:
             lkw["lengths"] = jnp.asarray(
-                [2 + (i * 3) % (l - 1) for i in range(bx)])
+                [2 + (i * 3) % (L - 1) for i in range(bx)])
             lkw["lengths_y"] = jnp.asarray(
-                [2 + (i * 2) % (l - 1) for i in range(by)])
+                [2 + (i * 2) % (L - 1) for i in range(by)])
         K = np.asarray(repro.sigkernel_gram(*args, **lkw, **kw))
         tot = K.sum()
 
@@ -166,16 +166,16 @@ def _sweep_case(bx, by, l, rb, backend, rbf, symmetric, ragged):
 
 
 # fixed lattice corners so the contract is exercised even without hypothesis
-@pytest.mark.parametrize("bx,by,l,rb,backend,rbf,symmetric,ragged", [
+@pytest.mark.parametrize("bx,by,L,rb,backend,rbf,symmetric,ragged", [
     (5, 4, 9, 2, "reference", False, False, False),
     (6, 3, 8, 1, "reference", False, True, False),
     (7, 5, 9, 2, "antidiag", False, False, True),
     (5, 4, 10, 3, "reference", True, True, True),
     (4, 6, 7, 1, "antidiag", True, False, False),
 ])
-def test_streaming_sweep_fixed(bx, by, l, rb, backend, rbf, symmetric,
+def test_streaming_sweep_fixed(bx, by, L, rb, backend, rbf, symmetric,
                                ragged):
-    _sweep_case(bx, by, l, rb, backend, rbf, symmetric, ragged)
+    _sweep_case(bx, by, L, rb, backend, rbf, symmetric, ragged)
 
 
 if HAVE_HYPOTHESIS:
@@ -184,16 +184,16 @@ if HAVE_HYPOTHESIS:
     @given(
         bx=st.integers(3, 7),
         by=st.integers(2, 6),
-        l=st.integers(6, 11),
+        L=st.integers(6, 11),
         rb=st.integers(1, 3),
         backend=st.sampled_from(["reference", "antidiag"]),
         rbf=st.booleans(),
         symmetric=st.booleans(),
         ragged=st.booleans(),
     )
-    def test_streaming_property_sweep(bx, by, l, rb, backend, rbf,
+    def test_streaming_property_sweep(bx, by, L, rb, backend, rbf,
                                       symmetric, ragged):
-        _sweep_case(bx, by, l, rb, backend, rbf, symmetric, ragged)
+        _sweep_case(bx, by, L, rb, backend, rbf, symmetric, ragged)
 
 
 # ---------------------------------------------------------------------------

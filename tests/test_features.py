@@ -1,0 +1,392 @@
+"""Approximate sig-kernel feature maps (repro.core.features) and their
+first-class dispatch integration: accuracy against the exact engine (values
+AND grads, linear + RBF lifts, ragged), the O(B·rank) streaming guarantee,
+the capability-flag rejection contract, key-leaf reproducibility, and the
+autotune accuracy-vs-speed frontier (budget lookup + cache-key separation
+from exact winners)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.bench import autotune
+from repro.core import dispatch, losses
+from repro.core.config import RBF
+from repro.core.gram import (StreamingViolation, sigkernel_gram,
+                             sigkernel_gram_reduce)
+from repro.core.features import FeatureConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _paths(seed, b, n, d, scale=0.3):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, n, d)) * scale
+
+
+def _rel(a, b):
+    return float(jnp.linalg.norm(jnp.asarray(a) - jnp.asarray(b))
+                 / jnp.linalg.norm(jnp.asarray(b)))
+
+
+B, L, D = 4, 9, 2
+X = _paths(0, B, L, D)
+Y = _paths(1, B + 1, L, D)
+
+
+# ---------------------------------------------------------------------------
+# config object
+# ---------------------------------------------------------------------------
+
+def test_feature_config_validation():
+    with pytest.raises(ValueError, match="method"):
+        FeatureConfig(method="svd")
+    with pytest.raises(ValueError, match="rank"):
+        FeatureConfig(rank=0)
+    with pytest.raises(ValueError, match="depth"):
+        FeatureConfig(depth=True)  # bools are not shape ints
+    with pytest.raises(TypeError, match="FeatureConfig"):
+        sigkernel_gram(X, Y, features={"method": "rff"})
+
+
+def test_feature_config_is_pytree():
+    f = FeatureConfig("rff", rank=8, key=jax.random.PRNGKey(3))
+    leaves, treedef = jax.tree_util.tree_flatten(f)
+    f2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert f2 == f
+    # method/rank are static metadata: two methods get two treedefs
+    g = FeatureConfig("nystroem", rank=8, key=jax.random.PRNGKey(3))
+    assert jax.tree_util.tree_structure(g) != treedef
+
+
+def test_feature_config_in_jit_and_sigkernel_class():
+    f = FeatureConfig("rff", rank=64)
+    sk = repro.SigKernel(features=f)
+    K = jax.jit(sk.gram)(X)
+    assert K.shape == (B, B)
+    assert np.isfinite(np.asarray(K)).all()
+
+
+# ---------------------------------------------------------------------------
+# accuracy against the exact engine (the configured-budget contract)
+# ---------------------------------------------------------------------------
+
+def test_rff_gram_matches_exact_linear():
+    Ke = sigkernel_gram(X, Y, symmetric=False)
+    f = FeatureConfig("rff", rank=256)
+    Ka = sigkernel_gram(X, Y, symmetric=False, features=f)
+    assert _rel(Ka, Ke) < 0.1
+    ge = jax.grad(lambda q: sigkernel_gram(q, Y, symmetric=False).sum())(X)
+    ga = jax.grad(lambda q: sigkernel_gram(
+        q, Y, symmetric=False, features=f).sum())(X)
+    assert np.isfinite(np.asarray(ga)).all()
+    # grads are exact autodiff of the estimator; vs the exact kernel they
+    # carry the depth-truncation + Monte-Carlo error, hence the loose band
+    assert _rel(ga, ge) < 0.6
+
+
+def test_rff_gram_matches_exact_rbf_lift():
+    kern = RBF(sigma=1.0)
+    Ke = sigkernel_gram(X, Y, symmetric=False, static_kernel=kern)
+    f = FeatureConfig("rff", rank=256, lift_dim=128)
+    Ka = sigkernel_gram(X, Y, symmetric=False, static_kernel=kern,
+                        features=f)
+    assert _rel(Ka, Ke) < 0.15
+    ga = jax.grad(lambda q: sigkernel_gram(
+        q, Y, symmetric=False, static_kernel=kern, features=f).sum())(X)
+    assert np.isfinite(np.asarray(ga)).all()
+
+
+def test_rff_sigma_hyperparameter_is_differentiable():
+    f = FeatureConfig("rff", rank=64)
+    def loss(sigma):
+        return sigkernel_gram(X, Y, symmetric=False,
+                              static_kernel=RBF(sigma=sigma),
+                              features=f).sum()
+    g = jax.grad(loss)(1.0)
+    assert np.isfinite(float(g)) and float(g) != 0.0
+
+
+def test_nystroem_full_rank_reproduces_exact():
+    Ke = sigkernel_gram(X, Y, symmetric=False)
+    f = FeatureConfig("nystroem", rank=B + 1)  # pool covers the batch
+    Ka = sigkernel_gram(X, Y, symmetric=False, features=f)
+    assert _rel(Ka, Ke) < 1e-3
+    ge = jax.grad(lambda q: sigkernel_gram(q, Y, symmetric=False).sum())(X)
+    ga = jax.grad(lambda q: sigkernel_gram(
+        q, Y, symmetric=False, features=f).sum())(X)
+    assert _rel(ga, ge) < 1e-3
+
+
+def test_ragged_lengths_through_features():
+    lx = jnp.asarray([5, 9, 7, 6])
+    ly = jnp.asarray([9, 4, 8, 6, 7])
+    Ke = sigkernel_gram(X, Y, symmetric=False, lengths=lx, lengths_y=ly)
+    f = FeatureConfig("rff", rank=256)
+    Ka = sigkernel_gram(X, Y, symmetric=False, lengths=lx, lengths_y=ly,
+                        features=f)
+    assert _rel(Ka, Ke) < 0.15
+    # padding content must be invisible: poison the padded tail
+    Xp = X.at[:, -2:, :].set(jnp.nan)
+    lx2 = jnp.asarray([5, 7, 7, 6])
+    Ka1 = sigkernel_gram(X, Y, symmetric=False, lengths=lx2, lengths_y=ly,
+                         features=f)
+    Ka2 = sigkernel_gram(Xp, Y, symmetric=False, lengths=lx2, lengths_y=ly,
+                         features=f)
+    np.testing.assert_allclose(np.asarray(Ka1), np.asarray(Ka2))
+
+
+# ---------------------------------------------------------------------------
+# solve accounting + the O(B·rank) streaming guarantee
+# ---------------------------------------------------------------------------
+
+def test_rff_issues_zero_pde_solves():
+    with dispatch.count_pair_solves() as c:
+        sigkernel_gram(X, Y, symmetric=False,
+                       features=FeatureConfig("rff", rank=32))
+    assert c.total == 0
+
+
+def test_nystroem_solve_budget_is_pool_plus_rows():
+    f = FeatureConfig("nystroem", rank=2)  # pool = 4*rank = 8
+    Xb = _paths(2, 12, 8, 2)
+    Yb = _paths(3, 10, 8, 2)
+    pool, rank = 8, 2
+    with dispatch.count_pair_solves() as c:
+        sigkernel_gram(Xb, Yb, symmetric=False, features=f)
+    assert c.total == pool * pool + 12 * rank + 10 * rank
+
+
+def test_reduce_matches_dense_feature_gram():
+    f = FeatureConfig("rff", rank=64)
+    K = np.asarray(sigkernel_gram(X, features=f))
+    s = sigkernel_gram_reduce(X, features=f)
+    np.testing.assert_allclose(float(s), K.sum(), rtol=1e-4)
+    s_nd = sigkernel_gram_reduce(X, features=f, include_diag=False)
+    np.testing.assert_allclose(float(s_nd), K.sum() - np.trace(K),
+                               rtol=1e-4)
+    Kxy = np.asarray(sigkernel_gram(X, Y, symmetric=False, features=f))
+    sxy = sigkernel_gram_reduce(X, Y, features=f)
+    np.testing.assert_allclose(float(sxy), Kxy.sum(), rtol=1e-4)
+
+
+def test_streaming_guard_accepts_feature_path():
+    # B > pool so even the nystroem pool Gram stays below (B, B)
+    Xb = _paths(4, 12, 8, 2)
+    for f in (FeatureConfig("rff", rank=16),
+              FeatureConfig("nystroem", rank=2)):  # pool = 8 < 12
+        sigkernel_gram_reduce(Xb, features=f, check_streaming=True)
+        jax.grad(lambda q: sigkernel_gram_reduce(
+            q, features=f, check_streaming=True))(Xb)
+
+
+def test_mmd2_through_features_streams_by_default():
+    # no row_block: an active approximation auto-enables streaming, and the
+    # guard (value AND grad) proves no (B, B) Gram is materialised
+    Xb, Yb = _paths(5, 12, 8, 2), _paths(6, 11, 8, 2)
+    f = FeatureConfig("rff", rank=16)
+    v = losses.mmd2(Xb, Yb, features=f)
+    dense = losses.mmd2(Xb, Yb, features=f, streaming=False)
+    np.testing.assert_allclose(float(v), float(dense), rtol=1e-4,
+                               atol=1e-6)
+    g = jax.grad(lambda q: losses.mmd2(q, Yb, features=f))(Xb)
+    assert np.isfinite(np.asarray(g)).all()
+    sr = losses.scoring_rule(Xb, Yb[0], features=f)
+    assert np.isfinite(float(sr))
+
+
+def test_sig_aux_loss_features_passthrough():
+    H, T = _paths(7, 4, 8, 6), _paths(8, 4, 8, 2)
+    proj = jax.random.normal(jax.random.PRNGKey(9), (6, 2)) * 0.3
+    f = FeatureConfig("rff", rank=64)
+    v = losses.sig_aux_loss(H, T, proj=proj, features=f)
+    assert np.isfinite(float(v))
+
+
+# ---------------------------------------------------------------------------
+# capability-flag rejection (the dispatch contract)
+# ---------------------------------------------------------------------------
+
+def test_explicit_approx_backend_refused_without_opt_in():
+    for name in ("rff", "nystroem"):
+        with pytest.raises(ValueError, match="approximate=True"):
+            dispatch.resolve(name, op="gram")
+        with pytest.raises(ValueError, match="approximate=True"):
+            sigkernel_gram(X, Y, backend=name, symmetric=False)
+        with pytest.raises(ValueError, match="approximate=True"):
+            losses.mmd2(X, Y, backend=name)
+    # the error must name an exact escape hatch
+    with pytest.raises(ValueError, match="reference"):
+        dispatch.resolve("rff", op="gram")
+
+
+def test_explicit_approx_backend_allowed_with_opt_in():
+    assert dispatch.resolve("rff", op="gram",
+                            allow_approximate=True) == "rff"
+    K = sigkernel_gram(X, Y, backend="rff", symmetric=False,
+                       features=FeatureConfig("rff", rank=32))
+    assert K.shape == (B, B + 1)
+    # an approximate backend name + error_budget also opts in (default
+    # rank when the frontier cache is cold)
+    K2 = sigkernel_gram(X, Y, backend="nystroem", symmetric=False,
+                        error_budget=0.5)
+    assert K2.shape == (B, B + 1)
+
+
+def test_features_backend_conflict_raises():
+    with pytest.raises(ValueError, match="conflicts"):
+        sigkernel_gram(X, Y, symmetric=False, backend="antidiag",
+                       features=FeatureConfig("rff"))
+    with pytest.raises(ValueError, match="conflicts"):
+        sigkernel_gram(X, Y, symmetric=False, backend="rff",
+                       features=FeatureConfig("nystroem"))
+
+
+def test_auto_never_picks_approx_without_budget():
+    # cold cache or warm: plain auto must resolve exact
+    name = dispatch.resolve("auto", op="gram", shape=(4, 4, 8, 8, 2),
+                            dtype="float32")
+    assert not dispatch.get(name).approximate
+
+
+# ---------------------------------------------------------------------------
+# key-leaf reproducibility
+# ---------------------------------------------------------------------------
+
+def test_feature_key_reproducibility():
+    f0 = FeatureConfig("rff", rank=64)  # key=None -> PRNGKey(0)
+    fk = FeatureConfig("rff", rank=64, key=jax.random.PRNGKey(0))
+    f7 = FeatureConfig("rff", rank=64, key=jax.random.PRNGKey(7))
+    K0 = sigkernel_gram(X, Y, symmetric=False, features=f0)
+    Kk = sigkernel_gram(X, Y, symmetric=False, features=fk)
+    K7 = sigkernel_gram(X, Y, symmetric=False, features=f7)
+    np.testing.assert_array_equal(np.asarray(K0), np.asarray(Kk))
+    assert _rel(K7, K0) > 1e-4  # different key, different estimator
+    # and the same key twice is bitwise-stable
+    np.testing.assert_array_equal(
+        np.asarray(sigkernel_gram(X, Y, symmetric=False, features=f7)),
+        np.asarray(K7))
+
+
+# ---------------------------------------------------------------------------
+# autotune frontier: cache-key separation + budget lookup round-trip
+# ---------------------------------------------------------------------------
+
+SHAPE = (4, 4, 8, 8, 2)
+
+
+def _write_cache(path, entries):
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"schema": autotune.SCHEMA, "entries": entries}, fh)
+    autotune.invalidate_memo()
+
+
+def test_cache_key_separates_approx_from_exact():
+    exact = autotune.cache_key("gram", SHAPE)
+    approx = autotune.cache_key("gram", SHAPE, approx=True)
+    ragged_approx = autotune.cache_key("gram", SHAPE, ragged=True,
+                                       approx=True)
+    assert approx == exact + "|approx"
+    assert ragged_approx == exact + "|ragged|approx"
+    assert len({exact, approx, ragged_approx}) == 3
+
+
+def test_budget_lookup_round_trip(tmp_path, monkeypatch):
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.ENV_CACHE, str(cache))
+    monkeypatch.delenv(autotune.ENV_DISABLE, raising=False)
+    # no machine stamp: hand-written caches are accepted (cf. lookup_launch)
+    _write_cache(str(cache), {
+        autotune.cache_key("gram", SHAPE, approx=True): {
+            "exact_seconds": 1.0,
+            "frontier": [
+                {"backend": "rff", "rank": 8, "rel_err": 0.30,
+                 "seconds": 0.01},
+                {"backend": "rff", "rank": 64, "rel_err": 0.05,
+                 "seconds": 0.05},
+                {"backend": "nystroem", "rank": 16, "rel_err": 0.02,
+                 "seconds": 0.20},
+                {"backend": "nystroem", "rank": 99, "rel_err": 0.001,
+                 "seconds": 5.0},  # accurate but slower than exact: never
+            ],
+        },
+    })
+    # cheapest point fitting each budget wins
+    assert autotune.lookup_budget("gram", SHAPE, "float32", 0.5) == \
+        ("rff", 8)
+    assert autotune.lookup_budget("gram", SHAPE, "float32", 0.1) == \
+        ("rff", 64)
+    assert autotune.lookup_budget("gram", SHAPE, "float32", 0.03) == \
+        ("nystroem", 16)
+    # tighter than every qualifying point -> None (exact engine)
+    assert autotune.lookup_budget("gram", SHAPE, "float32", 0.0005) is None
+    assert autotune.lookup_budget("gram", SHAPE, "float32", None) is None
+    # dispatch.resolve_approx validates against the live registry
+    assert dispatch.resolve_approx("gram", SHAPE, "float32",
+                                   error_budget=0.5) == ("rff", 8)
+
+
+def test_budget_lookup_drops_foreign_machine_stamp(tmp_path, monkeypatch):
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.ENV_CACHE, str(cache))
+    _write_cache(str(cache), {
+        autotune.cache_key("gram", SHAPE, approx=True): {
+            "exact_seconds": 1.0,
+            "machine": "someone-elses-box",
+            "frontier": [{"backend": "rff", "rank": 8, "rel_err": 0.01,
+                          "seconds": 0.01}],
+        },
+    })
+    assert autotune.lookup_budget("gram", SHAPE, "float32", 0.5) is None
+
+
+def test_budgeted_auto_uses_frontier_and_skips_pde(tmp_path, monkeypatch):
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.ENV_CACHE, str(cache))
+    key_shape = (B, B + 1, L - 1, L - 1, D)  # what the engine will compute
+    _write_cache(str(cache), {
+        autotune.cache_key("gram", key_shape, approx=True): {
+            "exact_seconds": 1.0,
+            "frontier": [{"backend": "rff", "rank": 16, "rel_err": 0.05,
+                          "seconds": 0.01}],
+        },
+    })
+    with dispatch.count_pair_solves() as c:
+        K = sigkernel_gram(X, Y, error_budget=0.1)  # backend="auto"
+    assert c.total == 0  # the rff frontier point won: no PDE solves
+    assert K.shape == (B, B + 1)
+    # a budget tighter than the frontier falls back to the exact engine
+    with dispatch.count_pair_solves() as c2:
+        sigkernel_gram(X, Y, error_budget=1e-6)
+    assert c2.total == (B) * (B + 1)
+
+
+def test_exact_winner_slot_never_returns_approx(tmp_path, monkeypatch):
+    # a (corrupt/stale) EXACT cache entry naming an approximate backend must
+    # degrade to the heuristics, not leak an approximation into exact auto
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.ENV_CACHE, str(cache))
+    _write_cache(str(cache), {
+        autotune.cache_key("gram", SHAPE): {"backend": "rff"},
+    })
+    name = dispatch.resolve("auto", op="gram", shape=SHAPE,
+                            dtype="float32")
+    assert not dispatch.get(name).approximate
+
+
+def test_tune_frontier_rejects_non_gram_ops():
+    with pytest.raises(ValueError, match="gram"):
+        autotune.tune_frontier("sigkernel", (8, 8, 2))
+
+
+def test_guard_rejects_dense_feature_free_path():
+    # sanity: the guard infrastructure still fires on a genuinely dense
+    # reduction, so the feature-path acceptances above mean something
+    Xb = _paths(10, 6, 7, 2)
+    with pytest.raises(StreamingViolation):
+        from repro.core import gram as gram_mod
+        gram_mod.assert_streaming_reduction(
+            lambda q: sigkernel_gram(q).sum(), Xb, gram_shape=(6, 6))

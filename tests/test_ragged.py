@@ -105,7 +105,9 @@ def test_sigkernel_matches_truncated_oracle_bitwise(backend):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("backend", dispatch.backends_for("gram"))
+@pytest.mark.parametrize("backend", [
+    b for b in dispatch.backends_for("gram")
+    if not dispatch.get(b).approximate])
 def test_gram_matches_truncated_oracle(backend):
     cfg = PIPELINES["time_aug"]
     K = sigkernel_gram(XP, YP, backend=backend, transforms=cfg,
