@@ -14,6 +14,10 @@ The blessed public surface (API v1, see docs/api/public.md):
   :func:`sigkernel`, :func:`sigkernel_gram`, :func:`mmd2`,
   :func:`scoring_rule` for one-off calls; ``repro.core`` holds the full
   implementation surface.
+* **Streaming** — :class:`Path` (per-prefix signature store: O(1)
+  interval queries, incremental ``update()``) with :class:`RollingConfig`;
+  ``repro.stream`` holds the engine and ``repro.serve`` the
+  admission-batched feature server built on it.
 """
 
 from .api import LogSignature, SigKernel, Signature
@@ -27,7 +31,9 @@ from .core.losses import mmd2, scoring_rule
 from .core.signature import signature
 from .core.sigkernel import sigkernel
 from .core.transforms import bucket_length, pad_ragged
+from .stream import Path, RollingConfig
 from . import core
+from . import stream
 
 __version__ = "0.2.0"
 
@@ -41,9 +47,11 @@ __all__ = [
     "signature", "logsignature", "sigkernel", "sigkernel_gram",
     "sigkernel_gram_reduce", "sigkernel_gram_sharded",
     "mmd2", "scoring_rule",
+    # streaming engine (docs/api/public.md, "Streaming paths & serving")
+    "Path", "RollingConfig",
     # ragged-batch helpers (pre-jit canonicalisation; docs/api/public.md)
     "pad_ragged", "bucket_length",
     # namespaces
-    "core",
+    "core", "stream",
     "__version__",
 ]

@@ -766,3 +766,59 @@ def autotune_auto(mode: str = "smoke", repeats: int = 2) -> List[dict]:
         entries.append(_chk(f"autotune_{op}_winner", f"winner={winner}",
                             op=op))
     return entries
+
+
+# ---------------------------------------------------------------------------
+# streaming Path engine — incremental append+query vs full recompute
+# ---------------------------------------------------------------------------
+
+_PATH_CELLS = {
+    "smoke": [(64, 3, 3)],
+    "quick": [(256, 4, 4)],
+    "full": [(1024, 4, 5), (4096, 3, 4)],
+}
+
+
+def path_update(mode: str = "smoke", repeats: int = 3) -> List[dict]:
+    """Streaming serving pattern: one-tick append + full-signature query.
+
+    ``incremental`` is the ``repro.Path`` engine (O(chunk) scan + one Chen
+    combine against the prefix store); ``full_recompute`` is what serving
+    had to do before this subsystem existed — re-scan all L+1 points per
+    tick.  The agreement entry pins the two to each other.  The timed
+    appends run at a pre-grown capacity so they exercise the steady-state
+    warm trace, never the (rare, bounded) growth retrace.
+    """
+    from repro.stream import Path
+
+    entries = []
+    for (L, d, N) in _PATH_CELLS[_check_mode(mode)]:
+        pts = _paths(0, 1, L, d, 0.2)[0]
+        tick = _paths(1, 1, 1, d, 0.2)[0]
+        tag = f"path_update_L{L}_d{d}_N{N}"
+        meta = dict(op="path_update", L=L, d=d, depth=N)
+
+        base = Path.from_points(pts, N).update(tick)   # pre-grow + warm
+
+        def append_query(p, t):
+            return p.update(t).signature()
+
+        t_inc = timer.bench(append_query, base, tick, repeats=repeats)
+        entries.append(_t(f"{tag}_incremental", t_inc, **meta))
+
+        full = jnp.concatenate([pts, tick, tick])
+        f_full = jax.jit(lambda pp: signature(pp, N, backend="reference"))
+        t_full = timer.bench(f_full, full, repeats=repeats)
+        entries.append(_t(
+            f"{tag}_full_recompute", t_full,
+            f"speedup_incremental={t_full / t_inc:.2f}x",
+            _fn=f_full, _args=(full,), **meta))
+
+        got = append_query(base, tick)
+        want = f_full(full)
+        denom = max(float(jnp.abs(want).max()), 1e-30)
+        rel = float(jnp.abs(got - want).max()) / denom
+        entries.append(_acc(f"{tag}_agreement", rel,
+                            "incremental vs full recompute", **meta))
+        assert rel < 5e-5, f"Path incremental drifted from recompute: {rel}"
+    return entries

@@ -414,38 +414,80 @@ def resolve_approx(op: str, shape=None, dtype=None, *,
 
 
 # ---------------------------------------------------------------------------
-# pair-solve accounting (used by tests / the benchmark smoke job to verify
-# the symmetric-Gram fast path really does ~half the PDE solves)
+# op accounting (used by tests / the benchmark smoke job to verify the
+# symmetric-Gram fast path really does ~half the PDE solves, and by the
+# streaming Path engine to prove interval queries never re-scan a path)
 # ---------------------------------------------------------------------------
 
 _count_state = threading.local()
 
 
-class count_pair_solves:
-    """Context manager counting PDE pair-solves issued at *trace* time.
+class _op_counter:
+    """Context manager counting one op kind issued at *trace* time.
 
-    The engine reports the batch size it hands to each solver call (including
-    any padding), so ``with count_pair_solves() as c: ...; c.total`` is the
-    number of Goursat problems solved.  Counts are per-thread and only
-    reflect traces executed inside the context (jit cache hits recompute
-    nothing and therefore count nothing — call on fresh shapes).
+    Counts are per-thread and only reflect traces executed inside the
+    context (jit cache hits recompute nothing and therefore count nothing —
+    call on fresh shapes).
     """
+
+    _slot: str = ""
 
     def __init__(self):
         self.total = 0
 
     def __enter__(self):
-        self._prev = getattr(_count_state, "active", None)
-        _count_state.active = self
+        self._prev = getattr(_count_state, self._slot, None)
+        setattr(_count_state, self._slot, self)
         return self
 
     def __exit__(self, *exc):
-        _count_state.active = self._prev
+        setattr(_count_state, self._slot, self._prev)
         return False
+
+
+def _record(slot: str, n: int) -> None:
+    active = getattr(_count_state, slot, None)
+    if active is not None:
+        active.total += int(n)
+
+
+class count_pair_solves(_op_counter):
+    """Counts PDE pair-solves: the engine reports the batch size it hands to
+    each solver call (including any padding), so ``with count_pair_solves()
+    as c: ...; c.total`` is the number of Goursat problems solved."""
+
+    _slot = "pair"
+
+
+class count_scan_steps(_op_counter):
+    """Counts signature Horner-scan steps (one per increment folded).
+
+    ``repro.core.signature`` reports the increment-stream length of every
+    scan it traces, so ``c.total`` is how many path increments were
+    re-processed — the quantity the streaming ``repro.Path`` engine drives
+    to zero for interval queries and to O(chunk) for ``update()``.
+    """
+
+    _slot = "scan"
+
+
+class count_combines(_op_counter):
+    """Counts Chen combines issued by the streaming ``repro.Path`` engine
+    (one per interval query; O(chunk) per ``update``)."""
+
+    _slot = "combine"
 
 
 def record_pair_solves(n: int) -> None:
     """Report ``n`` PDE pair-solves to the active counter (no-op otherwise)."""
-    active = getattr(_count_state, "active", None)
-    if active is not None:
-        active.total += int(n)
+    _record("pair", n)
+
+
+def record_scan_steps(n: int) -> None:
+    """Report ``n`` Horner-scan steps to the active counter."""
+    _record("scan", n)
+
+
+def record_combines(n: int) -> None:
+    """Report ``n`` Chen combines to the active counter."""
+    _record("combine", n)

@@ -109,6 +109,8 @@ def _horner_step(levels: List[jax.Array], z: jax.Array, depth: int) -> List[jax.
 
 def _signature_scan(z: jax.Array, d: int, depth: int, step_fn) -> jax.Array:
     """Scan a per-step update over the increment stream z (..., L-1, d)."""
+    from .dispatch import record_scan_steps
+    record_scan_steps(z.shape[-2])
     batch_shape = z.shape[:-2]
     init = [jnp.zeros((*batch_shape, s), dtype=z.dtype) for s in ta.level_sizes(d, depth)]
     zs = jnp.moveaxis(z, -2, 0)             # (L-1, ..., d) for scan
@@ -245,6 +247,8 @@ def signature(path: jax.Array, depth: int, *, transforms=None,
 
 def _signature_stream_from_increments(z: jax.Array, depth: int) -> jax.Array:
     """All prefix signatures: (..., L-1, sig_dim). Differentiable via scan."""
+    from .dispatch import record_scan_steps
+    record_scan_steps(z.shape[-2])
     d = z.shape[-1]
     batch_shape = z.shape[:-2]
     init = [jnp.zeros((*batch_shape, s), dtype=z.dtype) for s in ta.level_sizes(d, depth)]

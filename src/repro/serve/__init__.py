@@ -1,0 +1,11 @@
+"""Serving loops: the signature-feature server and LM decode steps.
+
+:mod:`repro.serve.sig_server` is the streaming-signature serving loop
+(admission-batched appends over :class:`repro.Path` streams);
+:mod:`repro.serve.step` holds the LM prefill/decode step builders used by
+``examples/serve_lm.py``.
+"""
+
+from .sig_server import SigFeatureServer  # noqa: F401
+
+__all__ = ["SigFeatureServer"]

@@ -1,0 +1,267 @@
+"""A signature-feature server for concurrently growing streams.
+
+:class:`SigFeatureServer` keeps one :class:`repro.Path` per named stream
+and turns the tick-by-tick serving pattern into bounded-retrace batched
+work:
+
+* **appends are admitted, not applied** — ``append(name, points)`` only
+  queues the chunk; ``flush()`` coalesces every pending append across all
+  streams into as few batched kernel calls as possible
+  (:func:`repro.stream.coalesced_update`), grouping streams by
+  ``(capacity, chunk bucket)`` and padding each group to a power-of-two
+  size with no-op members, so the number of distinct jit traces stays
+  bounded in the stream count, the chunk sizes *and* the group sizes;
+* **queries are O(1)** — ``signature`` / ``logsignature`` / ``rolling``
+  are Chen combines against each stream's prefix store, never re-scans;
+* **feature extraction is config-driven** — ``features(name, ...)`` runs
+  the server's :class:`repro.FeatureConfig` (``method="rff"``) over the
+  requested window of raw points, honouring the server's
+  :class:`repro.TransformPipeline` and static kernel exactly like the
+  offline Gram entry points;
+* **caches can be pre-warmed** — ``warmup()`` traces the build/update
+  kernels for the buckets the steady state will hit, so the first real
+  tick is served from a warm cache.
+
+The server is an eager orchestrator: all heavy lifting happens inside the
+stream module's jitted kernels, and ``stats()`` exposes the admission
+counters (plus the jit-trace counters) that the serving example turns into
+a latency/throughput report.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import transforms as tf
+from ..core.config import Linear, TransformPipeline
+from ..core.features import FeatureConfig, resolve_features, rff_features
+from ..stream import path as stream_path
+from ..stream.path import Path, RollingConfig, coalesced_update
+
+#: jitted feature map shared by every server instance: the FeatureConfig /
+#: TransformPipeline / kernel arguments are pytrees whose knobs are static
+#: metadata, so one trace per (window shape, config structure) serves all
+#: requests — online features stay bitwise the offline ``rff_features``
+_rff_jit = jax.jit(rff_features)
+
+
+class SigFeatureServer:
+    """Serve signature features over named, concurrently growing streams.
+
+    Args:
+      depth: signature truncation depth shared by every stream.
+      transforms: optional :class:`repro.TransformPipeline` (lead-lag only —
+        the streaming restriction of :class:`repro.Path`).
+      features: optional :class:`repro.FeatureConfig` enabling
+        :meth:`features`.  Only ``method="rff"`` can be served online;
+        Nystroem needs landmark PDE solves against a reference batch, which
+        is an offline construction — it is rejected at server build time.
+      static_kernel: static kernel of the feature lift (default
+        :class:`repro.Linear`).
+    """
+
+    def __init__(self, depth: int, *,
+                 transforms: Optional[TransformPipeline] = None,
+                 features: Optional[FeatureConfig] = None,
+                 static_kernel=None):
+        self.depth = depth
+        self.transforms = transforms if transforms is not None \
+            else TransformPipeline()
+        feats = resolve_features(features)
+        if feats is not None and feats.method != "rff":
+            raise ValueError(
+                f"SigFeatureServer can only serve method='rff' features "
+                f"online (got {feats.method!r}): Nystroem landmarks are "
+                f"fit against an offline reference batch — precompute "
+                f"those features with repro.sig_kernel_gram instead")
+        self.features_config = feats
+        self.static_kernel = static_kernel if static_kernel is not None \
+            else Linear()
+        self._streams: Dict[str, Path] = {}
+        self._pending: Dict[str, List[jnp.ndarray]] = {}
+        self._stats = {
+            "streams": 0, "points_appended": 0, "flushes": 0,
+            "update_groups": 0, "solo_updates": 0, "coalesced_streams": 0,
+            "queries": 0, "feature_requests": 0,
+        }
+
+    # -- stream lifecycle ----------------------------------------------------
+
+    def open_stream(self, name: str, points) -> Path:
+        """Open stream ``name`` with its initial points (L ≥ 2 rows)."""
+        if name in self._streams:
+            raise ValueError(f"stream {name!r} already open")
+        p = Path.from_points(jnp.asarray(points), self.depth,
+                             transforms=self.transforms)
+        if p.points.ndim != 2:
+            raise ValueError(
+                f"streams are single paths: expected (L, d) initial "
+                f"points, got shape {tuple(p.points.shape)}")
+        self._streams[name] = p
+        self._stats["streams"] += 1
+        return p
+
+    def close_stream(self, name: str) -> None:
+        self._require(name)
+        self._streams.pop(name)
+        self._pending.pop(name, None)
+        self._stats["streams"] -= 1
+
+    def path(self, name: str) -> Path:
+        """The stream's current :class:`repro.Path` (pending appends excluded)."""
+        return self._require(name)
+
+    def _require(self, name: str) -> Path:
+        if name not in self._streams:
+            raise KeyError(
+                f"unknown stream {name!r}; open it with open_stream() "
+                f"(open: {sorted(self._streams)})")
+        return self._streams[name]
+
+    # -- admission batching --------------------------------------------------
+
+    def append(self, name: str, points) -> None:
+        """Queue new points for ``name``; applied at the next :meth:`flush`."""
+        self._require(name)
+        pts = jnp.asarray(points)
+        if pts.ndim == 1:                      # a single tick: (d,)
+            pts = pts[None, :]
+        if pts.ndim != 2 or pts.shape[-1] != self._streams[name].d:
+            raise ValueError(
+                f"append expects (k, {self._streams[name].d}) points for "
+                f"stream {name!r}, got shape {tuple(pts.shape)}")
+        self._pending.setdefault(name, []).append(pts)
+        self._stats["points_appended"] += int(pts.shape[0])
+
+    def flush(self) -> int:
+        """Apply all pending appends in coalesced batched kernel calls.
+
+        Streams are grouped by ``(buffer capacity, chunk bucket)``; each
+        group becomes ONE batched update (padded to a power-of-two group
+        size), so a thousand single-tick streams cost a handful of traces
+        and one kernel launch per (capacity, bucket) pair.  Streams whose
+        buffers must grow first are updated solo (growth is a bounded,
+        logarithmically-rare event).  Returns the number of streams
+        updated.
+        """
+        if not self._pending:
+            return 0
+        groups: Dict[Tuple[int, int], List[Tuple[str, jnp.ndarray]]] = {}
+        solo: List[Tuple[str, jnp.ndarray]] = []
+        for name, chunks in self._pending.items():
+            chunk = chunks[0] if len(chunks) == 1 \
+                else jnp.concatenate(chunks, axis=0)
+            p = self._streams[name]
+            kc = tf.bucket_length(chunk.shape[0], minimum=1)
+            if len(p) + kc > p.capacity:
+                solo.append((name, chunk))     # needs growth: solo update
+            else:
+                key = (p.capacity, kc)
+                groups.setdefault(key, []).append((name, chunk))
+        n = 0
+        for _, members in sorted(groups.items()):
+            paths = [self._streams[name] for name, _ in members]
+            updated = coalesced_update(paths, [c for _, c in members])
+            for (name, _), new_path in zip(members, updated):
+                self._streams[name] = new_path
+            n += len(members)
+            self._stats["update_groups"] += 1
+            self._stats["coalesced_streams"] += len(members)
+        for name, chunk in solo:
+            self._streams[name] = self._streams[name].update(chunk)
+            n += 1
+            self._stats["solo_updates"] += 1
+        self._pending.clear()
+        self._stats["flushes"] += 1
+        return n
+
+    # -- queries -------------------------------------------------------------
+
+    def signature(self, name: str, i: int = 0, j: Optional[int] = None):
+        """Signature of ``stream[i:j]`` — one Chen combine (see Path)."""
+        self._stats["queries"] += 1
+        return self._require(name).signature(i, j)
+
+    def logsignature(self, name: str, i: int = 0, j: Optional[int] = None,
+                     *, mode: str = "lyndon"):
+        self._stats["queries"] += 1
+        return self._require(name).logsignature(i, j, mode=mode)
+
+    def rolling(self, name: str, window, *, stride: int = 1):
+        self._stats["queries"] += 1
+        return self._require(name).rolling(window, stride=stride)
+
+    def features(self, name: str, window: Optional[int] = None):
+        """RFF signature features of the stream's last ``window`` points.
+
+        ``window=None`` uses the whole stream.  Runs the server's
+        :class:`repro.FeatureConfig` over the raw points (transform +
+        static-kernel lift + projection scan), exactly as the offline
+        ``features=`` path of the Gram entry points — so online features
+        are drop-in consistent with offline training features.
+        """
+        if self.features_config is None:
+            raise ValueError(
+                "this server has no FeatureConfig; pass features= to "
+                "SigFeatureServer to serve feature vectors")
+        p = self._require(name)
+        L = len(p)
+        if window is None:
+            window = L
+        if not (2 <= window <= L):
+            raise ValueError(
+                f"features window must be in [2, {L}] for stream "
+                f"{name!r}, got {window}")
+        self._stats["feature_requests"] += 1
+        pts = jax.lax.dynamic_slice_in_dim(p.points, L - window, window,
+                                           axis=-2)
+        return _rff_jit(pts[None], self.features_config,
+                        self.transforms, self.static_kernel)[0]
+
+    # -- cache warmup & stats ------------------------------------------------
+
+    def warmup(self, lengths=(8, 16), chunk_sizes=(1,),
+               group_sizes=(1,)) -> float:
+        """Trace the build/update kernels for the given buckets up front.
+
+        Steady-state serving then hits only warm jit traces (verified by
+        ``stats()['trace_counts']`` staying flat).  Returns the wall time
+        spent warming, in seconds.
+        """
+        t0 = time.perf_counter()
+        for L in lengths:
+            C = tf.bucket_length(L)
+            for g in group_sizes:
+                gb = tf.bucket_length(g, minimum=1)
+                for k in chunk_sizes:
+                    kc = tf.bucket_length(k, minimum=1)
+                    if C < kc + 2:
+                        continue
+                    pts = jnp.linspace(0.0, 1.0, C)[:, None] \
+                        * jnp.ones((1, self._warmup_d()))
+                    batch = jnp.broadcast_to(pts, (gb, *pts.shape))
+                    p = Path.from_points(batch, self.depth,
+                                         transforms=self.transforms)
+                    chunk = jnp.broadcast_to(pts[:kc], (gb, kc, pts.shape[-1]))
+                    stream_path._update_kernel(
+                        p.points, p.prefix, p.inv_prefix,
+                        jnp.full((gb,), C - kc, jnp.int32), chunk,
+                        jnp.full((gb,), k, jnp.int32), depth=self.depth,
+                        lead_lag=self.transforms.lead_lag)
+        return time.perf_counter() - t0
+
+    def _warmup_d(self) -> int:
+        if self._streams:
+            return next(iter(self._streams.values())).d
+        return 2
+
+    def stats(self) -> dict:
+        """Admission/query counters plus the stream jit-trace counters."""
+        out = dict(self._stats)
+        out["pending_streams"] = len(self._pending)
+        out["trace_counts"] = stream_path.trace_counts()
+        return out

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 from repro.train.step import cast_compute
 
 
-def make_prefill_step(model, max_len: int = None):
+def make_prefill_step(model, max_len: int | None = None):
     """max_len: static decode-cache capacity (defaults to the prompt length)."""
     cdt = jnp.dtype(model.cfg.compute_dtype)
 
@@ -20,14 +20,38 @@ def make_prefill_step(model, max_len: int = None):
     return prefill_step
 
 
-def make_decode_step(model, *, greedy: bool = True):
+def make_decode_step(model, *, greedy: bool = True, temperature: float = 1.0):
+    """Build a one-token decode step.
+
+    ``greedy=True`` (default) argmaxes the last-position logits and the step
+    is ``decode_step(params, caches, tokens, cur_len)``.  ``greedy=False``
+    samples from ``softmax(logits / temperature)`` instead, and the step
+    takes a trailing PRNG key: ``decode_step(params, caches, tokens,
+    cur_len, key)``.
+    """
     cdt = jnp.dtype(model.cfg.compute_dtype)
 
-    def decode_step(params, caches, tokens, cur_len):
-        """tokens: (B, 1) current tokens; returns (next_tokens, logits, caches)."""
+    if greedy:
+        def decode_step(params, caches, tokens, cur_len):
+            """tokens: (B, 1) current tokens; returns (next_tokens, logits, caches)."""
+            logits, caches = model.decode(cast_compute(params, cdt), caches,
+                                          tokens, cur_len)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+            return nxt, logits, caches
+
+        return decode_step
+
+    if temperature <= 0:
+        raise ValueError(
+            f"sampling (greedy=False) needs temperature > 0, got "
+            f"{temperature}; use greedy=True for argmax decoding")
+
+    def decode_step(params, caches, tokens, cur_len, key):
+        """tokens: (B, 1); key: PRNG key; returns (next_tokens, logits, caches)."""
         logits, caches = model.decode(cast_compute(params, cdt), caches,
                                       tokens, cur_len)
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
-        return nxt, logits, caches
+        scaled = logits[:, -1, :] / jnp.asarray(temperature, logits.dtype)
+        nxt = jax.random.categorical(key, scaled, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], logits, caches
 
     return decode_step

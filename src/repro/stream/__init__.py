@@ -1,0 +1,24 @@
+"""Streaming signature engine: growing paths with O(1) interval queries.
+
+``repro.stream`` holds the online half of the library: a Signatory-style
+:class:`Path` whose per-prefix signature store turns every interval query
+into a single Chen combine and every append into an O(chunk) extension,
+plus the coalesced-update primitive the serving loop
+(:mod:`repro.serve.sig_server`) batches concurrent streams through.
+"""
+
+from .path import (  # noqa: F401
+    Path,
+    RollingConfig,
+    coalesced_update,
+    reset_trace_counts,
+    trace_counts,
+)
+
+__all__ = [
+    "Path",
+    "RollingConfig",
+    "coalesced_update",
+    "reset_trace_counts",
+    "trace_counts",
+]

@@ -1,0 +1,243 @@
+"""SigFeatureServer: admission batching, query modes, decode-step sampling.
+
+The server contract: appends queue until ``flush()``, which coalesces all
+pending appends into one batched kernel call per (capacity, chunk-bucket)
+group — results identical to per-stream updates, kernel invocations far
+fewer, jit traces bounded.  Queries and features must match the offline
+entry points on the equivalent fully-materialised path.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import TransformPipeline
+from repro.core.features import FeatureConfig, rff_features
+from repro.core.signature import signature
+from repro.serve import SigFeatureServer
+from repro.serve.step import make_decode_step
+from repro.stream import trace_counts
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _pts(seed, *shape, scale=0.3):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+def _server_with_streams(n=4, depth=3, d=2, **kw):
+    srv = SigFeatureServer(depth, **kw)
+    data = {}
+    for s in range(n):
+        pts = _pts(100 + s, 9 + s, d)
+        data[f"s{s}"] = pts
+        srv.open_stream(f"s{s}", pts)
+    return srv, data
+
+
+# ---------------------------------------------------------------------------
+# admission batching
+# ---------------------------------------------------------------------------
+
+def test_flush_coalesces_and_matches_recompute():
+    srv, data = _server_with_streams()
+    ticks = {name: _pts(200 + i, 1, 2)
+             for i, name in enumerate(data)}
+    for name, t in ticks.items():
+        srv.append(name, t)
+    assert srv.flush() == len(data)
+    st = srv.stats()
+    # all four same-capacity streams coalesced into ONE batched update
+    assert st["update_groups"] == 1 and st["coalesced_streams"] == 4
+    assert st["solo_updates"] == 0
+    for name in data:
+        full = jnp.concatenate([data[name], ticks[name]])
+        np.testing.assert_allclose(
+            srv.signature(name), signature(full, 3, backend="reference"),
+            rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+def test_steady_state_has_bounded_traces():
+    srv, data = _server_with_streams(n=3, d=4, depth=2)
+    # first flush pays the (capacity, chunk-bucket, group-bucket) traces
+    for name in data:
+        srv.append(name, _pts(300, 1, 4))
+    srv.flush()
+    before = trace_counts()
+    for step in range(4):
+        for name in data:
+            srv.append(name, _pts(301 + step, 1, 4))
+        srv.flush()
+    assert trace_counts() == before, \
+        "steady-state flushes retraced a kernel"
+
+
+def test_multiple_appends_per_stream_concatenate():
+    srv, data = _server_with_streams(n=1)
+    a, b = _pts(400, 2, 2), _pts(401, 3, 2)
+    srv.append("s0", a)
+    srv.append("s0", b)
+    srv.flush()
+    full = jnp.concatenate([data["s0"], a, b])
+    assert len(srv.path("s0")) == full.shape[0]
+    np.testing.assert_allclose(
+        srv.signature("s0"), signature(full, 3, backend="reference"),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_growth_routes_solo_and_stays_correct():
+    srv, data = _server_with_streams(n=2)
+    big = _pts(500, 20, 2)               # overflows the 16-point capacity
+    srv.append("s0", big)
+    srv.append("s1", _pts(501, 1, 2))
+    srv.flush()
+    st = srv.stats()
+    assert st["solo_updates"] == 1       # the growing stream went solo
+    full = jnp.concatenate([data["s0"], big])
+    np.testing.assert_allclose(
+        srv.signature("s0"), signature(full, 3, backend="reference"),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_single_tick_accepts_1d_points():
+    srv, data = _server_with_streams(n=1)
+    srv.append("s0", jnp.asarray([0.1, -0.2]))     # (d,) one tick
+    srv.flush()
+    assert len(srv.path("s0")) == data["s0"].shape[0] + 1
+
+
+# ---------------------------------------------------------------------------
+# queries & features
+# ---------------------------------------------------------------------------
+
+def test_query_modes_match_offline():
+    tp = TransformPipeline(lead_lag=True)
+    srv = SigFeatureServer(2, transforms=tp)
+    pts = _pts(600, 12, 2)
+    srv.open_stream("x", pts)
+    np.testing.assert_allclose(
+        srv.signature("x", 3, 9),
+        signature(pts[3:9], 2, transforms=tp, backend="reference"),
+        rtol=1e-4, atol=1e-5)
+    from repro.core.logsignature import logsignature
+    np.testing.assert_allclose(
+        srv.logsignature("x", 0, 7),
+        logsignature(pts[:7], 2, transforms=tp, backend="reference"),
+        rtol=1e-6, atol=1e-7)
+    roll = srv.rolling("x", 4, stride=2)
+    assert roll.shape[0] == 5
+    np.testing.assert_allclose(
+        roll[2], signature(pts[4:8], 2, transforms=tp,
+                           backend="reference"),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_features_match_offline_rff():
+    feats = FeatureConfig(method="rff", rank=8, depth=2)
+    srv = SigFeatureServer(2, features=feats)
+    pts = _pts(601, 10, 3)
+    srv.open_stream("x", pts)
+    got = srv.features("x", window=6)
+    want = rff_features(pts[-6:][None], feats, srv.transforms,
+                        srv.static_kernel)[0]
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+    # whole-stream features by default
+    got_full = srv.features("x")
+    want_full = rff_features(pts[None], feats, srv.transforms,
+                             srv.static_kernel)[0]
+    np.testing.assert_allclose(got_full, want_full, rtol=1e-6, atol=1e-7)
+
+
+def test_server_validation():
+    with pytest.raises(ValueError, match="rff"):
+        SigFeatureServer(2, features=FeatureConfig(method="nystroem",
+                                                   rank=4))
+    srv = SigFeatureServer(2)
+    with pytest.raises(KeyError, match="unknown stream"):
+        srv.signature("nope")
+    pts = _pts(700, 8, 2)
+    srv.open_stream("x", pts)
+    with pytest.raises(ValueError, match="already open"):
+        srv.open_stream("x", pts)
+    with pytest.raises(ValueError, match="no FeatureConfig"):
+        srv.features("x")
+    srv.close_stream("x")
+    with pytest.raises(KeyError, match="unknown stream"):
+        srv.append("x", pts[:1])
+    srv2 = SigFeatureServer(2,
+                            features=FeatureConfig(method="rff", rank=4))
+    srv2.open_stream("y", pts)
+    with pytest.raises(ValueError, match="window"):
+        srv2.features("y", window=100)
+
+
+def test_warmup_bounds_first_tick_traces():
+    srv = SigFeatureServer(2)
+    srv.open_stream("a", _pts(800, 10, 2))
+    srv.open_stream("b", _pts(801, 12, 2))
+    srv.warmup(lengths=(16,), chunk_sizes=(1,), group_sizes=(2,))
+    before = trace_counts()
+    srv.append("a", _pts(802, 1, 2))
+    srv.append("b", _pts(803, 1, 2))
+    srv.flush()
+    assert trace_counts()["update"] == before["update"], \
+        "warmup missed the steady-state update trace"
+
+
+# ---------------------------------------------------------------------------
+# decode-step satellite: greedy flag honoured
+# ---------------------------------------------------------------------------
+
+class _StubCfg:
+    compute_dtype = "float32"
+
+
+class _StubModel:
+    """Minimal model: decode() returns fixed per-vocab logits."""
+
+    cfg = _StubCfg()
+
+    def __init__(self, logits):
+        self._logits = jnp.asarray(logits, jnp.float32)
+
+    def decode(self, params, caches, tokens, cur_len):
+        B = tokens.shape[0]
+        out = jnp.broadcast_to(self._logits[None, None, :],
+                               (B, 1, self._logits.shape[0]))
+        return out, caches
+
+
+def test_decode_step_greedy_argmaxes():
+    model = _StubModel([0.0, 3.0, -1.0, 1.0])
+    step = make_decode_step(model)                # greedy by default
+    nxt, logits, caches = step({}, None, jnp.zeros((2, 1), jnp.int32), 0)
+    assert nxt.shape == (2, 1) and nxt.dtype == jnp.int32
+    assert np.all(np.asarray(nxt) == 1)
+
+
+def test_decode_step_sampling_honours_greedy_flag():
+    # peaked logits: sampling must agree with argmax almost surely
+    model = _StubModel([0.0, 50.0, -1.0, 1.0])
+    step = make_decode_step(model, greedy=False)
+    nxt, _, _ = step({}, None, jnp.zeros((3, 1), jnp.int32), 0,
+                     jax.random.PRNGKey(0))
+    assert np.all(np.asarray(nxt) == 1)
+    # uniform logits: different keys must produce different draws
+    model = _StubModel([0.0, 0.0, 0.0, 0.0])
+    step = make_decode_step(model, greedy=False)
+    draws = {int(step({}, None, jnp.zeros((1, 1), jnp.int32), 0,
+                      jax.random.PRNGKey(k))[0][0, 0])
+             for k in range(12)}
+    assert len(draws) > 1, "sampling ignored the PRNG key"
+
+
+def test_decode_step_temperature_validation():
+    model = _StubModel([0.0, 1.0])
+    with pytest.raises(ValueError, match="temperature"):
+        make_decode_step(model, greedy=False, temperature=0.0)
+    # temperature is sampling-only; the greedy branch ignores it
+    step = make_decode_step(model, greedy=True, temperature=0.0)
+    nxt, _, _ = step({}, None, jnp.zeros((1, 1), jnp.int32), 0)
+    assert int(nxt[0, 0]) == 1
