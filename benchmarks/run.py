@@ -7,7 +7,7 @@ docs/benchmarks.md).  This stub keeps old command lines working:
     PYTHONPATH=src python -m benchmarks.run [--full] [--repeats N]
 
 now runs the suite and writes ``BENCH_quick.json`` / ``BENCH_full.json``
-(``BENCH_PR9.json`` with ``--smoke``) exactly like ``python -m
+(``BENCH_PR10.json`` with ``--smoke``) exactly like ``python -m
 repro.bench`` with the same flags.
 """
 

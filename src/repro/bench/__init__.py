@@ -17,14 +17,14 @@ first-class, *recorded* artifact instead of a side effect:
     Achieved vs. peak FLOPs/bandwidth attribution for every bench entry
     (HLO-derived counts via :mod:`repro.launch.hlo_analysis` where cheap,
     analytic per-op models otherwise).  CLI:
-    ``python -m repro.bench.roofline BENCH_PR9.json``.
+    ``python -m repro.bench.roofline BENCH_PR10.json``.
 ``workloads``
     The paper-aligned workload cells (signature Table 1, sig-kernel Table 2
     + Gram rows, log-signature Table 3, §3.4 gradient accuracy) at smoke /
     quick / full sizes, plus the CI smoke checks.
 ``suite``
     Runs a set of workloads and emits a schema-versioned BENCH JSON
-    (``BENCH_PR9.json`` at the repo root is the committed baseline) and a
+    (``BENCH_PR10.json`` at the repo root is the committed baseline) and a
     markdown summary.  CLI: ``python -m repro.bench [--smoke|--full]``.
 ``compare``
     Diffs two BENCH JSONs with machine-speed normalisation and per-entry

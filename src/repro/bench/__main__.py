@@ -1,7 +1,7 @@
 """Benchmark suite CLI.
 
     PYTHONPATH=src python -m repro.bench [--smoke | --quick | --full]
-                                         [--repeats N] [--out BENCH_PR9.json]
+                                         [--repeats N] [--out BENCH_PR10.json]
                                          [--md PATH]
 
 Runs the paper-aligned workloads (signature Table 1, sig-kernel + Gram
@@ -37,7 +37,7 @@ def main(argv=None) -> int:
                          "5 full; paper methodology is 50)")
     ap.add_argument("--out", default=None,
                     help="output JSON path, or '-' to skip writing "
-                         "(default: BENCH_PR9.json in --smoke mode — the "
+                         "(default: BENCH_PR10.json in --smoke mode — the "
                          "committed CI baseline — else BENCH_<mode>.json)")
     ap.add_argument("--md", default=None,
                     help="also write the markdown summary to this path")
@@ -51,7 +51,7 @@ def main(argv=None) -> int:
         # only smoke mode may touch the committed baseline by default —
         # quick/full documents have a different entry set and would poison
         # the CI compare job if committed accidentally
-        args.out = "BENCH_PR9.json" if mode == "smoke" \
+        args.out = "BENCH_PR10.json" if mode == "smoke" \
             else f"BENCH_{mode}.json"
     doc = suite.run_suite(mode, repeats=args.repeats,
                           progress=lambda m: print(m, file=sys.stderr))

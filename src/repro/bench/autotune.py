@@ -60,7 +60,10 @@ import jax.numpy as jnp
 from repro.core import dispatch
 from . import timer
 
-SCHEMA = 2  # v2: entries gain "launch" / "launch_timings" / "machine"
+SCHEMA = 3  # v3: scheme-frontier entries ("|scheme" keys, "scheme_frontier");
+#             v2 added "launch" / "launch_timings" / "machine".  Old files
+#             fail open (treated as cold — _entries checks the version), so
+#             a schema bump costs one re-tune, never an error.
 
 ENV_DISABLE = "REPRO_DISABLE_AUTOTUNE"
 ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
@@ -117,8 +120,8 @@ def key_shape(op: str, shape) -> Tuple[int, ...]:
 
 
 def cache_key(op: str, shape, dtype="float32", *, ragged: bool = False,
-              approx: bool = False) -> str:
-    """``op|platform|dtype|b1xb2x...[|ragged][|approx]`` — the on-disk key.
+              approx: bool = False, scheme: bool = False) -> str:
+    """``op|platform|dtype|b1xb2x...[|ragged][|approx|scheme]`` on-disk key.
 
     ``ragged=True`` (variable-length ``lengths=`` workloads) is part of the
     key: the same padded shape does very different work when most of it is
@@ -130,13 +133,25 @@ def cache_key(op: str, shape, dtype="float32", *, ragged: bool = False,
     a different question than exact-winner entries ("cheapest within a
     caller error budget" vs "fastest exact"), so they live under their own
     suffix and neither lookup can ever shadow the other.
+
+    ``scheme=True`` keys the *discretisation* frontier
+    (:func:`tune_scheme_frontier`): measured (scheme, coarsen,
+    interior_dtype) points of the exact engine.  Same separation argument —
+    it answers "cheapest exact discretisation within a budget", a third
+    question with its own suffix.  ``approx`` and ``scheme`` are mutually
+    exclusive.
     """
+    if approx and scheme:
+        raise ValueError("cache_key: approx and scheme are separate "
+                         "frontiers — pass at most one")
     dims = "x".join(str(s) for s in key_shape(op, shape))
     key = f"{op}|{jax.default_backend()}|{jnp.dtype(dtype).name}|{dims}"
     if ragged:
         key += "|ragged"
     if approx:
         key += "|approx"
+    if scheme:
+        key += "|scheme"
     return key
 
 
@@ -197,16 +212,18 @@ def _store(key: str, entry: dict) -> None:
 
 
 def cache_entry(op: str, shape, dtype="float32", *, ragged: bool = False,
-                approx: bool = False) -> Optional[dict]:
+                approx: bool = False, scheme: bool = False) -> Optional[dict]:
     """Full cached record (backend, timings, tuned_at) or None.
 
-    ``approx=True`` reads the frontier entry (:func:`tune_frontier`) for
-    the same problem instead of the exact-winner entry.
+    ``approx=True`` reads the feature-map frontier entry
+    (:func:`tune_frontier`), ``scheme=True`` the discretisation frontier
+    (:func:`tune_scheme_frontier`), instead of the exact-winner entry.
     """
     if not enabled():
         return None
     entry = _entries(cache_path()).get(
-        cache_key(op, shape, dtype, ragged=ragged, approx=approx))
+        cache_key(op, shape, dtype, ragged=ragged, approx=approx,
+                  scheme=scheme))
     return entry if isinstance(entry, dict) else None
 
 
@@ -607,3 +624,147 @@ def lookup_budget(op: str, shape, dtype="float32", error_budget=None, *,
                 best is None or secs < best[2]):
             best = (name, rank, secs)
     return None if best is None else (best[0], best[1])
+
+
+# ---------------------------------------------------------------------------
+# discretisation frontier (scheme × grid coarseness × interior precision)
+# ---------------------------------------------------------------------------
+
+#: every non-default discretisation point the scheme frontier measures:
+#: (scheme, coarsen, interior_dtype).  ``coarsen=1`` halves the PDE grid
+#: (one dyadic level / a stride-2 path subsample) — the order-2 stencil's
+#: selling point is matching order-1 accuracy on the coarser grid at ~1/4
+#: the cells; bf16 interiors compose with either scheme.  The identity
+#: point (order1, 0, float32) IS the baseline and is never listed.
+_SCHEME_POINTS = tuple(
+    (s, c, dt)
+    for s in ("order1", "order2") for c in (0, 1)
+    for dt in ("float32", "bfloat16")
+    if (s, c, dt) != ("order1", 0, "float32"))
+
+
+def tune_scheme_frontier(op: str, shape, dtype="float32", *,
+                         points=_SCHEME_POINTS, repeats: int = 3,
+                         warmup: int = 1, ragged: bool = False,
+                         force: bool = False) -> dict:
+    """Measure the (scheme, coarsen, interior_dtype) frontier; persist it.
+
+    The exact-engine sibling of :func:`tune_frontier`: every point still
+    solves the Goursat PDE — no feature maps — but with a different
+    discretisation.  For each point this measures steady-state seconds per
+    call and the relative Frobenius error against the order-1 fine-grid
+    f32 Gram at the bucketed key shape, plus that baseline's own wall
+    clock as the bar every point must beat.  ``coarsen=c`` is applied the
+    way the Gram engine will replay it (stride-``2^c`` path subsampling at
+    the default refinement; the engine prefers dropping dyadic levels when
+    the caller's ``GridConfig`` has them).  Coarsened points are skipped
+    for ragged keys — the engine cannot stride-subsample masked batches,
+    so measuring them would advertise a point the lookup can never serve.
+
+    Stored under the ``scheme=True`` cache key, machine-stamped.  Warm
+    keys return the stored entry with zero measurements unless
+    ``force=True``; with autotuning disabled the measurement still happens
+    but nothing is persisted.  A point that fails to run is skipped, never
+    raised — an absent point only makes :func:`lookup_scheme_budget` more
+    conservative.
+    """
+    from repro.core.config import GridConfig
+    from repro.core.gram import sigkernel_gram
+    if op != "gram":
+        raise ValueError(
+            f"scheme-frontier tuning only supports op='gram' (got {op!r}): "
+            "the budgeted discretisation swap lives in the Gram engine")
+    shape = key_shape(op, shape)
+    key = cache_key(op, shape, dtype, ragged=ragged, scheme=True)
+    if not force:
+        entry = _entries(cache_path()).get(key)
+        if isinstance(entry, dict) and isinstance(
+                entry.get("scheme_frontier"), list):
+            return entry
+    X, Y, lx, ly = _frontier_data(shape, dtype, ragged)
+    exact_backend = dispatch.resolve("auto", op="gram", shape=shape,
+                                     dtype=dtype, ragged=ragged)
+    f_exact = jax.jit(lambda a, b: sigkernel_gram(
+        a, b, backend=exact_backend, symmetric=False,
+        lengths=lx, lengths_y=ly))
+    exact_seconds = timer.bench(lambda: f_exact(X, Y), repeats=repeats,
+                                warmup=warmup)
+    K = f_exact(X, Y)
+    k_norm = max(float(jnp.linalg.norm(K)), 1e-30)
+    measured = []
+    for sch, coarsen, idt in points:
+        if ragged and coarsen:
+            continue
+        step = 1 << int(coarsen)
+        Xc, Yc = X[:, ::step], Y[:, ::step]
+        if Xc.shape[1] < 2 or Yc.shape[1] < 2:
+            continue
+        g = GridConfig(scheme=sch, interior_dtype=idt)
+        f = jax.jit(lambda a, b, gc=g: sigkernel_gram(
+            a, b, backend=exact_backend, symmetric=False, grid=gc,
+            lengths=lx, lengths_y=ly))
+        try:
+            Ka = jax.block_until_ready(f(Xc, Yc))
+            secs = timer.bench(lambda: f(Xc, Yc), repeats=repeats, warmup=0)
+        except Exception:
+            continue  # absent point = conservative, not fatal
+        rel = float(jnp.linalg.norm(Ka - K)) / k_norm
+        measured.append({"scheme": sch, "coarsen": int(coarsen),
+                         "interior_dtype": idt, "rel_err": rel,
+                         "seconds": secs})
+    entry = {
+        "scheme_frontier": measured,
+        "exact_backend": exact_backend,
+        "exact_seconds": exact_seconds,
+        "machine": timer.machine_key(),
+        "tuned_at": time.time(),
+        "repeats": repeats,
+    }
+    if enabled():
+        _store(key, entry)
+    return entry
+
+
+def lookup_scheme_budget(op: str, shape, dtype="float32", error_budget=None,
+                         *, ragged: bool = False
+                         ) -> Optional[Tuple[str, int, str]]:
+    """Cheapest measured discretisation fitting ``error_budget``, or None.
+
+    Never measures.  Returns ``(scheme, coarsen, interior_dtype)`` for the
+    fastest :func:`tune_scheme_frontier` point whose measured relative
+    error is ``<= error_budget`` *and* whose wall clock beat the order-1
+    fine-grid f32 baseline — a discretisation that is both less accurate
+    and slower has no reason to exist.  Fail-open on everything else,
+    including a foreign ``"machine"`` stamp (seconds do not travel;
+    stampless hand-written entries are accepted, as in
+    :func:`lookup_launch`).
+    """
+    if error_budget is None:
+        return None
+    budget = float(error_budget)
+    entry = cache_entry(op, shape, dtype, ragged=ragged, scheme=True)
+    if entry is None:
+        return None
+    stamp = entry.get("machine")
+    if isinstance(stamp, str) and stamp != timer.machine_key():
+        return None
+    points = entry.get("scheme_frontier")
+    exact_s = entry.get("exact_seconds")
+    if not isinstance(points, list) or not isinstance(exact_s, (int, float)):
+        return None
+    best = None
+    for p in points:
+        if not isinstance(p, dict):
+            continue
+        try:
+            sch = str(p["scheme"])
+            coarsen = int(p["coarsen"])
+            idt = str(p["interior_dtype"])
+            rel = float(p["rel_err"])
+            secs = float(p["seconds"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if rel <= budget and secs <= exact_s and (
+                best is None or secs < best[3]):
+            best = (sch, coarsen, idt, secs)
+    return None if best is None else (best[0], best[1], best[2])

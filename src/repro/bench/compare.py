@@ -4,7 +4,7 @@
         [--tolerance 2.5] [--no-normalize] [--allow-missing]
 
 Designed for the CI perf gate, where BASELINE is the committed
-``BENCH_PR9.json`` (possibly produced on a different machine) and NEW is a
+``BENCH_PR10.json`` (possibly produced on a different machine) and NEW is a
 fresh run of the same mode.  Rules:
 
 * Entries are matched by ``name``; a baseline entry missing from the new
@@ -140,7 +140,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.bench.compare",
         description="diff two BENCH JSONs; nonzero exit on regression")
-    ap.add_argument("baseline", help="committed BENCH json (e.g. BENCH_PR9.json)")
+    ap.add_argument("baseline", help="committed BENCH json (e.g. BENCH_PR10.json)")
     ap.add_argument("new", help="freshly produced BENCH json")
     ap.add_argument("--tolerance", type=float, default=2.5,
                     help="max normalized slowdown ratio (default 2.5)")

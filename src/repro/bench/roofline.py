@@ -28,7 +28,7 @@ be computed degrades to fewer keys, never to an exception, and
 
 CLI::
 
-    PYTHONPATH=src python -m repro.bench.roofline BENCH_PR9.json
+    PYTHONPATH=src python -m repro.bench.roofline BENCH_PR10.json
 
 prints a markdown summary table (the CI perf-smoke artifact) and exits 0
 even when entries carry no roofline data (older JSONs).

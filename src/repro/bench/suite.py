@@ -6,7 +6,7 @@ The JSON document (schema 1):
    "created_unix": float, "fingerprint": {...},  # timer.fingerprint()
    "entries": [ ... ]}                            # workloads entry dicts
 
-``BENCH_PR9.json`` at the repo root is the committed baseline, produced by
+``BENCH_PR10.json`` at the repo root is the committed baseline, produced by
 ``python -m repro.bench --smoke``; CI re-runs the same mode and gates on
 :mod:`repro.bench.compare`.  See docs/benchmarks.md.
 """
@@ -28,19 +28,22 @@ WORKLOAD_SETS: Dict[str, Tuple[Callable, ...]] = {
               workloads.autotune_auto, workloads.table1_signatures,
               workloads.table2_sigkernels, workloads.rbf_lift,
               workloads.ragged_gram, workloads.distributed_gram,
-              workloads.approx_frontier, workloads.path_update,
+              workloads.approx_frontier, workloads.scheme_frontier,
+              workloads.path_update,
               workloads.table3_logsignatures, workloads.grad_accuracy),
     "quick": (workloads.calibration, workloads.table1_signatures,
               workloads.table2_sigkernels, workloads.rbf_lift,
               workloads.ragged_gram, workloads.distributed_gram,
-              workloads.approx_frontier, workloads.path_update,
+              workloads.approx_frontier, workloads.scheme_frontier,
+              workloads.path_update,
               workloads.table3_logsignatures,
               workloads.fig1_truncation_sweep, workloads.fig2_length_sweep,
               workloads.grad_accuracy),
     "full": (workloads.calibration, workloads.table1_signatures,
              workloads.table2_sigkernels, workloads.rbf_lift,
              workloads.ragged_gram, workloads.distributed_gram,
-             workloads.approx_frontier, workloads.path_update,
+             workloads.approx_frontier, workloads.scheme_frontier,
+             workloads.path_update,
              workloads.table3_logsignatures,
              workloads.fig1_truncation_sweep, workloads.fig2_length_sweep,
              workloads.grad_accuracy),

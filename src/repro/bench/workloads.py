@@ -713,6 +713,83 @@ def approx_frontier(mode: str = "smoke", repeats: int = 3) -> List[dict]:
 
 
 # ---------------------------------------------------------------------------
+# discretisation frontier — scheme order × grid coarseness × interior
+# precision swept by autotune.tune_scheme_frontier: every point is the EXACT
+# engine under a different GridConfig, measured for wall clock and relative
+# Frobenius error against the order-1 fine-grid f32 baseline, then persisted
+# so backend="auto" + error_budget= can legally trade discretisation for
+# speed (dispatch.resolve_scheme)
+# ---------------------------------------------------------------------------
+
+#: gram key shape per mode, as autotune.cache_key documents it
+_SCHEME_CELLS = {
+    "smoke": (4, 4, 12, 12, 3),
+    "quick": (8, 8, 32, 32, 4),
+    "full": (16, 16, 128, 128, 8),
+}
+
+#: the PR acceptance budget: order-2 on the 2x-coarser grid must match the
+#: order-1 fine-grid Gram within this relative Frobenius error
+_SCHEME_COARSE_BUDGET = 0.05
+
+
+def scheme_frontier(mode: str = "smoke", repeats: int = 3) -> List[dict]:
+    """Frontier entries: one timed + one accuracy row per discretisation.
+
+    Timings are ``gate=False`` (fixed overheads dominate at bench shapes)
+    but the relative-error rows are gated: every point is deterministic
+    exact-engine arithmetic, so an error regression is a real math
+    regression.  The order-2 coarse-grid point additionally carries a hard
+    in-run budget assert — the scheme's selling point is matching order-1
+    accuracy at a quarter of the cells, and this is where that claim is
+    continuously measured.  The sweep persists the frontier (force=True),
+    arming :func:`repro.core.dispatch.resolve_scheme` for this shape
+    bucket on this machine.
+    """
+    shape = _SCHEME_CELLS[_check_mode(mode)]
+    entry = autotune.tune_scheme_frontier("gram", shape, repeats=repeats,
+                                          force=True)
+    bshape = autotune.key_shape("gram", shape)
+    meta = dict(op="gram", shape=list(bshape))
+    entries = [_t("scheme_frontier_exact", entry["exact_seconds"],
+                  f"backend={entry['exact_backend']}", gate=False, **meta)]
+    coarse_o2 = None
+    for p in entry["scheme_frontier"]:
+        dt = "bf16" if p["interior_dtype"] == "bfloat16" else "f32"
+        tag = f"scheme_frontier_{p['scheme']}_c{p['coarsen']}_{dt}"
+        entries.append(_t(
+            f"{tag}_time", p["seconds"],
+            f"vs_exact={entry['exact_seconds'] / p['seconds']:.2f}x",
+            gate=False, scheme=p["scheme"], coarsen=p["coarsen"],
+            interior_dtype=p["interior_dtype"], **meta))
+        entries.append(_acc(
+            f"{tag}_rel_err", p["rel_err"], f"rel_err={p['rel_err']:.2e}",
+            scheme=p["scheme"], coarsen=p["coarsen"],
+            interior_dtype=p["interior_dtype"], **meta))
+        if (p["scheme"], p["coarsen"], p["interior_dtype"]) == \
+                ("order2", 1, "float32"):
+            coarse_o2 = p
+    assert coarse_o2 is not None, "order2/coarsen=1/f32 point did not run"
+    assert coarse_o2["rel_err"] <= _SCHEME_COARSE_BUDGET, (
+        f"order-2 on the 2x-coarser grid misses the order-1 fine baseline "
+        f"by rel_err={coarse_o2['rel_err']:.2e} "
+        f"(budget {_SCHEME_COARSE_BUDGET})")
+    entries.append(_chk(
+        "scheme_frontier_order2_coarse_budget",
+        f"rel_err={coarse_o2['rel_err']:.2e}<={_SCHEME_COARSE_BUDGET}",
+        **meta))
+    # budget round-trip on the freshly-persisted frontier.  gate=False: at
+    # tiny shapes no point may beat the baseline's wall clock, and "None
+    # (order-1 fine wins)" is then the correct answer, not a regression.
+    found = autotune.lookup_scheme_budget("gram", shape, "float32",
+                                          _SCHEME_COARSE_BUDGET)
+    entries.append(_chk("scheme_frontier_budget_lookup",
+                        f"budget={_SCHEME_COARSE_BUDGET}->{found}",
+                        gate=False, **meta))
+    return entries
+
+
+# ---------------------------------------------------------------------------
 # autotune round-trip — tune the smoke shapes, then verify backend="auto"
 # with a warm cache is never slower than the worst fixed backend
 # ---------------------------------------------------------------------------

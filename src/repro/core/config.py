@@ -112,16 +112,42 @@ _pytree_dataclass(TransformPipeline, data_fields=("t0", "t1"),
 # GridConfig — dyadic refinement of the PDE grid
 # ---------------------------------------------------------------------------
 
+#: Goursat cell-update stencils the PDE backends implement
+#: (kernels/sigkernel_pde/stencil.py holds the shared coefficient sets).
+GRID_SCHEMES = ("order1", "order2")
+
+#: interior-cell storage precisions. "bfloat16" rounds every interior cell
+#: through bf16 after its update while the boundary of ones, carried
+#: boundary rows and the readout stay f32 (the mixed-precision contract —
+#: see docs/solver_guide.md, "Choosing a scheme order").
+GRID_INTERIOR_DTYPES = ("float32", "bfloat16")
+
+
 @dataclasses.dataclass(frozen=True)
 class GridConfig:
-    """Independent dyadic refinement orders (λ1, λ2) of the Goursat grid.
+    """Static Goursat-solver discretisation: grid refinement, stencil, dtype.
 
-    Static metadata: a refined grid has ``(Lx << lam1) · (Ly << lam2)``
-    cells, so these enter shapes and must be Python ints.
+    ``lam1``/``lam2`` are independent dyadic refinement orders (λ1, λ2): a
+    refined grid has ``(Lx << lam1) · (Ly << lam2)`` cells, so these enter
+    shapes and must be Python ints.
+
+    ``scheme`` selects the cell-update stencil: ``"order1"`` (the default —
+    bitwise-identical to the historical solvers) or ``"order2"``, which adds
+    an anti-diagonal curvature correction and typically reaches order-1
+    accuracy on a ~2× coarser grid (docs/solver_guide.md).
+
+    ``interior_dtype`` selects interior-cell storage precision:
+    ``"float32"`` (default) or ``"bfloat16"`` (interior cells rounded
+    through bf16 after each update; boundary and readout stay f32).
+
+    All four fields are **static** metadata (compile-time choices baked
+    into the kernels), hence pytree aux data.
     """
 
     lam1: int = 0
     lam2: int = 0
+    scheme: str = "order1"
+    interior_dtype: str = "float32"
 
     def __post_init__(self):
         for name in ("lam1", "lam2"):
@@ -130,13 +156,25 @@ class GridConfig:
                 raise ValueError(
                     f"GridConfig.{name} must be a non-negative Python int "
                     f"(it sets static grid shapes), got {v!r}")
+        if self.scheme not in GRID_SCHEMES:
+            raise ValueError(
+                f"GridConfig.scheme must be one of {GRID_SCHEMES} (the "
+                f"Goursat cell-update stencil, a static compile-time "
+                f"choice), got {self.scheme!r}")
+        if self.interior_dtype not in GRID_INTERIOR_DTYPES:
+            raise ValueError(
+                f"GridConfig.interior_dtype must be one of "
+                f"{GRID_INTERIOR_DTYPES} (interior-cell storage precision; "
+                f"boundary/readout always stay float32), "
+                f"got {self.interior_dtype!r}")
 
     @property
     def cells_scale(self) -> int:
         return 1 << (self.lam1 + self.lam2)
 
 
-_pytree_dataclass(GridConfig, data_fields=(), meta_fields=("lam1", "lam2"))
+_pytree_dataclass(GridConfig, data_fields=(),
+                  meta_fields=("lam1", "lam2", "scheme", "interior_dtype"))
 
 
 # ---------------------------------------------------------------------------

@@ -84,6 +84,11 @@ class BackendSpec:
     #: ``features=`` / ``error_budget=``; never an ``"auto"`` winner for
     #: an exact request
     approximate: bool = False
+    #: Goursat cell-update stencils this backend implements
+    #: (:data:`repro.core.config.GRID_SCHEMES`).  A backend that does not
+    #: implement the requested ``GridConfig.scheme`` is *refused* with an
+    #: error — never silently downgraded to another stencil.
+    schemes: FrozenSet[str] = frozenset({"order1", "order2"})
 
 
 _REGISTRY: Dict[str, BackendSpec] = {}
@@ -126,9 +131,11 @@ register(BackendSpec("pallas_fused", frozenset({"sigkernel", "gram"}),
 # grad_exact=False), Gram-capable by construction (phi is (B, F); no B×B
 # intermediate ever forms), platform-agnostic
 register(BackendSpec("rff", frozenset({"gram"}), grad_exact=False,
-                     gram_capable=True, needs_tpu=False, approximate=True))
+                     gram_capable=True, needs_tpu=False, approximate=True,
+                     schemes=frozenset({"order1"})))
 register(BackendSpec("nystroem", frozenset({"gram"}), grad_exact=False,
-                     gram_capable=True, needs_tpu=False, approximate=True))
+                     gram_capable=True, needs_tpu=False, approximate=True,
+                     schemes=frozenset({"order1"})))
 
 
 # ---------------------------------------------------------------------------
@@ -201,6 +208,29 @@ def _validate(backend: str, op: str) -> str:
         raise ValueError(
             f"backend {backend!r} does not implement op {op!r}; "
             f"options: {backends_for(op)}")
+    return backend
+
+
+def check_scheme(backend: str, scheme: str, *, op: str) -> str:
+    """Refuse a backend that does not implement the requested stencil.
+
+    The scheme capability contract (ISSUE: no silent downgrades): a backend
+    whose :attr:`BackendSpec.schemes` does not contain
+    ``GridConfig.scheme`` raises, naming the knob, the backend's supported
+    schemes, and the backends that *do* implement the request — it is never
+    quietly served with a different discretisation.
+    """
+    spec = get(backend)
+    if scheme not in spec.schemes:
+        capable = tuple(n for n in backends_for(op)
+                        if scheme in get(n).schemes)
+        raise ValueError(
+            f"backend {backend!r} does not implement "
+            f"GridConfig.scheme={scheme!r} (it supports "
+            f"{tuple(sorted(spec.schemes))}); schemes are never silently "
+            f"downgraded — pick a capable backend for op {op!r}: {capable}, "
+            f"or a supported scheme (docs/solver_guide.md, 'Choosing a "
+            f"scheme order')")
     return backend
 
 
@@ -327,7 +357,8 @@ def resolve_launch(launch=None, *, op: str, shape=None, dtype=None,
 
 def resolve(backend: str, *, op: str, grid_cells: Optional[int] = None,
             shape=None, dtype=None, allow_fused: bool = True,
-            ragged: bool = False, allow_approximate: bool = False) -> str:
+            ragged: bool = False, allow_approximate: bool = False,
+            scheme: str = "order1") -> str:
     """Resolve ``"auto"`` to a concrete backend name for ``op``.
 
     When ``shape`` is given (the per-op cache-key shape documented in
@@ -350,6 +381,11 @@ def resolve(backend: str, *, op: str, grid_cells: Optional[int] = None,
     ``allow_approximate=True``.  ``"auto"`` never returns an approximate
     backend from this function either way (the budgeted route is
     :func:`resolve_approx`).
+
+    ``scheme`` is the requested :class:`repro.GridConfig` stencil: a
+    concrete backend (explicit *or* auto/autotuned winner) that does not
+    list it in :attr:`BackendSpec.schemes` is refused via
+    :func:`check_scheme` — the discretisation is never silently swapped.
     """
     if backend != "auto":
         name = _validate(backend, op)
@@ -361,17 +397,20 @@ def resolve(backend: str, *, op: str, grid_cells: Optional[int] = None,
                 f"error_budget= to opt in (docs/api/public.md, 'Approximate "
                 f"kernels'), or pick an exact backend: "
                 f"{tuple(n for n in backends_for(op) if not get(n).approximate)}")
-        return name
+        return check_scheme(name, scheme, op=op)
     tuned = _autotuned(op, shape, dtype, ragged)
-    if tuned is not None and (allow_fused or not get(tuned).fused):
+    if tuned is not None and (allow_fused or not get(tuned).fused) \
+            and scheme in get(tuned).schemes:
         return tuned
     if op in ("signature", "logsignature"):
         return "pallas" if on_tpu() else "reference"
     if on_tpu():
-        return "pallas_fused" if op == "gram" and allow_fused else "pallas"
-    if grid_cells is not None and grid_cells >= _ANTIDIAG_MIN_CELLS:
-        return "antidiag"
-    return "reference"
+        name = "pallas_fused" if op == "gram" and allow_fused else "pallas"
+    elif grid_cells is not None and grid_cells >= _ANTIDIAG_MIN_CELLS:
+        name = "antidiag"
+    else:
+        name = "reference"
+    return check_scheme(name, scheme, op=op)
 
 
 def resolve_approx(op: str, shape=None, dtype=None, *,
@@ -411,6 +450,47 @@ def resolve_approx(op: str, shape=None, dtype=None, *,
     if spec is None or op not in spec.ops or not spec.approximate:
         return None  # stale frontier entry
     return name, int(rank)
+
+
+def resolve_scheme(op: str, shape=None, dtype=None, *,
+                   error_budget: float, ragged: bool = False
+                   ) -> Optional[Tuple[str, int, str]]:
+    """Cheapest measured *discretisation* meeting ``error_budget``, or None.
+
+    The exact-engine sibling of :func:`resolve_approx`: instead of
+    swapping the PDE solve for feature maps, the scheme frontier trades
+    stencil order, grid coarseness and interior precision — the autotune
+    cache (:func:`repro.bench.autotune.tune_scheme_frontier`, recorded by
+    the bench suite's ``scheme_frontier`` workload) holds measured
+    ``(scheme, coarsen, interior_dtype)`` points with their relative error
+    against the order-1 fine-grid f32 baseline.  Returns the cheapest
+    point that fits the budget *and* beat the baseline's wall clock, or
+    None under the same fail-open discipline as :func:`resolve_approx`
+    (cold cache, autotune disabled, foreign machine, no qualifying
+    point).  Only consulted when the caller left ``GridConfig.scheme`` /
+    ``interior_dtype`` at their defaults — an explicit choice is never
+    overridden.
+    """
+    if shape is None or error_budget is None:
+        return None
+    try:
+        from repro.bench import autotune
+    except ImportError:
+        return None
+    if not autotune.enabled():
+        return None
+    try:
+        found = autotune.lookup_scheme_budget(op, shape, dtype or "float32",
+                                              error_budget, ragged=ragged)
+    except (ValueError, TypeError):
+        return None
+    if found is None:
+        return None
+    scheme, coarsen, idt = found
+    from repro.kernels.sigkernel_pde import stencil
+    if scheme not in stencil.SCHEMES or idt not in stencil.INTERIOR_DTYPES:
+        return None  # stale frontier entry
+    return scheme, int(coarsen), idt
 
 
 # ---------------------------------------------------------------------------

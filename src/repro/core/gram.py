@@ -42,6 +42,7 @@ no mesh the annotations are no-ops and the same code runs on a laptop.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -88,51 +89,56 @@ def _pair_delta(sa: jax.Array, sb: jax.Array, kernel) -> jax.Array:
 
 
 def _solve_pairs(sa: jax.Array, sb: jax.Array, kernel, backend: str,
-                 lam1: int, lam2: int, launch=None) -> jax.Array:
-    """Solve one batch of prepared pairs (P, ·, d) × (P, ·, d) -> (P,)."""
+                 g, launch=None) -> jax.Array:
+    """Solve one batch of prepared pairs (P, ·, d) × (P, ·, d) -> (P,).
+
+    ``g`` is the resolved :class:`repro.GridConfig`: refinement levels AND
+    the scheme / interior-dtype static knobs travel together so every pair
+    solver (fused or Δ-materialising) runs the same discretisation.
+    """
     if backend == "pallas_fused":
         from repro.kernels.sigkernel_pde import ops as pde_ops
         # fused kernels compute ⟨dx, dy⟩ in VMEM; fold a non-unit linear
         # scale into one side (scale·⟨dx, dy⟩ = ⟨scale·dx, dy⟩ exactly)
-        return pde_ops.solve_fused(_scale(sa, kernel.scale), sb, lam1, lam2,
-                                   launch)
-    return _sigkernel_from_delta(_pair_delta(sa, sb, kernel), lam1, lam2,
-                                 backend, launch)
+        return pde_ops.solve_fused(_scale(sa, kernel.scale), sb, g.lam1,
+                                   g.lam2, launch, g.scheme,
+                                   g.interior_dtype)
+    return _sigkernel_from_delta(_pair_delta(sa, sb, kernel), g.lam1, g.lam2,
+                                 backend, launch, g.scheme, g.interior_dtype)
 
 
 def _gram_block(sxb: jax.Array, sY: jax.Array, kernel, backend: str,
-                lam1: int, lam2: int, launch=None) -> jax.Array:
+                g, launch=None) -> jax.Array:
     """Gram block from prepared streams (r, ·, d) × (By, ·, d) -> (r, By)."""
     if backend == "pallas_fused":
         from repro.kernels.sigkernel_pde import ops as pde_ops
-        return pde_ops.gram_fused(_scale(sxb, kernel.scale), sY, lam1, lam2,
-                                  launch)
+        return pde_ops.gram_fused(_scale(sxb, kernel.scale), sY, g.lam1,
+                                  g.lam2, launch, g.scheme, g.interior_dtype)
     delta = _pair_delta(sxb[:, None], sY[None, :], kernel)
-    return _sigkernel_from_delta(delta, lam1, lam2, backend, launch)
+    return _sigkernel_from_delta(delta, g.lam1, g.lam2, backend, launch,
+                                 g.scheme, g.interior_dtype)
 
 
 def _gram_rows(sX: jax.Array, sY: jax.Array, kernel, backend: str,
-               lam1: int, lam2: int,
-               row_block: Optional[int], launch=None) -> jax.Array:
+               g, row_block: Optional[int], launch=None) -> jax.Array:
     """(Bx, ·, d) × (By, ·, d) -> (Bx, By), optionally ``row_block`` rows
     in flight at a time (``Bx`` zero-padded; padded rows dropped)."""
     Bx, By = sX.shape[0], sY.shape[0]
     if row_block is None:
-        return _gram_block(sX, sY, kernel, backend, lam1, lam2, launch)
+        return _gram_block(sX, sY, kernel, backend, g, launch)
     pad = (-Bx) % row_block
     if pad:  # zero rows -> Δ = 0 -> k = 1 rows, dropped below: exact
         sX = jnp.pad(sX, ((0, pad), (0, 0), (0, 0)))
     n_blocks = (Bx + pad) // row_block
     sXb = sX.reshape(n_blocks, row_block, *sX.shape[1:])
     K = jax.lax.map(
-        lambda sxb: _gram_block(sxb, sY, kernel, backend, lam1, lam2, launch),
+        lambda sxb: _gram_block(sxb, sY, kernel, backend, g, launch),
         sXb)
     return K.reshape(n_blocks * row_block, By)[:Bx]
 
 
 def _solve_pairs_chunked(sX: jax.Array, a_idx, b_idx, kernel, backend: str,
-                         lam1: int, lam2: int,
-                         chunk: Optional[int], launch=None) -> jax.Array:
+                         g, chunk: Optional[int], launch=None) -> jax.Array:
     """k values for an explicit pair list into one stream batch, at most
     ``chunk`` pairs of replicated increments live at once.
 
@@ -145,14 +151,13 @@ def _solve_pairs_chunked(sX: jax.Array, a_idx, b_idx, kernel, backend: str,
     a_idx, b_idx = jnp.asarray(a_idx), jnp.asarray(b_idx)
     n = a_idx.shape[0]
     if chunk is None or chunk >= n:
-        return _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend,
-                            lam1, lam2, launch)
+        return _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend, g, launch)
     pad = (-n) % chunk
     a = jnp.concatenate([a_idx, jnp.zeros((pad,), a_idx.dtype)])
     b = jnp.concatenate([b_idx, jnp.zeros((pad,), b_idx.dtype)])
     k = jax.lax.map(
-        lambda ab: _solve_pairs(sX[ab[0]], sX[ab[1]], kernel, backend,
-                                lam1, lam2, launch),
+        lambda ab: _solve_pairs(sX[ab[0]], sX[ab[1]], kernel, backend, g,
+                                launch),
         (a.reshape(-1, chunk), b.reshape(-1, chunk)))
     return k.reshape(-1)[:n]
 
@@ -229,7 +234,16 @@ def _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms, grid,
             f"backend={feats.method!r}")
     explicit_approx = (backend in dispatch.backends_for("gram")
                        and dispatch.get(backend).approximate)
-    if feats is None and explicit_approx and error_budget is not None:
+    # the feature-map backends only implement the order-1 discretisation
+    # (BackendSpec.schemes): a non-default scheme keeps "auto" off the
+    # approx frontier entirely; naming one explicitly is refused, with the
+    # scheme-capability error rather than the opt-in one (the caller DID
+    # opt in — the scheme is what rules the backend out)
+    if explicit_approx and (features is not None
+                            or error_budget is not None):
+        dispatch.check_scheme(backend, g.scheme, op="gram")
+    if feats is None and explicit_approx and error_budget is not None \
+            and g.scheme == "order1":
         # explicit approx backend + a budget: take the measured frontier
         # rank when the cache is warm, the library default otherwise
         found = dispatch.resolve_approx(
@@ -238,33 +252,84 @@ def _resolve_engine(X, Y, symmetric, lengths, lengths_y, transforms, grid,
         rank = found[1] if found is not None and found[0] == backend \
             else ft.FeatureConfig.rank
         feats = ft.FeatureConfig(method=backend, rank=rank)
-    if feats is None and backend == "auto" and error_budget is not None:
+    if feats is None and backend == "auto" and error_budget is not None \
+            and g.scheme == "order1":
         found = dispatch.resolve_approx(
             "gram", key_shape, X.dtype, error_budget=error_budget,
             ragged=ragged)
         if found is not None:
             feats = ft.FeatureConfig(method=found[0], rank=found[1])
 
+    if feats is None and backend == "auto" and error_budget is not None \
+            and g.scheme == "order1" and g.interior_dtype == "float32":
+        # scheme frontier: a measured (scheme, coarsen, interior_dtype)
+        # point meeting the budget may run the EXACT engine cheaper — an
+        # order-2 stencil on a coarser grid, or bf16 interiors.  Only
+        # consulted from the defaults: an explicit scheme/dtype choice is
+        # never overridden.
+        g, X, Y, Lx, Ly, key_shape = _apply_scheme_point(
+            dispatch.resolve_scheme("gram", key_shape, X.dtype,
+                                    error_budget=error_budget,
+                                    ragged=ragged),
+            g, X, Y, cfg, ragged, By)
+
     if feats is not None:
         backend = dispatch.resolve(feats.method, op="gram",
-                                   allow_approximate=True)
+                                   allow_approximate=True, scheme=g.scheme)
     else:
         backend = dispatch.resolve(
             backend, op="gram", grid_cells=(Lx << g.lam1) * (Ly << g.lam2),
             shape=key_shape,
             dtype=X.dtype, allow_fused=kernel.lifts_increments,
-            ragged=ragged)
+            ragged=ragged, scheme=g.scheme)
     launch = dispatch.resolve_launch(launch, op="gram", shape=key_shape,
                                      dtype=X.dtype, ragged=ragged)
     return (X, Y, lengths, lengths_y, cfg, g, kernel, backend, symmetric,
             launch, feats)
 
 
+def _apply_scheme_point(found, g, X, Y, cfg, ragged, By):
+    """Apply a scheme-frontier point ``(scheme, coarsen, interior_dtype)``.
+
+    ``coarsen`` halves the PDE grid ``coarsen`` times: via the dyadic
+    refinement levels when both are deep enough (exactly what the tuner
+    measured), else by stride-subsampling the raw paths (dense batches
+    only — ragged lengths would shift, so the point is skipped there).
+    Recomputes the transformed lengths and cache-key shape when anything
+    changed.
+    """
+    if found is None:
+        return g, X, Y, *_key_dims(X, Y, cfg, g, By)
+    scheme_p, coarsen, idt = found
+    if coarsen:
+        if g.lam1 >= coarsen and g.lam2 >= coarsen:
+            g = dataclasses.replace(g, lam1=g.lam1 - coarsen,
+                                    lam2=g.lam2 - coarsen)
+        elif not ragged and X.shape[1] > (1 << coarsen):
+            step = 1 << coarsen
+            X = X[:, ::step]
+            Y = Y if Y is None else Y[:, ::step]
+        else:
+            return g, X, Y, *_key_dims(X, Y, cfg, g, By)
+    g = dataclasses.replace(g, scheme=scheme_p, interior_dtype=idt)
+    return g, X, Y, *_key_dims(X, Y, cfg, g, By)
+
+
+def _key_dims(X, Y, cfg, g, By):
+    """(Lx, Ly, key_shape) for the current paths/config — the per-op
+    autotune cache-key shape documented in repro.bench.autotune.cache_key."""
+    Lx = cfg.transformed_steps(X.shape[1])
+    Ly = Lx if Y is None else cfg.transformed_steps(Y.shape[1])
+    key_shape = (X.shape[0], By, Lx << g.lam1, Ly << g.lam2,
+                 cfg.transformed_dim(X.shape[-1]))
+    return Lx, Ly, key_shape
+
+
 # ---------------------------------------------------------------------------
 # approximate feature maps — phi(X) whose inner products ≈ the exact Gram
 # ---------------------------------------------------------------------------
 
-def _nystroem_maps(sX, sY, feats, kernel, backend, lam1, lam2, launch):
+def _nystroem_maps(sX, sY, feats, kernel, backend, g, launch):
     """Nyström features from prepared streams: phi = K(·, Z) · L_w^{-T}.
 
     Landmarks Z are pivoted-Cholesky-selected from a ``pool``-sized random
@@ -280,16 +345,16 @@ def _nystroem_maps(sX, sY, feats, kernel, backend, lam1, lam2, launch):
     sP = sX[pool_idx]
     dispatch.record_pair_solves(
         pool * pool + Bx * rank + (0 if sY is None else sY.shape[0] * rank))
-    G_pool = _gram_block(sP, sP, kernel, backend, lam1, lam2, launch)
+    G_pool = _gram_block(sP, sP, kernel, backend, g, launch)
     piv, _ = ft.pivoted_cholesky(G_pool, rank)
     sZ = sP[piv]
     Lw = ft.nystroem_factor(G_pool[piv][:, piv], feats.jitter)
     phiX = ft.nystroem_phi(
-        _gram_rows(sX, sZ, kernel, backend, lam1, lam2, None, launch), Lw)
+        _gram_rows(sX, sZ, kernel, backend, g, None, launch), Lw)
     if sY is None:
         return phiX, None
     phiY = ft.nystroem_phi(
-        _gram_rows(sY, sZ, kernel, backend, lam1, lam2, None, launch), Lw)
+        _gram_rows(sY, sZ, kernel, backend, g, None, launch), Lw)
     return phiX, phiY
 
 
@@ -304,11 +369,11 @@ def _feature_maps(X, Y, feats, cfg, g, kernel, lengths, lengths_y, launch):
         return phiX, phiY
     # nystroem: the pool/cross Grams use the exact engine's auto backend
     exact = dispatch.resolve("auto", op="gram",
-                             allow_fused=kernel.lifts_increments)
+                             allow_fused=kernel.lifts_increments,
+                             scheme=g.scheme)
     sX = _prepare(X, cfg, kernel, lengths)
     sY = None if Y is None else _prepare(Y, cfg, kernel, lengths_y)
-    return _nystroem_maps(sX, sY, feats, kernel, exact, g.lam1, g.lam2,
-                          launch)
+    return _nystroem_maps(sX, sY, feats, kernel, exact, g, launch)
 
 
 def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
@@ -389,7 +454,6 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
                         grid, static_kernel, lam1, lam2, time_aug, lead_lag,
                         use_pallas, solver, backend, launch,
                         features=features, error_budget=error_budget)
-    lam1, lam2 = g.lam1, g.lam2
     if row_block is None:  # explicit arg beats the launch knob
         row_block = launch.gram_row_block
 
@@ -404,8 +468,7 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
     Bx = sX.shape[0]
 
     if symmetric:
-        return _symmetric_gram(sX, kernel, backend, row_block, lam1, lam2,
-                               launch)
+        return _symmetric_gram(sX, kernel, backend, row_block, g, launch)
 
     sY = _prepare(Y, cfg, kernel, lengths_y)
     sY = shard(sY, "model", None, None)
@@ -416,7 +479,7 @@ def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, *,
     else:
         n_blocks = (Bx + (-Bx) % row_block) // row_block
         dispatch.record_pair_solves(n_blocks * row_block * By)
-    K = _gram_rows(sX, sY, kernel, backend, lam1, lam2, row_block, launch)
+    K = _gram_rows(sX, sY, kernel, backend, g, row_block, launch)
     return shard(K, "batch", "model")
 
 
@@ -433,8 +496,7 @@ def _auto_row_block(other: int, L: int, d: int) -> int:
 
 
 def _symmetric_gram(sX: jax.Array, kernel, backend: str,
-                    row_block: Optional[int],
-                    lam1: int, lam2: int, launch=None) -> jax.Array:
+                    row_block: Optional[int], g, launch=None) -> jax.Array:
     """Upper-triangle pair solve + mirror: Bx·(Bx+1)/2 (+ pad) PDE solves."""
     Bx = sX.shape[0]
     a_idx, b_idx = np.triu_indices(Bx)
@@ -446,14 +508,13 @@ def _symmetric_gram(sX: jax.Array, kernel, backend: str,
 
     if row_block is None:
         dispatch.record_pair_solves(n_pairs)
-        k = _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend, lam1, lam2,
-                         launch)
+        k = _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend, g, launch)
     else:
         # a block of `row_block` Gram rows ~ row_block·Bx pairs of live Δ
         chunk = max(1, int(row_block)) * Bx
         dispatch.record_pair_solves(n_pairs + (-n_pairs) % chunk)
-        k = _solve_pairs_chunked(sX, a_idx, b_idx, kernel, backend,
-                                 lam1, lam2, chunk, launch)
+        k = _solve_pairs_chunked(sX, a_idx, b_idx, kernel, backend, g,
+                                 chunk, launch)
 
     K = jnp.zeros((Bx, Bx), k.dtype).at[a_idx, b_idx].set(k)
     K = K + jnp.triu(K, k=1).T
@@ -607,7 +668,6 @@ def sigkernel_gram_reduce(X: jax.Array, Y: Optional[jax.Array] = None, *,
                         grid, static_kernel, lam1, lam2, time_aug, lead_lag,
                         use_pallas, solver, backend, launch,
                         features=features, error_budget=error_budget)
-    lam1, lam2 = g.lam1, g.lam2
     if row_block is None:  # explicit arg beats the launch knob
         row_block = launch.gram_row_block
 
@@ -648,10 +708,10 @@ def sigkernel_gram_reduce(X: jax.Array, Y: Optional[jax.Array] = None, *,
                       launch=launch)
 
     if symmetric:
-        return _reduce_symmetric(sX, kernel, backend, rb, lam1, lam2,
-                                 include_diag, launch)
+        return _reduce_symmetric(sX, kernel, backend, rb, g, include_diag,
+                                 launch)
     sY = _prepare(Y, cfg, kernel, lengths_y)
-    return _reduce_rows(sX, sY, kernel, backend, rb, lam1, lam2, launch)
+    return _reduce_rows(sX, sY, kernel, backend, rb, g, launch)
 
 
 def _guard_reduce(guard_args, **kw) -> None:
@@ -713,8 +773,7 @@ def _guard_reduce(guard_args, **kw) -> None:
 
 
 def _reduce_symmetric(sX: jax.Array, kernel, backend: str, row_block: int,
-                      lam1: int, lam2: int,
-                      include_diag: bool, launch=None) -> jax.Array:
+                      g, include_diag: bool, launch=None) -> jax.Array:
     """Σ over the symmetric Gram via the upper triangle: off-diagonal
     pairs weighted 2, diagonal 1 (or 0), padding 0."""
     Bx = sX.shape[0]
@@ -728,8 +787,7 @@ def _reduce_symmetric(sX: jax.Array, kernel, backend: str, row_block: int,
         chunk = Bx + 1
     if chunk >= n_pairs:
         dispatch.record_pair_solves(n_pairs)
-        k = _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend, lam1, lam2,
-                         launch)
+        k = _solve_pairs(sX[a_idx], sX[b_idx], kernel, backend, g, launch)
         return (jnp.asarray(w, k.dtype) * k).sum()
     pad = (-n_pairs) % chunk
     dispatch.record_pair_solves(n_pairs + pad)
@@ -742,7 +800,7 @@ def _reduce_symmetric(sX: jax.Array, kernel, backend: str, row_block: int,
 
     def block(abw):
         ai, bi, wi = abw
-        k = _solve_pairs(sX[ai], sX[bi], kernel, backend, lam1, lam2, launch)
+        k = _solve_pairs(sX[ai], sX[bi], kernel, backend, g, launch)
         return (wi * k).sum()
 
     # checkpoint: lax.map would otherwise stack every block's Δ/grid
@@ -752,8 +810,7 @@ def _reduce_symmetric(sX: jax.Array, kernel, backend: str, row_block: int,
 
 
 def _reduce_rows(sX: jax.Array, sY: jax.Array, kernel, backend: str,
-                 row_block: int, lam1: int, lam2: int,
-                 launch=None) -> jax.Array:
+                 row_block: int, g, launch=None) -> jax.Array:
     """Σ over the (Bx, By) Gram, ``row_block`` rows at a time."""
     Bx, By = sX.shape[0], sY.shape[0]
     rb = max(1, int(row_block))
@@ -763,7 +820,7 @@ def _reduce_rows(sX: jax.Array, sY: jax.Array, kernel, backend: str,
         rb = 2
     if rb >= Bx:
         dispatch.record_pair_solves(Bx * By)
-        return _gram_block(sX, sY, kernel, backend, lam1, lam2, launch).sum()
+        return _gram_block(sX, sY, kernel, backend, g, launch).sum()
     pad = (-Bx) % rb
     n_blocks = (Bx + pad) // rb
     dispatch.record_pair_solves(n_blocks * rb * By)
@@ -775,7 +832,7 @@ def _reduce_rows(sX: jax.Array, sY: jax.Array, kernel, backend: str,
 
     def block(args):
         sxb, v = args
-        Kb = _gram_block(sxb, sY, kernel, backend, lam1, lam2, launch)
+        Kb = _gram_block(sxb, sY, kernel, backend, g, launch)
         return jnp.where(v[:, None], Kb, 0.0).sum()
 
     parts = jax.lax.map(jax.checkpoint(block), (sXb, valid))
@@ -846,7 +903,6 @@ def sigkernel_gram_sharded(X: jax.Array, Y: Optional[jax.Array] = None, *,
                         grid, static_kernel, UNSET, UNSET, UNSET, UNSET,
                         UNSET, UNSET, backend, launch,
                         features=features, error_budget=error_budget)
-    lam1, lam2 = g.lam1, g.lam2
     if feats is not None:
         phiX, phiY = _feature_maps(X, Y, feats, cfg, g, kernel, lengths,
                                    lengths_y, launch)
@@ -885,7 +941,7 @@ def sigkernel_gram_sharded(X: jax.Array, Y: Optional[jax.Array] = None, *,
 
         def local(a_loc, b_loc, sx):
             k = _solve_pairs_chunked(sx, a_loc[0], b_loc[0], kernel,
-                                     backend, lam1, lam2, chunk, launch)
+                                     backend, g, chunk, launch)
             return k[None]
 
         k_dev = shard_map(
@@ -919,8 +975,7 @@ def sigkernel_gram_sharded(X: jax.Array, Y: Optional[jax.Array] = None, *,
     dispatch.record_pair_solves(sXp.shape[0] * sYp.shape[0])
 
     def local(sx, sy):
-        return _gram_rows(sx, sy, kernel, backend, lam1, lam2, row_block,
-                          launch)
+        return _gram_rows(sx, sy, kernel, backend, g, row_block, launch)
 
     Kp = shard_map(local, mesh=mesh,
                    in_specs=(P(row_axis), P(col_axis)),

@@ -28,6 +28,26 @@ The reference solver here is a row-major double scan (oracle-grade, O(Lx·Ly)
 serial).  The production wavefront solver lives in
 ``repro.kernels.sigkernel_pde`` (Pallas, anti-diagonal vectorisation with a
 rotating 3-buffer in VMEM).
+
+Schemes and mixed precision: the cell-update stencil is pluggable
+(``GridConfig.scheme``) — the shared coefficient sets and the per-scheme
+adjoint derivations live in ``repro.kernels.sigkernel_pde.stencil``.  The
+``"order2"`` stencil adds an anti-diagonal curvature correction
+
+    k̂_{i+1,j+1} = (k̂_{i+1,j} + k̂_{i,j+1})·A(p) − k̂_{i,j}·B₂(p)
+                  − C(p)·(k̂_{i+1,j−1} + k̂_{i−1,j+1}),
+    B₂(p) = 1 − p/6 + p²/12,   C(p) = p/12,
+
+with out-of-grid skew reads := 1 (the boundary of ones extends), and its
+exact one-pass adjoint gains the mirrored −C terms
+
+    g[a,b] += … − g[a,b+2]·C(Δ[a−1,b+1]) − g[a+2,b]·C(Δ[a+1,b−1]),
+    dΔ += g[i+1,j+1]·[… − (k̂_{i+1,j−1}+k̂_{i−1,j+1})·C'(p)],  C'(p) = 1/12.
+
+``GridConfig.interior_dtype = "bfloat16"`` rounds every interior cell
+through bf16 after its update (identical points on all backends) while the
+boundary and readout stay f32; the custom VJP is the exact straight-through
+adjoint of the rounded forward.
 """
 
 from __future__ import annotations
@@ -92,23 +112,16 @@ def delta_matrix(x: jax.Array, y: jax.Array, *, transforms=None,
 
 
 # ---------------------------------------------------------------------------
-# scheme coefficients
+# scheme coefficients — shared with every kernel backend via the pluggable
+# stencil module (identical expressions, so the aliases are bitwise-neutral)
 # ---------------------------------------------------------------------------
 
-def _A(p):
-    return 1.0 + 0.5 * p + (1.0 / 12.0) * p * p
+from repro.kernels.sigkernel_pde import stencil  # noqa: E402
 
-
-def _B(p):
-    return 1.0 - (1.0 / 12.0) * p * p
-
-
-def _dA(p):
-    return 0.5 + p / 6.0
-
-
-def _dB(p):
-    return -p / 6.0
+_A = stencil.coeff_A
+_B = stencil.coeff_B1
+_dA = stencil.coeff_dA
+_dB = stencil.coeff_dB1
 
 
 # ---------------------------------------------------------------------------
@@ -116,12 +129,17 @@ def _dB(p):
 # ---------------------------------------------------------------------------
 
 def _solve_rows(delta: jax.Array, lam1: int, lam2: int,
-                return_grid: bool) -> jax.Array:
+                return_grid: bool, scheme: str = "order1",
+                interior_dtype: str = "float32") -> jax.Array:
     """Solve the Goursat scheme for one Δ matrix (Lx, Ly) -> scalar or grid.
 
     Dyadic refinement on-the-fly: refined cell (s,t) reads
-    p = Δ[s >> λ1, t >> λ2] · 2^{−(λ1+λ2)}.
+    p = Δ[s >> λ1, t >> λ2] · 2^{−(λ1+λ2)}.  ``scheme``/``interior_dtype``
+    pick the cell-update stencil and interior rounding (stencil.py); the
+    defaults are bitwise the historical order-1 f32 scan.
     """
+    stencil.check_scheme(scheme)
+    stencil.check_interior_dtype(interior_dtype)
     Lx, Ly = delta.shape
     nx, ny = Lx << lam1, Ly << lam2
     scale = 2.0 ** (-(lam1 + lam2))
@@ -131,22 +149,57 @@ def _solve_rows(delta: jax.Array, lam1: int, lam2: int,
 
     init_row = jnp.ones((ny + 1,), dtype=delta.dtype)
 
-    def row_body(prev_row, s):
-        p_row = row_delta(s)                              # (ny,)
-        a_row, b_row = _A(p_row), _B(p_row)
+    if scheme == "order2":
+        # carries: (k̂[s, ·], k̂[s−1, ·]) across rows — the second row feeds
+        # the k̂_{i−1,j+1} skew read; (left, down-left) within a row.  Both
+        # carries start at ones: the boundary of ones extends out of grid.
+        # order-1 fallback on data gridlines (stencil.py): cell (s, t) with
+        # s % 2^λ1 == 0 or t % 2^λ2 == 0
+        t_edge = jnp.arange(ny) % (1 << lam2) == 0
 
-        def col_body(left, inputs):
-            up, upleft, a, b = inputs
-            new = (left + up) * a - upleft * b
-            return new, new
+        def row_body(carry, s):
+            prev_row, prev2_row = carry
+            p_row = row_delta(s)
+            a_row = _A(p_row)
+            edge = (s % (1 << lam1) == 0) | t_edge
+            b_row = stencil.coeff_B2_at(p_row, edge)
+            c_row = stencil.coeff_C2_at(p_row, edge)
+            ul_row = prev2_row[1:]                       # k̂[s−1, t+1]
 
-        _, rest = jax.lax.scan(
-            col_body, jnp.asarray(1.0, delta.dtype),
-            (prev_row[1:], prev_row[:-1], a_row, b_row))
-        new_row = jnp.concatenate([jnp.ones((1,), delta.dtype), rest])
-        return new_row, new_row if return_grid else None
+            def col_body(cc, inputs):
+                left, dl = cc                            # k̂[s+1,t], k̂[s+1,t−1]
+                up, upleft, ul, a, b, c = inputs
+                new = (left + up) * a - upleft * b - (dl + ul) * c
+                new = stencil.round_interior(new, interior_dtype)
+                return (new, left), new
 
-    last_row, rows = jax.lax.scan(row_body, init_row, jnp.arange(nx))
+            one = jnp.asarray(1.0, delta.dtype)
+            _, rest = jax.lax.scan(
+                col_body, (one, one),
+                (prev_row[1:], prev_row[:-1], ul_row, a_row, b_row, c_row))
+            new_row = jnp.concatenate([jnp.ones((1,), delta.dtype), rest])
+            return (new_row, prev_row), new_row if return_grid else None
+
+        (last_row, _), rows = jax.lax.scan(
+            row_body, (init_row, init_row), jnp.arange(nx))
+    else:
+        def row_body(prev_row, s):
+            p_row = row_delta(s)                              # (ny,)
+            a_row, b_row = _A(p_row), _B(p_row)
+
+            def col_body(left, inputs):
+                up, upleft, a, b = inputs
+                new = (left + up) * a - upleft * b
+                new = stencil.round_interior(new, interior_dtype)
+                return new, new
+
+            _, rest = jax.lax.scan(
+                col_body, jnp.asarray(1.0, delta.dtype),
+                (prev_row[1:], prev_row[:-1], a_row, b_row))
+            new_row = jnp.concatenate([jnp.ones((1,), delta.dtype), rest])
+            return new_row, new_row if return_grid else None
+
+        last_row, rows = jax.lax.scan(row_body, init_row, jnp.arange(nx))
     if return_grid:
         grid = jnp.concatenate([init_row[None], rows], axis=0)  # (nx+1, ny+1)
         return grid
@@ -154,29 +207,43 @@ def _solve_rows(delta: jax.Array, lam1: int, lam2: int,
 
 
 def solve_goursat(delta: jax.Array, lam1: int = 0, lam2: int = 0,
-                  return_grid: bool = False) -> jax.Array:
+                  return_grid: bool = False, scheme: str = "order1",
+                  interior_dtype: str = "float32") -> jax.Array:
     """Batched Goursat solve.  delta: (..., Lx, Ly) -> (...,) or (..., nx+1, ny+1)."""
     fn = functools.partial(_solve_rows, lam1=lam1, lam2=lam2,
-                           return_grid=return_grid)
+                           return_grid=return_grid, scheme=scheme,
+                           interior_dtype=interior_dtype)
     for _ in range(delta.ndim - 2):
         fn = jax.vmap(fn)
     return fn(delta)
 
 
-def _solve_antidiag_one(delta: jax.Array, lam1: int, lam2: int) -> jax.Array:
+def _solve_antidiag_one(delta: jax.Array, lam1: int, lam2: int,
+                        scheme: str = "order1",
+                        interior_dtype: str = "float32") -> jax.Array:
     """Vectorised anti-diagonal solver for one Δ (Lx, Ly) — the fast CPU path.
 
     SIMD analogue of the paper's GPU wavefront: all cells of an anti-diagonal
     are updated as one vector op; three rotating diagonal buffers.  Materialises
     a skewed refined Δ (the Pallas kernel avoids even that).
+
+    The order-2 skew neighbours (cell = lane i, diagonal t, column c = t−i)
+    both live on the t−2 buffer: k̂_{i+1,c−1} is ``prev2`` at lane i
+    unshifted (:= 1 when c ≤ 1, i.e. lane ≥ t−1) and k̂_{i−1,c+1} is
+    ``prev2`` shifted down two lanes (:= 1 for lanes ≤ 1).  The correction
+    is symmetric in the pair, so the nx > ny lane transpose stays exact.
     """
+    stencil.check_scheme(scheme)
+    stencil.check_interior_dtype(interior_dtype)
     Lx, Ly = delta.shape
     nx, ny = Lx << lam1, Ly << lam2
     scale = 2.0 ** (-(lam1 + lam2))
     M = jnp.repeat(jnp.repeat(delta, 1 << lam1, axis=0), 1 << lam2, axis=1) * scale
+    mlane, mcol = 1 << lam1, 1 << lam2   # data-gridline periods (stencil.py)
     if nx > ny:                      # keep the vector lane = shorter axis
         M = M.T
         nx, ny = ny, nx
+        mlane, mcol = mcol, mlane
     # skew: Msk[i, t] = M[i, t - i]  (gather once)
     t_idx = jnp.arange(nx + ny - 1)[None, :] - jnp.arange(nx)[:, None]
     Msk = jnp.take_along_axis(M, jnp.clip(t_idx, 0, ny - 1), axis=1)
@@ -186,12 +253,24 @@ def _solve_antidiag_one(delta: jax.Array, lam1: int, lam2: int) -> jax.Array:
 
     def body(carry, pdiag):
         prev, prev2, t = carry
-        a, b = _A(pdiag), _B(pdiag)
+        a = _A(pdiag)
         up = jnp.concatenate([jnp.ones((1,), delta.dtype), prev[:-1]])
         upleft = jnp.concatenate([jnp.ones((1,), delta.dtype), prev2[:-1]])
         left = jnp.where(lanes == t, 1.0, prev)
         upleft = jnp.where(lanes == t, 1.0, upleft)
-        cur = (left + up) * a - upleft * b
+        if scheme == "order2":
+            # cell = (lane i, col c = t − i): order-1 fallback on data
+            # gridlines, i % mlane == 0 or c % mcol == 0 (the periods
+            # swap with the lane transpose above)
+            edge = (lanes % mlane == 0) | ((t - lanes) % mcol == 0)
+            b = stencil.coeff_B2_at(pdiag, edge)
+            c = stencil.coeff_C2_at(pdiag, edge)
+            k_dl = jnp.where(lanes >= t - 1, 1.0, prev2)
+            k_ul = jnp.where(lanes <= 1, 1.0, jnp.roll(prev2, 2))
+            cur = (left + up) * a - upleft * b - (k_dl + k_ul) * c
+        else:
+            cur = (left + up) * a - upleft * _B(pdiag)
+        cur = stencil.round_interior(cur, interior_dtype)
         active = (lanes <= t) & (lanes > t - ny)
         cur = jnp.where(active, cur, 0.0)
         return (cur, prev, t + 1), None
@@ -203,7 +282,9 @@ def _solve_antidiag_one(delta: jax.Array, lam1: int, lam2: int) -> jax.Array:
 
 
 def solve_goursat_antidiag(delta: jax.Array, lam1: int = 0, lam2: int = 0,
-                           band_chunk: Optional[int] = None) -> jax.Array:
+                           band_chunk: Optional[int] = None,
+                           scheme: str = "order1",
+                           interior_dtype: str = "float32") -> jax.Array:
     """Batched vectorised wavefront solve: (..., Lx, Ly) -> (...,).
 
     ``band_chunk`` (a :class:`LaunchConfig` knob) caps how many Goursat
@@ -214,7 +295,8 @@ def solve_goursat_antidiag(delta: jax.Array, lam1: int = 0, lam2: int = 0,
     unchunked default (``None`` — the whole batch in one sweep); padding
     pairs are all-zero Δ (solution ≡ 1) and dropped.
     """
-    fn1 = functools.partial(_solve_antidiag_one, lam1=lam1, lam2=lam2)
+    fn1 = functools.partial(_solve_antidiag_one, lam1=lam1, lam2=lam2,
+                            scheme=scheme, interior_dtype=interior_dtype)
     batch_shape = delta.shape[:-2]
     if band_chunk is None or not batch_shape:
         fn = fn1
@@ -237,15 +319,24 @@ def solve_goursat_antidiag(delta: jax.Array, lam1: int = 0, lam2: int = 0,
 # ---------------------------------------------------------------------------
 
 def _backward_rows(delta: jax.Array, grid: jax.Array, gbar: jax.Array,
-                   lam1: int, lam2: int) -> jax.Array:
+                   lam1: int, lam2: int, scheme: str = "order1",
+                   interior_dtype: str = "float32") -> jax.Array:
     """Alg 4 for one pair: returns ∂F/∂Δ (Lx, Ly) given the forward grid.
 
-    Traverses the refined grid bottom-up, carrying one row of ∂F/∂k̂.
+    Traverses the refined grid bottom-up, carrying one row of ∂F/∂k̂
+    (two rows for ``scheme="order2"``, whose stencil reaches two skew steps
+    — the per-scheme adjoint derivations live in
+    ``repro.kernels.sigkernel_pde.stencil``).  The adjoint recursion itself
+    is scheme-dependent but precision-independent: ``interior_dtype`` only
+    selects the (rounded) forward ``grid`` the dΔ terms read, so the
+    backward is the exact straight-through adjoint of the rounded forward.
     """
+    stencil.check_scheme(scheme)
     Lx, Ly = delta.shape
     nx, ny = Lx << lam1, Ly << lam2
     scale = 2.0 ** (-(lam1 + lam2))
     dtype = delta.dtype
+    order2 = scheme == "order2"
 
     def row_delta(s):
         # p for refined row s (cells (s, t), t = 0..ny-1)
@@ -253,24 +344,46 @@ def _backward_rows(delta: jax.Array, grid: jax.Array, gbar: jax.Array,
 
     # g_row[j] = ∂F/∂k̂[s, j] for the row currently being consumed (length ny+1).
     # Seed row s = nx: g[nx, ny] = ḡ and gradients flow leftward along the row,
-    #   g[nx, t] = g[nx, t+1] · A(Δ[nx-1, t])
-    # (cell (nx-1, t) writes k̂[nx, t+1] reading k̂[nx, t] with coefficient A).
+    #   g[nx, t] = g[nx, t+1] · A(Δ[nx-1, t])  [− g[nx, t+2] · C(Δ[nx-1, t+1])]
+    # (cell (nx-1, t) writes k̂[nx, t+1] reading k̂[nx, t] with coefficient A;
+    # for order2, cell (nx-1, t+1) also reads k̂[nx, t] as its k_dl, −C).
     p_lastrow = row_delta(nx - 1)
+    m1, m2 = 1 << lam1, 1 << lam2        # data-gridline periods (stencil.py)
 
-    def seed_body(right, p):
-        g = right * _A(p)
-        return g, g
+    if order2 and lam1 > 0:
+        # p[nx-1, t+1] aligned at t (0 pad at t = ny-1: C(0) = 0 and the
+        # g[nx, ny+1] factor is out of grid anyway).  The C writers are
+        # cells (nx-1, t+1): row nx-1 is off-gridline iff λ1 > 0 (else the
+        # order-1 seed applies), columns mask per t below.
+        p_last_sh = jnp.concatenate([p_lastrow[1:], jnp.zeros((1,), dtype)])
+        cq_seed = stencil.coeff_C2_at(
+            p_last_sh, (jnp.arange(ny) + 1) % m2 == 0)
 
-    _, seed_rest = jax.lax.scan(seed_body, jnp.asarray(gbar, dtype),
-                                p_lastrow, reverse=True)
+        def seed_body(carry, inputs):
+            right, right2 = carry            # g[nx, t+1], g[nx, t+2]
+            p, cq = inputs
+            g = right * _A(p) - right2 * cq
+            return (g, right), g
+
+        _, seed_rest = jax.lax.scan(
+            seed_body, (jnp.asarray(gbar, dtype), jnp.zeros((), dtype)),
+            (p_lastrow, cq_seed), reverse=True)
+    else:
+        def seed_body(right, p):
+            g = right * _A(p)
+            return g, g
+
+        _, seed_rest = jax.lax.scan(seed_body, jnp.asarray(gbar, dtype),
+                                    p_lastrow, reverse=True)
     seed = jnp.concatenate([seed_rest, jnp.asarray(gbar, dtype)[None]])
 
     def row_body(carry, s):
-        g_below = carry                  # ∂F/∂k̂[s+1, ·]
+        g_below, g_below2 = carry        # ∂F/∂k̂[s+1, ·], ∂F/∂k̂[s+2, ·]
         p_row = row_delta(s)             # Δ for cells (s, t)
         # within-row reverse scan: g[s, t] depends on g[s, t+1] (right), and
         # g[s+1, t] / g[s+1, t+1] (below row), all known.
         #   g[s,t] = g[s+1,t]·A(p[s,t-1]) + g[s,t+1]·A(p[s-1,t]) − g[s+1,t+1]·B(p[s,t])
+        # order2 adds (stencil.py):  − g[s,t+2]·C(p[s-1,t+1]) − g[s+2,t]·C(p[s+1,t-1])
         # NOTE the A coefficients use Δ of *neighbouring* cells (paper eq.).
         p_left = jnp.concatenate([jnp.zeros((1,), dtype), p_row[:-1]])  # p[s, t-1]
         p_above = row_delta(jnp.maximum(s - 1, 0))                      # p[s-1, t]
@@ -279,38 +392,105 @@ def _backward_rows(delta: jax.Array, grid: jax.Array, gbar: jax.Array,
         # t = ny entry first: g[s, ny] = g[s+1, ny]·A(p[s, ny-1]) (nothing right of it)
         g_last = g_below[ny] * _A(p_row[ny - 1])
 
-        def col_body(right, inputs):
-            below, belowright, pl, pa, pc = inputs
-            g = below * _A(pl) + right * _A(pa) - belowright * _B(pc)
-            return g, g
+        if order2:
+            t_idx = jnp.arange(ny)
+            # p[s-1, t+1] aligned at t (invalid cells -> p = 0 -> C = 0)
+            p_above_sh = jnp.concatenate([p_above[1:],
+                                          jnp.zeros((1,), dtype)])
+            # p[s+1, t-1] aligned at t (clamped row read is masked by
+            # g_below2 = 0 on the last row; t = 0 pad -> C(0) = 0)
+            p_belowrow = row_delta(jnp.minimum(s + 1, nx - 1))
+            p_below_sh = jnp.concatenate([jnp.zeros((1,), dtype),
+                                          p_belowrow[:-1]])
+            # per-WRITER gridline fallback (stencil.py, edge(i, j) =
+            # i % m1 == 0 | j % m2 == 0): the -B writer is cell (s, t);
+            # the g[s, t+2] C writer is cell (s-1, t+1); the g[s+2, t]
+            # C writer is cell (s+1, t-1)
+            bq = stencil.coeff_B2_at(
+                p_row, (s % m1 == 0) | (t_idx % m2 == 0))
+            cq_above = stencil.coeff_C2_at(
+                p_above_sh,
+                ((s - 1) % m1 == 0) | ((t_idx + 1) % m2 == 0))
+            cq_below = stencil.coeff_C2_at(
+                p_below_sh,
+                ((s + 1) % m1 == 0) | ((t_idx - 1) % m2 == 0))
+            # cell (s+1, ny-1) reads k̂[s, ny] as its k_ul (−C), so the
+            # last-column entry gains the g[s+2, ny] term too — unless
+            # that writer sits on a gridline (col ny-1 always does when
+            # λ2 == 0)
+            g_last = g_below[ny] * _A(p_row[ny - 1])
+            if lam2 > 0:
+                g_last = g_last - g_below2[ny] * stencil.coeff_C2_at(
+                    p_belowrow[ny - 1], (s + 1) % m1 == 0)
 
-        _, rest = jax.lax.scan(
-            col_body, g_last,
-            (g_below[:-1], g_below[1:], p_left, p_above, p_row),
-            reverse=True)
+            def col_body(cc, inputs):
+                right, right2 = cc
+                below, belowright, below2, pl, pa, bc, ca, cb = inputs
+                g = (below * _A(pl) + right * _A(pa)
+                     - belowright * bc
+                     - right2 * ca
+                     - below2 * cb)
+                return (g, right), g
+
+            _, rest = jax.lax.scan(
+                col_body, (g_last, jnp.zeros((), dtype)),
+                (g_below[:-1], g_below[1:], g_below2[:-1],
+                 p_left, p_above, bq, cq_above, cq_below),
+                reverse=True)
+        else:
+            def col_body(right, inputs):
+                below, belowright, pl, pa, pc = inputs
+                g = below * _A(pl) + right * _A(pa) - belowright * _B(pc)
+                return g, g
+
+            _, rest = jax.lax.scan(
+                col_body, g_last,
+                (g_below[:-1], g_below[1:], p_left, p_above, p_row),
+                reverse=True)
         g_row = jnp.concatenate([rest, g_last[None]])
         # seed lands at (nx, ny): when s == nx-1, the "below" row is the seed row
         # handled by initialising carry with the seed.
         # ∂F/∂Δ contributions of row s: cells (s,t) use g[s+1,t+1]
         k_up = grid[s]                    # k̂[s, ·]
         k_below = grid[s + 1]             # k̂[s+1, ·]
-        contrib = g_below[1:] * ((k_below[:-1] + k_up[1:]) * _dA(p_row)
-                                 - k_up[:-1] * _dB(p_row))     # (ny,)
+        if order2:
+            cell_edge = (s % m1 == 0) | (jnp.arange(ny) % m2 == 0)
+            contrib = g_below[1:] * (
+                (k_below[:-1] + k_up[1:]) * _dA(p_row)
+                - k_up[:-1] * stencil.coeff_dB2_at(p_row, cell_edge)
+                - (_skew_dl(k_below) + _skew_ul(grid, s, ny, dtype))
+                * stencil.coeff_dC2_at(p_row, cell_edge))
+        else:
+            contrib = g_below[1:] * ((k_below[:-1] + k_up[1:]) * _dA(p_row)
+                                     - k_up[:-1] * _dB(p_row))     # (ny,)
         # fold refined t-cells back onto unrefined columns
         contrib = contrib.reshape(Ly, 1 << lam2).sum(axis=1) * scale
-        return g_row, (contrib, s >> lam1)
+        return (g_row, g_below), (contrib, s >> lam1)
 
     _, (contribs, row_ids) = jax.lax.scan(
-        row_body, seed, jnp.arange(nx - 1, -1, -1))
+        row_body, (seed, jnp.zeros_like(seed)), jnp.arange(nx - 1, -1, -1))
     # contribs: (nx, Ly) rows emitted for refined rows nx-1..0; fold onto Lx rows
     ddelta = jnp.zeros((Lx, Ly), dtype).at[row_ids].add(contribs)
     return ddelta
 
 
+def _skew_dl(k_below: jax.Array) -> jax.Array:
+    """k̂[s+1, t-1] for t = 0..ny-1 (t = 0 reads the := 1 extension)."""
+    return jnp.concatenate([jnp.ones((1,), k_below.dtype), k_below[:-2]])
+
+
+def _skew_ul(grid: jax.Array, s, ny: int, dtype) -> jax.Array:
+    """k̂[s-1, t+1] for t = 0..ny-1 (s = 0 reads the := 1 extension)."""
+    k_up2 = grid[jnp.maximum(s - 1, 0)][1:]
+    return jnp.where(s >= 1, k_up2, jnp.ones((ny,), dtype))
+
+
 def solve_goursat_grad(delta: jax.Array, grid: jax.Array, gbar: jax.Array,
-                       lam1: int = 0, lam2: int = 0) -> jax.Array:
+                       lam1: int = 0, lam2: int = 0, scheme: str = "order1",
+                       interior_dtype: str = "float32") -> jax.Array:
     """Batched exact backward: (..., Lx, Ly), (..., nx+1, ny+1), (...,) -> (..., Lx, Ly)."""
-    fn = functools.partial(_backward_rows, lam1=lam1, lam2=lam2)
+    fn = functools.partial(_backward_rows, lam1=lam1, lam2=lam2,
+                           scheme=scheme, interior_dtype=interior_dtype)
     for _ in range(delta.ndim - 2):
         fn = jax.vmap(fn)
     return fn(delta, grid, gbar)
@@ -363,36 +543,51 @@ def _normalize_backend(backend) -> str:
     return backend
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
 def _sigkernel_from_delta(delta: jax.Array, lam1: int, lam2: int,
-                          backend="reference", launch=None) -> jax.Array:
+                          backend="reference", launch=None,
+                          scheme: str = "order1",
+                          interior_dtype: str = "float32") -> jax.Array:
     """Solve batched Goursat problems with the named (concrete) backend.
 
     ``backend`` is a resolved name from :mod:`repro.core.dispatch`
     ("reference" | "antidiag" | "pallas"; bools are accepted for
     backwards compatibility).  The custom VJP is the exact one-pass
-    backward (Alg 4) for every backend.  ``launch`` is an optional
-    :class:`repro.core.config.LaunchConfig` (static, like the backend
-    name): ``pde_strip`` shapes the Pallas strips, ``band_chunk`` chunks
-    the antidiag pair batch; the reference scan is launch-free.
+    backward (Alg 4) for every backend *and every scheme*: the backward
+    recomputes/reads the forward grid with the SAME stencil and interior
+    rounding, so it is the exact adjoint of the discrete forward map
+    (per-scheme derivations in ``repro.kernels.sigkernel_pde.stencil``).
+    ``launch`` is an optional :class:`repro.core.config.LaunchConfig`
+    (static, like the backend name): ``pde_strip`` shapes the Pallas
+    strips, ``band_chunk`` chunks the antidiag pair batch; the reference
+    scan is launch-free.  ``scheme`` / ``interior_dtype`` are the
+    :class:`repro.GridConfig` stencil/precision knobs, static like the
+    grid orders.
     """
     backend = _normalize_backend(backend)
     if backend == "pallas":
         from repro.kernels.sigkernel_pde import ops as pde_ops
-        return pde_ops.solve(delta, lam1, lam2, launch)
+        return pde_ops.solve(delta, lam1, lam2, launch, scheme=scheme,
+                             interior_dtype=interior_dtype)
     if backend == "antidiag":
         return solve_goursat_antidiag(delta, lam1, lam2,
-                                      getattr(launch, "band_chunk", None))
+                                      getattr(launch, "band_chunk", None),
+                                      scheme=scheme,
+                                      interior_dtype=interior_dtype)
     if backend == "reference":
-        return solve_goursat(delta, lam1, lam2)
+        return solve_goursat(delta, lam1, lam2, scheme=scheme,
+                             interior_dtype=interior_dtype)
     raise ValueError(f"no Δ-solver implementation for backend {backend!r}")
 
 
-def _sk_fwd(delta, lam1, lam2, backend, launch=None):
+def _sk_fwd(delta, lam1, lam2, backend, launch=None, scheme="order1",
+            interior_dtype="float32"):
     backend = _normalize_backend(backend)
     if backend == "pallas":
         from repro.kernels.sigkernel_pde import ops as pde_ops
-        k, grid = pde_ops.solve_with_grid(delta, lam1, lam2, launch)
+        k, grid = pde_ops.solve_with_grid(delta, lam1, lam2, launch,
+                                          scheme=scheme,
+                                          interior_dtype=interior_dtype)
     elif backend == "antidiag":
         # rematerialisation trade-off: save Δ only (Lx·Ly floats) and rebuild
         # the refined grid serially in the backward, instead of holding the
@@ -400,25 +595,33 @@ def _sk_fwd(delta, lam1, lam2, backend, launch=None):
         # Gradient-dominated small-grid workloads that prefer time over
         # memory should pass backend="reference" (docs/solver_guide.md).
         k, grid = solve_goursat_antidiag(
-            delta, lam1, lam2, getattr(launch, "band_chunk", None)), None
+            delta, lam1, lam2, getattr(launch, "band_chunk", None),
+            scheme=scheme, interior_dtype=interior_dtype), None
     elif backend == "reference":
-        grid = solve_goursat(delta, lam1, lam2, return_grid=True)
+        grid = solve_goursat(delta, lam1, lam2, return_grid=True,
+                             scheme=scheme, interior_dtype=interior_dtype)
         k = grid[..., -1, -1]
     else:
         raise ValueError(f"no Δ-solver implementation for backend {backend!r}")
     return k, (delta, grid)
 
 
-def _sk_bwd(lam1, lam2, backend, launch, res, gbar):
+def _sk_bwd(lam1, lam2, backend, launch, scheme, interior_dtype, res, gbar):
     backend = _normalize_backend(backend)
     delta, grid = res
     if backend == "pallas":
         from repro.kernels.sigkernel_pde import ops as pde_ops
-        ddelta = pde_ops.solve_grad(delta, grid, gbar, lam1, lam2, launch)
+        ddelta = pde_ops.solve_grad(delta, grid, gbar, lam1, lam2, launch,
+                                    scheme=scheme,
+                                    interior_dtype=interior_dtype)
     else:
         if grid is None:  # antidiag saves Δ only; rebuild the grid exactly
-            grid = solve_goursat(delta, lam1, lam2, return_grid=True)
-        ddelta = solve_goursat_grad(delta, grid, gbar, lam1, lam2)
+            grid = solve_goursat(delta, lam1, lam2, return_grid=True,
+                                 scheme=scheme,
+                                 interior_dtype=interior_dtype)
+        ddelta = solve_goursat_grad(delta, grid, gbar, lam1, lam2,
+                                    scheme=scheme,
+                                    interior_dtype=interior_dtype)
     return (ddelta,)
 
 
@@ -494,14 +697,17 @@ def sigkernel(x: jax.Array, y: jax.Array, *, transforms=None, grid=None,
             backend, op="sigkernel", grid_cells=cells,
             shape=key_shape,
             dtype=x.dtype, allow_fused=kernel.lifts_increments,
-            ragged=ragged)
+            ragged=ragged, scheme=g.scheme)
         if was_auto and backend == "pallas_fused" \
                 and x.shape[:-2] != y.shape[:-2]:
             # the autotune key carries no batch info, so a tuned winner can
             # be fused even for broadcastable batches it cannot serve;
             # auto must degrade to the static heuristic, not raise below
             backend = dispatch.resolve("auto", op="sigkernel",
-                                       grid_cells=cells, allow_fused=False)
+                                       grid_cells=cells, allow_fused=False,
+                                       scheme=g.scheme)
+    else:
+        dispatch.check_scheme(backend, g.scheme, op="sigkernel")
     if backend == "pallas_fused":
         if x.shape[:-2] != y.shape[:-2]:
             raise ValueError("backend='pallas_fused' needs matching batch "
@@ -517,13 +723,15 @@ def sigkernel(x: jax.Array, y: jax.Array, *, transforms=None, grid=None,
             functools.reduce(lambda a, b: a * b, batch_shape, 1))
         k = pde_ops.solve_fused(dx.reshape((-1,) + dx.shape[-2:]),
                                 dy.reshape((-1,) + dy.shape[-2:]),
-                                lam1, lam2, launch)
+                                lam1, lam2, launch, g.scheme,
+                                g.interior_dtype)
         return k.reshape(batch_shape)
     delta = delta_matrix(x, y, transforms=cfg, static_kernel=kernel,
                          lengths_x=lengths_x, lengths_y=lengths_y)
     dispatch.record_pair_solves(
         functools.reduce(lambda a, b: a * b, delta.shape[:-2], 1))
-    return _sigkernel_from_delta(delta, lam1, lam2, backend, launch)
+    return _sigkernel_from_delta(delta, lam1, lam2, backend, launch,
+                                 g.scheme, g.interior_dtype)
 
 
 def sigkernel_gram(X: jax.Array, Y: Optional[jax.Array] = None, **kw) -> jax.Array:

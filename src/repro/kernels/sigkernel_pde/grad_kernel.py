@@ -16,6 +16,26 @@ a beyond-paper improvement (the paper stores the full grid / recomputes fully).
 Skew/lane conventions match ``kernel.py``:
 cell (r, c) := refined update (i, j) = (strip_top + r, c), value k̂[i+1, c+1],
 living at skew-step t = r + c, lane r.
+
+Per-scheme adjoints (derivations in ``stencil.py``; this kernel recomputes
+with the SAME stencil the forward used).  The order-2 stencil's skew reads
+make cells (a−1, b+1) and (a+1, b−1) additional readers of k̂[a,b], so its
+adjoint gains two −C terms::
+
+    g[a,b] = g[a,b+1]·A(Δ[a−1,b]) + g[a+1,b]·A(Δ[a,b−1]) − g[a+1,b+1]·B₂(Δ[a,b])
+             − g[a,b+2]·C(Δ[a−1,b+1]) − g[a+2,b]·C(Δ[a+1,b−1])
+
+In lane terms the extra readers are G(r, c+2) (same lane, skew t+2 — the
+``gnext2`` carry unshifted) and G(r+2, c) (two lanes down): lane T−2's reaches
+row 0 of the strip below (carried ``gbrow``) and lane T−1's reaches row 1 of
+the strip below, carried in a SECOND adjoint row ``gbrow2`` with coefficients
+from that strip's second refined Δ row.  The dΔ accumulation gains
+``− (k̂[i+1,j−1] + k̂[i−1,j+1])·C'(Δ)``; the skew k̂ reads come from the
+recomputed strip (``ksk`` two skew-steps back) with lanes 1/0 falling back to
+the TWO checkpoint rows (brow, brow2) the order-2 forward saves per strip.
+Boundary skew reads were the constant 1 in the forward and carry no adjoint.
+``interior_dtype="bfloat16"`` recomputes k̂ with the forward's rounding but
+keeps every adjoint quantity f32 (straight-through gradient — see stencil.py).
 """
 
 from __future__ import annotations
@@ -26,7 +46,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .kernel import coeff_A, coeff_B, skew_to_ST, _expand_dyadic, vmem_scratch
+from . import stencil
+from .kernel import (coeff_A, coeff_B, cps_rows, skew_to_ST, _expand_dyadic,
+                     vmem_scratch)
 
 
 def coeff_dA(p):
@@ -38,15 +60,19 @@ def coeff_dB(p):
 
 
 def bwd_kernel(delta_ref, delta_next_ref, cps_ref, gbar_ref, ddelta_ref,
-               ksk_ref, gbrow_ref, dsk_ref, *,
-               T: int, lam1: int, lam2: int, ny: int, Ly: int):
+               ksk_ref, gbrow_ref, dsk_ref, gbrow2_ref=None, *,
+               T: int, lam1: int, lam2: int, ny: int, Ly: int,
+               scheme: str = "order1", interior_dtype: str = "float32"):
     """One (batch, reversed-strip) grid step of the exact backward pass."""
     s_rev = pl.program_id(1)
     n_steps = ny + T - 1
+    order2 = scheme == "order2"
 
     @pl.when(s_rev == 0)
     def _reset():
         gbrow_ref[...] = jnp.zeros_like(gbrow_ref)
+        if gbrow2_ref is not None:
+            gbrow2_ref[...] = jnp.zeros_like(gbrow2_ref)
 
     M = _expand_dyadic(delta_ref[0], lam1, lam2)            # (T, ny)
     S_T = skew_to_ST(M, T, ny)                              # (ny+T, T)
@@ -55,6 +81,12 @@ def bwd_kernel(delta_ref, delta_next_ref, cps_ref, gbar_ref, ddelta_ref,
     # first refined Δ row of the strip below (coefficients for lane T-1)
     d_next = jnp.repeat(delta_next_ref[0, 0:1, :], 2 ** lam2, axis=1) * scale
     d_nextp = jnp.pad(d_next, ((0, 0), (0, T + 3)))         # (1, ny + T + 3)
+    if order2:
+        # second refined Δ row of the strip below (lane T-1's G(r+2, c) term)
+        row2 = 0 if lam1 else 1
+        d_next2 = jnp.repeat(delta_next_ref[0, row2:row2 + 1, :],
+                             2 ** lam2, axis=1) * scale
+        d_next2p = jnp.pad(d_next2, ((0, 0), (0, T + 3)))
 
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
     zeros = jnp.zeros((1, T), jnp.float32)
@@ -69,7 +101,19 @@ def bwd_kernel(delta_ref, delta_next_ref, cps_ref, gbar_ref, ddelta_ref,
         shift_prev2 = jnp.where(lane == 0, upleft0, jnp.roll(prev2, 1, axis=1))
         left = jnp.where(lane == t, 1.0, prev)
         upleft = jnp.where(lane == t, 1.0, shift_prev2)
-        cur = (left + shift_prev) * coeff_A(p) - upleft * coeff_B(p)
+        if order2:
+            # same data-gridline fallback as the forward (kernel.py)
+            edge = (lane % (1 << lam1) == 0) | ((t - lane) % (1 << lam2) == 0)
+            k_dl = jnp.where(lane >= t - 1, 1.0, prev2)
+            k_ul = jnp.roll(prev2, 2, axis=1)
+            k_ul = jnp.where(lane == 1, cps_ref[0, 0, t], k_ul)
+            k_ul = jnp.where(lane == 0, cps_ref[0, 1, t + 1], k_ul)
+            cur = ((left + shift_prev) * coeff_A(p)
+                   - upleft * stencil.coeff_B2_at(p, edge)
+                   - (k_dl + k_ul) * stencil.coeff_C2_at(p, edge))
+        else:
+            cur = (left + shift_prev) * coeff_A(p) - upleft * coeff_B(p)
+        cur = stencil.round_interior(cur, interior_dtype)
         active = (lane <= t) & (lane > t - ny)
         cur = jnp.where(active, cur, 0.0)
         pl.store(ksk_ref, (pl.ds(t, 1), pl.ds(0, T)), cur)
@@ -87,9 +131,9 @@ def bwd_kernel(delta_ref, delta_next_ref, cps_ref, gbar_ref, ddelta_ref,
 
         p_c = jax.lax.dynamic_slice(S_Tp, (t, 0), (1, T))       # Δ(r, c)
         p_a = jax.lax.dynamic_slice(S_Tp, (t + 1, 0), (1, T))   # Δ(r, c+1)
+        p_t2 = jax.lax.dynamic_slice(S_Tp, (t + 2, 0), (1, T))  # Δ(r, c+2)
         p_r1 = jnp.roll(p_a, -1, axis=1)                        # Δ(r+1, c)
-        p_r1c1 = jnp.roll(
-            jax.lax.dynamic_slice(S_Tp, (t + 2, 0), (1, T)), -1, axis=1)
+        p_r1c1 = jnp.roll(p_t2, -1, axis=1)                     # Δ(r+1, c+1)
         # lane T-1 coefficients come from the strip below
         p_r1 = jnp.where(lane == T - 1, d_nextp[0, cT], p_r1)
         p_r1c1 = jnp.where(lane == T - 1, d_nextp[0, cT + 1], p_r1c1)
@@ -100,8 +144,32 @@ def bwd_kernel(delta_ref, delta_next_ref, cps_ref, gbar_ref, ddelta_ref,
         g_down = jnp.where(lane == T - 1, gbrow_ref[0, cT + 1], g_down)
         g_downright = jnp.where(lane == T - 1, gbrow_ref[0, cT + 2], g_downright)
 
-        cur = (g_right * coeff_A(p_a) + g_down * coeff_A(p_r1)
-               - g_downright * coeff_B(p_r1c1))
+        if order2:
+            # extra readers of k̂[a,b]: the cells whose skew neighbour it was
+            cT2 = jnp.maximum(t - (T - 2), 0)               # column of lane T-2
+            p_r2 = jnp.roll(p_t2, -2, axis=1)               # Δ(r+2, c)
+            p_r2 = jnp.where(lane == T - 2, d_nextp[0, cT2], p_r2)
+            p_r2 = jnp.where(lane == T - 1, d_next2p[0, cT], p_r2)
+            g_right2 = gnext2                               # G(r, c+2)
+            g_down2 = jnp.roll(gnext2, -2, axis=1)          # G(r+2, c)
+            g_down2 = jnp.where(lane == T - 2, gbrow_ref[0, cT2 + 1], g_down2)
+            g_down2 = jnp.where(lane == T - 1, gbrow2_ref[0, cT + 1], g_down2)
+            # per-WRITER gridline fallback (stencil.py): writer cells are
+            # (r+1, c+1) for the −B term, (r, c+2) / (r+2, c) for the −C
+            # terms; global row ≡ lane row (mod 2^λ1) because T is a
+            # multiple of 2^λ1, so the masks hold across strip boundaries
+            m1, m2 = 1 << lam1, 1 << lam2
+            col = t - lane
+            edge_b = ((lane + 1) % m1 == 0) | ((col + 1) % m2 == 0)
+            edge_cr = (lane % m1 == 0) | ((col + 2) % m2 == 0)
+            edge_cd = ((lane + 2) % m1 == 0) | (col % m2 == 0)
+            cur = (g_right * coeff_A(p_a) + g_down * coeff_A(p_r1)
+                   - g_downright * stencil.coeff_B2_at(p_r1c1, edge_b)
+                   - g_right2 * stencil.coeff_C2_at(p_t2, edge_cr)
+                   - g_down2 * stencil.coeff_C2_at(p_r2, edge_cd))
+        else:
+            cur = (g_right * coeff_A(p_a) + g_down * coeff_A(p_r1)
+                   - g_downright * coeff_B(p_r1c1))
         # seed ∂F/∂k̂[nx, ny] at the bottom-right cell of the bottom strip
         seed_here = (s_rev == 0) & (t == n_steps - 1)
         cur = cur + jnp.where(seed_here & (lane == T - 1), gbar, 0.0)
@@ -117,7 +185,23 @@ def bwd_kernel(delta_ref, delta_next_ref, cps_ref, gbar_ref, ddelta_ref,
         k_upleft = jnp.where(lane == 0, cps_ref[0, 0, jnp.minimum(t, ny + T)],
                              jnp.roll(k_tm2, 1, axis=1))
         k_upleft = jnp.where(lane == t, 1.0, k_upleft)          # k̂[i, j]
-        contrib = cur * ((k_left + k_up) * coeff_dA(p_c) - k_upleft * coeff_dB(p_c))
+        if order2:
+            k_dl = jnp.where(lane >= t - 1, 1.0, k_tm2)         # k̂[i+1, j-1]
+            k_ul = jnp.roll(k_tm2, 2, axis=1)                   # k̂[i-1, j+1]
+            k_ul = jnp.where(lane == 1,
+                             cps_ref[0, 0, jnp.minimum(t, ny + T)], k_ul)
+            k_ul = jnp.where(lane == 0,
+                             cps_ref[0, 1, jnp.minimum(t + 1, ny + T)], k_ul)
+            # dΔ selects on the contributing cell (r, c) itself
+            edge_cell = (lane % (1 << lam1) == 0) \
+                | ((t - lane) % (1 << lam2) == 0)
+            contrib = cur * ((k_left + k_up) * coeff_dA(p_c)
+                             - k_upleft * stencil.coeff_dB2_at(p_c, edge_cell)
+                             - (k_dl + k_ul)
+                             * stencil.coeff_dC2_at(p_c, edge_cell))
+        else:
+            contrib = cur * ((k_left + k_up) * coeff_dA(p_c)
+                             - k_upleft * coeff_dB(p_c))
         contrib = jnp.where(active, contrib, 0.0)
         pl.store(dsk_ref, (pl.ds(t, 1), pl.ds(0, T)), contrib)
 
@@ -126,6 +210,12 @@ def bwd_kernel(delta_ref, delta_next_ref, cps_ref, gbar_ref, ddelta_ref,
         @pl.when(t <= ny - 1)
         def _():
             gbrow_ref[0, t + 1] = cur[0, 0]
+
+        if order2:
+            # hand the r = 1 adjoint row up as well (lane T-1's G(r+2, c))
+            @pl.when((t >= 1) & (t <= ny))
+            def _():
+                gbrow2_ref[0, t] = cur[0, 1]
 
         return (cur, gnext)
 
@@ -142,17 +232,29 @@ def bwd_kernel(delta_ref, delta_next_ref, cps_ref, gbar_ref, ddelta_ref,
 
 
 def build_bwd(batch: int, Lx: int, Ly: int, *, T: int, lam1: int, lam2: int,
-              interpret: bool):
+              interpret: bool, scheme: str = "order1",
+              interior_dtype: str = "float32"):
     from .kernel import check_strip
-    R = check_strip(T, lam1, Lx)
+    R = check_strip(T, lam1, Lx, scheme)
     n_strips = Lx // R
     nx, ny = Lx << lam1, Ly << lam2
     n_steps = ny + T - 1
+    rows = cps_rows(scheme)
 
-    kern = functools.partial(bwd_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny, Ly=Ly)
+    kern = functools.partial(bwd_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny,
+                             Ly=Ly, scheme=scheme,
+                             interior_dtype=interior_dtype)
 
     def rev(s):
         return n_strips - 1 - s
+
+    scratch = [
+        vmem_scratch((n_steps, T)),        # recomputed k̂ (skewed)
+        vmem_scratch((1, ny + T + 3)),     # carried adjoint row
+        vmem_scratch((n_steps, T)),        # dΔ accumulator (skewed)
+    ]
+    if scheme == "order2":
+        scratch.append(vmem_scratch((1, ny + T + 3)))  # carried row-1 adjoint
 
     return pl.pallas_call(
         kern,
@@ -161,15 +263,11 @@ def build_bwd(batch: int, Lx: int, Ly: int, *, T: int, lam1: int, lam2: int,
             pl.BlockSpec((1, R, Ly), lambda b, s: (b, rev(s), 0)),
             pl.BlockSpec((1, R, Ly),
                          lambda b, s: (b, jnp.minimum(rev(s) + 1, n_strips - 1), 0)),
-            pl.BlockSpec((1, 1, ny + T + 1), lambda b, s: (b, rev(s), 0)),
+            pl.BlockSpec((1, rows, ny + T + 1), lambda b, s: (b, rev(s), 0)),
             pl.BlockSpec((1,), lambda b, s: (b,)),
         ],
         out_specs=pl.BlockSpec((1, R, Ly), lambda b, s: (b, rev(s), 0)),
         out_shape=jax.ShapeDtypeStruct((batch, Lx, Ly), jnp.float32),
-        scratch_shapes=[
-            vmem_scratch((n_steps, T)),        # recomputed k̂ (skewed)
-            vmem_scratch((1, ny + T + 3)),     # carried adjoint row
-            vmem_scratch((n_steps, T)),        # dΔ accumulator (skewed)
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )

@@ -22,9 +22,22 @@ scratch (the boundary row) persists across strips — the TPU-native replacement
 for CUDA inter-block synchronisation.
 
 In grad mode the kernel additionally emits one **checkpoint row per strip**
-(k̂ at the strip's top boundary).  The backward kernel recomputes the strip
-interior from the checkpoint — O(nx·ny / T) activation memory instead of the
-full grid, a beyond-paper improvement (the paper stores the full grid).
+(k̂ at the strip's top boundary; two rows for the order-2 stencil, whose
+skew reads reach one row further back).  The backward kernel recomputes the
+strip interior from the checkpoint — O(nx·ny / T) activation memory instead
+of the full grid, a beyond-paper improvement (the paper stores the full
+grid).
+
+Scheme support (``GridConfig.scheme`` — coefficient sets in ``stencil.py``):
+the ``"order2"`` stencil reads the two anti-diagonal neighbours
+k̂_{i+1,j−1} / k̂_{i−1,j+1}, both living on the ``prev2`` rotating buffer
+(same lane / two lanes up).  Lane 1's k̂_{i−1,j+1} comes from the carried
+boundary row and lane 0's from a SECOND carried boundary row ``brow2``
+(= k̂[strip_top − 1, ·], written by each strip's row T−2, initialised to the
+boundary-of-ones extension), so results are independent of the strip height
+— order-2 requires T ≥ 2.  ``GridConfig.interior_dtype = "bfloat16"``
+rounds every freshly computed cell through bf16 (``stencil.round_interior``)
+while the carried boundary rows and the readout stay f32.
 """
 
 from __future__ import annotations
@@ -34,6 +47,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from . import stencil
 
 
 def coeff_A(p):
@@ -66,8 +81,9 @@ def _expand_dyadic(blk: jax.Array, lam1: int, lam2: int) -> jax.Array:
     return M * scale
 
 
-def fused_fwd_kernel(dx_ref, dy_ref, out_ref, brow_ref, *,
-                     T: int, lam1: int, lam2: int, ny: int):
+def fused_fwd_kernel(dx_ref, dy_ref, out_ref, brow_ref, brow2_ref=None, *,
+                     T: int, lam1: int, lam2: int, ny: int,
+                     scheme: str = "order1", interior_dtype: str = "float32"):
     """Fused-Δ forward: the strip's Δ block is computed ON THE FLY in VMEM as
     dx_strip @ dyᵀ (an (R, d) × (d, Ly) MXU matmul) — Δ never exists in HBM.
 
@@ -82,57 +98,89 @@ def fused_fwd_kernel(dx_ref, dy_ref, out_ref, brow_ref, *,
     @pl.when(s == 0)
     def _reset():
         brow_ref[...] = jnp.ones_like(brow_ref)
+        if brow2_ref is not None:
+            brow2_ref[...] = jnp.ones_like(brow2_ref)
 
     blk = jnp.dot(dx_ref[0], dy_ref[0].T,
                   preferred_element_type=jnp.float32)      # (R, Ly) in VMEM
-    _wavefront(blk, out_ref, None, brow_ref, T=T, lam1=lam1, lam2=lam2,
-               ny=ny, save_cps=False)
+    _wavefront(blk, out_ref, None, brow_ref, brow2_ref, T=T, lam1=lam1,
+               lam2=lam2, ny=ny, save_cps=False, scheme=scheme,
+               interior_dtype=interior_dtype)
 
 
-def fwd_kernel(delta_ref, out_ref, cps_ref, brow_ref, *,
-               T: int, lam1: int, lam2: int, ny: int, save_cps: bool):
+def fwd_kernel(delta_ref, out_ref, cps_ref, brow_ref, brow2_ref=None, *,
+               T: int, lam1: int, lam2: int, ny: int, save_cps: bool,
+               scheme: str = "order1", interior_dtype: str = "float32"):
     """One (batch, strip) grid step of the forward wavefront solver.
 
     delta_ref: (1, R, Ly) unrefined Δ rows of this strip (VMEM block).
     out_ref:   (1,) final kernel value k̂[nx, ny] (written every strip;
                the last strip's write is the result).
-    cps_ref:   (1, 1, ny + T + 1) checkpoint row (grad mode only).
+    cps_ref:   (1, cps_rows, ny + T + 1) checkpoint rows (grad mode only):
+               row 0 = brow; row 1 (order-2 only) = brow2.
     brow_ref:  (1, ny + T + 1) scratch — carried boundary row
                brow[c] = k̂[strip_top, c]; persists across grid steps.
+    brow2_ref: (1, ny + T + 1) scratch (order-2 only) — the row above it,
+               brow2[c] = k̂[strip_top − 1, c] (ones above the first strip).
     """
     s = pl.program_id(1)
 
     @pl.when(s == 0)
     def _reset():
         brow_ref[...] = jnp.ones_like(brow_ref)
+        if brow2_ref is not None:
+            brow2_ref[...] = jnp.ones_like(brow2_ref)
 
     if save_cps:
         cps_ref[0, 0, :] = brow_ref[0, :]
+        if brow2_ref is not None:
+            cps_ref[0, 1, :] = brow2_ref[0, :]
 
-    _wavefront(delta_ref[0], out_ref, cps_ref, brow_ref, T=T, lam1=lam1,
-               lam2=lam2, ny=ny, save_cps=save_cps)
+    _wavefront(delta_ref[0], out_ref, cps_ref, brow_ref, brow2_ref, T=T,
+               lam1=lam1, lam2=lam2, ny=ny, save_cps=save_cps, scheme=scheme,
+               interior_dtype=interior_dtype)
 
 
-def _wavefront(blk, out_ref, cps_ref, brow_ref, *, T, lam1, lam2, ny,
-               save_cps):
+def _wavefront(blk, out_ref, cps_ref, brow_ref, brow2_ref=None, *, T, lam1,
+               lam2, ny, save_cps, scheme="order1",
+               interior_dtype="float32"):
     """Anti-diagonal sweep of one strip given its unrefined Δ block (R, Ly)."""
     M = _expand_dyadic(blk, lam1, lam2)                # (T, ny)
     S_T = skew_to_ST(M, T, ny)                         # (ny+T, T): [t, r] = Δ(r, t-r)
 
+    order2 = scheme == "order2"
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
 
     def step(t, carry):
         prev, prev2 = carry                            # (1, T) f32
         p = jax.lax.dynamic_slice(S_T, (t, 0), (1, T))  # anti-diagonal of Δ
         A = coeff_A(p)
-        B = coeff_B(p)
         up0 = brow_ref[0, t + 1]
         upleft0 = brow_ref[0, t]
         shift_prev = jnp.where(lane == 0, up0, jnp.roll(prev, 1, axis=1))
         shift_prev2 = jnp.where(lane == 0, upleft0, jnp.roll(prev2, 1, axis=1))
         left = jnp.where(lane == t, 1.0, prev)
         upleft = jnp.where(lane == t, 1.0, shift_prev2)
-        cur = (left + shift_prev) * A - upleft * B
+        if order2:
+            # Skew neighbours both sit two wavefront steps back (prev2):
+            # k_dl = k̂[i+1, c−1] is prev2 at the SAME lane (:= 1 for c ≤ 1 —
+            # the boundary of ones extends); k_ul = k̂[i−1, c+1] is prev2 two
+            # lanes up, with lanes 1/0 reading the carried boundary rows
+            # (brow[t] = k̂[strip_top, t], brow2[t+1] = k̂[strip_top−1, t+1]).
+            # Data-gridline fallback (stencil.py): global row = strip·T +
+            # lane and T ≡ 0 (mod 2^λ1), so the row test is lane % 2^λ1;
+            # the column is c = t − lane.
+            edge = (lane % (1 << lam1) == 0) | ((t - lane) % (1 << lam2) == 0)
+            k_dl = jnp.where(lane >= t - 1, 1.0, prev2)
+            k_ul = jnp.roll(prev2, 2, axis=1)
+            k_ul = jnp.where(lane == 1, brow_ref[0, t], k_ul)
+            k_ul = jnp.where(lane == 0, brow2_ref[0, t + 1], k_ul)
+            cur = ((left + shift_prev) * A
+                   - upleft * stencil.coeff_B2_at(p, edge)
+                   - (k_dl + k_ul) * stencil.coeff_C2_at(p, edge))
+        else:
+            cur = (left + shift_prev) * A - upleft * coeff_B(p)
+        cur = stencil.round_interior(cur, interior_dtype)
         active = (lane <= t) & (lane > t - ny)
         cur = jnp.where(active, cur, 0.0)
 
@@ -141,6 +189,13 @@ def _wavefront(blk, out_ref, cps_ref, brow_ref, *, T, lam1, lam2, ny,
         @pl.when(t >= T - 1)
         def _():
             brow_ref[0, t - T + 2] = cur[0, T - 1]
+
+        if order2:
+            # row T−2 becomes next strip's brow2 (k̂[next_top − 1, ·]); the
+            # lane-0 read (index t+1) never trails this write for T ≥ 2.
+            @pl.when(t >= T - 2)
+            def _():
+                brow2_ref[0, t - T + 3] = cur[0, T - 2]
 
         return (cur, prev)
 
@@ -153,7 +208,7 @@ def _wavefront(blk, out_ref, cps_ref, brow_ref, *, T, lam1, lam2, ny,
 
 
 
-def check_strip(T: int, lam1: int, Lx: int) -> int:
+def check_strip(T: int, lam1: int, Lx: int, scheme: str = "order1") -> int:
     """Validate strip geometry; return R = T >> lam1 (unrefined rows/strip).
 
     Raises ValueError (not a bare assert) naming the offending shape and the
@@ -172,34 +227,65 @@ def check_strip(T: int, lam1: int, Lx: int) -> int:
             f"per strip (T={T}, lam1={lam1}) — the ops.py wrappers zero-pad "
             f"to the strip automatically; when calling the builders directly "
             f"pad Lx or pick a LaunchConfig.pde_strip dividing it")
+    if scheme == "order2" and T < 2:
+        raise ValueError(
+            f"Goursat strip height T={T} cannot run the order-2 stencil, "
+            f"whose skew reads span two refined rows — set "
+            f"LaunchConfig.pde_strip >= 2 (or scheme='order1')")
     return R
 
 
+def _scratch_rows(ny: int, T: int, scheme: str):
+    """Carried-boundary scratch: one row for order-1, two for order-2."""
+    rows = [vmem_scratch((1, ny + T + 1))]
+    if scheme == "order2":
+        rows.append(vmem_scratch((1, ny + T + 1)))
+    return rows
+
+
+def cps_rows(scheme: str) -> int:
+    """Checkpoint rows per strip (brow, plus brow2 for the order-2 stencil)."""
+    return 2 if scheme == "order2" else 1
+
+
 def build_fwd(batch: int, Lx: int, Ly: int, *, T: int, lam1: int, lam2: int,
-              save_cps: bool, interpret: bool):
+              save_cps: bool, interpret: bool, scheme: str = "order1",
+              interior_dtype: str = "float32"):
     """Construct the pallas_call for the forward solver.
 
     Lx must be a multiple of R = T >> lam1 (ops.py zero-pads: Δ = 0 rows/cols
-    leave the Goursat solution invariant since A(0) = B(0) = 1).
+    leave the Goursat solution invariant since A(0) = B(0) = 1; the order-2
+    stencil preserves this because B₂(0) = 1 and C(0) = 0).
     """
-    R = check_strip(T, lam1, Lx)
+    R = check_strip(T, lam1, Lx, scheme)
     n_strips = Lx // R
     ny = Ly << lam2
+    rows = cps_rows(scheme)
 
     if save_cps:
         kern = functools.partial(fwd_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny,
-                                 save_cps=True)
+                                 save_cps=True, scheme=scheme,
+                                 interior_dtype=interior_dtype)
+    elif scheme == "order2":
+        def kern(delta_ref, out_ref, brow_ref, brow2_ref):
+            fwd_kernel(delta_ref, out_ref, None, brow_ref, brow2_ref,
+                       T=T, lam1=lam1, lam2=lam2, ny=ny, save_cps=False,
+                       scheme=scheme, interior_dtype=interior_dtype)
     else:
         def kern(delta_ref, out_ref, brow_ref):
             fwd_kernel(delta_ref, out_ref, None, brow_ref,
-                       T=T, lam1=lam1, lam2=lam2, ny=ny, save_cps=False)
+                       T=T, lam1=lam1, lam2=lam2, ny=ny, save_cps=False,
+                       scheme=scheme, interior_dtype=interior_dtype)
 
     out_shapes = [jax.ShapeDtypeStruct((batch,), jnp.float32)]
     out_specs = [pl.BlockSpec((1,), lambda b, s: (b,))]
     if save_cps:
-        out_shapes.append(
-            jax.ShapeDtypeStruct((batch, n_strips, ny + T + 1), jnp.float32))
-        out_specs.append(pl.BlockSpec((1, 1, ny + T + 1), lambda b, s: (b, s, 0)))
+        # rows checkpoint rows per strip, folded into one axis so the order-1
+        # layout (rows = 1) stays bitwise-identical to the historical one.
+        out_shapes.append(jax.ShapeDtypeStruct(
+            (batch, n_strips * rows, ny + T + 1), jnp.float32))
+        out_specs.append(
+            pl.BlockSpec((1, rows, ny + T + 1), lambda b, s: (b, s, 0)))
 
     return pl.pallas_call(
         kern,
@@ -207,18 +293,21 @@ def build_fwd(batch: int, Lx: int, Ly: int, *, T: int, lam1: int, lam2: int,
         in_specs=[pl.BlockSpec((1, R, Ly), lambda b, s: (b, s, 0))],
         out_specs=out_specs if save_cps else out_specs[0],
         out_shape=out_shapes if save_cps else out_shapes[0],
-        scratch_shapes=[vmem_scratch((1, ny + T + 1))],
+        scratch_shapes=_scratch_rows(ny, T, scheme),
         interpret=interpret,
     )
 
 
 def build_fwd_fused(batch: int, Lx: int, Ly: int, d: int, *, T: int,
-                    lam1: int, lam2: int, interpret: bool):
+                    lam1: int, lam2: int, interpret: bool,
+                    scheme: str = "order1", interior_dtype: str = "float32"):
     """Fused-Δ forward: inputs are increments dx (B, Lx, d), dy (B, Ly, d)."""
-    R = check_strip(T, lam1, Lx)
+    R = check_strip(T, lam1, Lx, scheme)
     n_strips = Lx // R
     ny = Ly << lam2
-    kern = functools.partial(fused_fwd_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny)
+    kern = functools.partial(fused_fwd_kernel, T=T, lam1=lam1, lam2=lam2,
+                             ny=ny, scheme=scheme,
+                             interior_dtype=interior_dtype)
     return pl.pallas_call(
         kern,
         grid=(batch, n_strips),
@@ -226,35 +315,42 @@ def build_fwd_fused(batch: int, Lx: int, Ly: int, d: int, *, T: int,
                   pl.BlockSpec((1, Ly, d), lambda b, s: (b, 0, 0))],
         out_specs=pl.BlockSpec((1,), lambda b, s: (b,)),
         out_shape=jax.ShapeDtypeStruct((batch,), jnp.float32),
-        scratch_shapes=[vmem_scratch((1, ny + T + 1))],
+        scratch_shapes=_scratch_rows(ny, T, scheme),
         interpret=interpret,
     )
 
 
-def fused_gram_kernel(dx_ref, dy_ref, out_ref, brow_ref, *,
-                      T: int, lam1: int, lam2: int, ny: int):
+def fused_gram_kernel(dx_ref, dy_ref, out_ref, brow_ref, brow2_ref=None, *,
+                      T: int, lam1: int, lam2: int, ny: int,
+                      scheme: str = "order1", interior_dtype: str = "float32"):
     s = pl.program_id(2)
 
     @pl.when(s == 0)
     def _reset():
         brow_ref[...] = jnp.ones_like(brow_ref)
+        if brow2_ref is not None:
+            brow2_ref[...] = jnp.ones_like(brow2_ref)
 
     blk = jnp.dot(dx_ref[0], dy_ref[0].T,
                   preferred_element_type=jnp.float32)
-    _wavefront(blk, None, None, brow_ref, T=T, lam1=lam1, lam2=lam2,
-               ny=ny, save_cps=False)
+    _wavefront(blk, None, None, brow_ref, brow2_ref, T=T, lam1=lam1,
+               lam2=lam2, ny=ny, save_cps=False, scheme=scheme,
+               interior_dtype=interior_dtype)
     out_ref[0, 0] = brow_ref[0, ny]
 
 
 def build_gram_fused(Bx: int, By: int, Lx: int, Ly: int, d: int, *, T: int,
-                     lam1: int, lam2: int, interpret: bool):
+                     lam1: int, lam2: int, interpret: bool,
+                     scheme: str = "order1", interior_dtype: str = "float32"):
     """Fused-Δ Gram: grid over (row path, col path, strip); dx/dy blocks are
     fetched from the ORIGINAL increment arrays by index map — neither Δ nor
     any pairwise replication of the paths ever exists in HBM."""
-    R = check_strip(T, lam1, Lx)
+    R = check_strip(T, lam1, Lx, scheme)
     n_strips = Lx // R
     ny = Ly << lam2
-    kern = functools.partial(fused_gram_kernel, T=T, lam1=lam1, lam2=lam2, ny=ny)
+    kern = functools.partial(fused_gram_kernel, T=T, lam1=lam1, lam2=lam2,
+                             ny=ny, scheme=scheme,
+                             interior_dtype=interior_dtype)
     return pl.pallas_call(
         kern,
         grid=(Bx, By, n_strips),
@@ -262,7 +358,7 @@ def build_gram_fused(Bx: int, By: int, Lx: int, Ly: int, d: int, *, T: int,
                   pl.BlockSpec((1, Ly, d), lambda a, b, s: (b, 0, 0))],
         out_specs=pl.BlockSpec((1, 1), lambda a, b, s: (a, b)),
         out_shape=jax.ShapeDtypeStruct((Bx, By), jnp.float32),
-        scratch_shapes=[vmem_scratch((1, ny + T + 1))],
+        scratch_shapes=_scratch_rows(ny, T, scheme),
         interpret=interpret,
     )
 

@@ -59,59 +59,70 @@ def _max_t(launch) -> int:
     return getattr(launch, "pde_strip", None) or _MAX_T
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 6))
 def _solve_flat(delta: jax.Array, lam1: int, lam2: int, with_cps: bool,
-                launch=None):
+                launch=None, scheme: str = "order1",
+                interior_dtype: str = "float32"):
     B, Lx, Ly = delta.shape
     T = choose_T(Lx, Ly, lam1, lam2, max_t=_max_t(launch))
     delta, Lxp = _pad_batched(delta, T >> lam1)
     call = build_fwd(B, Lxp, Ly, T=T, lam1=lam1, lam2=lam2,
-                     save_cps=with_cps, interpret=_on_cpu())
+                     save_cps=with_cps, interpret=_on_cpu(), scheme=scheme,
+                     interior_dtype=interior_dtype)
     out = call(delta)
     return out
 
 
-def solve(delta: jax.Array, lam1: int = 0, lam2: int = 0,
-          launch=None) -> jax.Array:
+def solve(delta: jax.Array, lam1: int = 0, lam2: int = 0, launch=None,
+          scheme: str = "order1",
+          interior_dtype: str = "float32") -> jax.Array:
     """Final kernel values for Δ (..., Lx, Ly) -> (...,)."""
     batch_shape = delta.shape[:-2]
     flat = delta.reshape((-1,) + delta.shape[-2:]).astype(jnp.float32)
-    k = _solve_flat(flat, lam1, lam2, False, launch)
+    k = _solve_flat(flat, lam1, lam2, False, launch, scheme, interior_dtype)
     return k.reshape(batch_shape)
 
 
 def solve_with_grid(delta: jax.Array, lam1: int = 0, lam2: int = 0,
-                    launch=None):
+                    launch=None, scheme: str = "order1",
+                    interior_dtype: str = "float32"):
     """Forward + residuals for the exact backward (checkpoint rows, not the
     full grid).  Returns (k, cps)."""
     batch_shape = delta.shape[:-2]
     flat = delta.reshape((-1,) + delta.shape[-2:]).astype(jnp.float32)
-    k, cps = _solve_flat(flat, lam1, lam2, True, launch)
+    k, cps = _solve_flat(flat, lam1, lam2, True, launch, scheme,
+                         interior_dtype)
     return k.reshape(batch_shape), cps
 
 
-@functools.partial(jax.jit, static_argnums=(3, 4, 5))
-def _grad_flat(delta, cps, gbar, lam1, lam2, launch=None):
+@functools.partial(jax.jit, static_argnums=(3, 4, 5, 6, 7))
+def _grad_flat(delta, cps, gbar, lam1, lam2, launch=None,
+               scheme: str = "order1", interior_dtype: str = "float32"):
     B, Lx, Ly = delta.shape
     T = choose_T(Lx, Ly, lam1, lam2, max_t=_max_t(launch))
     delta, Lxp = _pad_batched(delta, T >> lam1)
     call = build_bwd(B, Lxp, Ly, T=T, lam1=lam1, lam2=lam2,
-                     interpret=_on_cpu())
+                     interpret=_on_cpu(), scheme=scheme,
+                     interior_dtype=interior_dtype)
     dd = call(delta, delta, cps, gbar)
     return dd[:, :Lx, :]
 
 
 def solve_grad(delta: jax.Array, cps: jax.Array, gbar: jax.Array,
-               lam1: int = 0, lam2: int = 0, launch=None) -> jax.Array:
+               lam1: int = 0, lam2: int = 0, launch=None,
+               scheme: str = "order1",
+               interior_dtype: str = "float32") -> jax.Array:
     """Exact ∂F/∂Δ (paper Alg 4) from saved checkpoint rows.
 
     ``launch`` must match the forward's — the checkpoint-row cadence is the
-    strip height, so backward strips must line up with the saved rows.
+    strip height, so backward strips must line up with the saved rows (and
+    the scheme/interior_dtype must match: the backward recomputes strip
+    interiors with the SAME stencil and rounding the forward used).
     """
     batch_shape = delta.shape[:-2]
     flat = delta.reshape((-1,) + delta.shape[-2:]).astype(jnp.float32)
     g = gbar.reshape((-1,)).astype(jnp.float32)
-    dd = _grad_flat(flat, cps, g, lam1, lam2, launch)
+    dd = _grad_flat(flat, cps, g, lam1, lam2, launch, scheme, interior_dtype)
     return dd.reshape(batch_shape + dd.shape[-2:]).astype(delta.dtype)
 
 
@@ -124,9 +135,10 @@ def solve_grad(delta: jax.Array, cps: jax.Array, gbar: jax.Array,
 # recomputes strip interiors from the forward's checkpoint rows.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6))
 def _solve_fused_impl(dx: jax.Array, dy: jax.Array, lam1: int,
-                      lam2: int, launch=None) -> jax.Array:
+                      lam2: int, launch=None, scheme: str = "order1",
+                      interior_dtype: str = "float32") -> jax.Array:
     from .kernel import build_fwd_fused
     B, Lx, d = dx.shape
     Ly = dy.shape[1]
@@ -136,19 +148,24 @@ def _solve_fused_impl(dx: jax.Array, dy: jax.Array, lam1: int,
     if pad:  # zero increments -> zero Δ rows -> exact no-ops
         dx = jnp.pad(dx, ((0, 0), (0, pad), (0, 0)))
     call = build_fwd_fused(B, Lx + pad, Ly, d, T=T, lam1=lam1, lam2=lam2,
-                           interpret=_on_cpu())
+                           interpret=_on_cpu(), scheme=scheme,
+                           interior_dtype=interior_dtype)
     return call(dx.astype(jnp.float32), dy.astype(jnp.float32))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
 def solve_fused(dx: jax.Array, dy: jax.Array, lam1: int = 0,
-                lam2: int = 0, launch=None) -> jax.Array:
+                lam2: int = 0, launch=None, scheme: str = "order1",
+                interior_dtype: str = "float32") -> jax.Array:
     """k̂ final values from increments directly. dx: (B, Lx, d), dy: (B, Ly, d)."""
-    return _solve_fused_impl(dx, dy, lam1, lam2, launch)
+    return _solve_fused_impl(dx, dy, lam1, lam2, launch, scheme,
+                             interior_dtype)
 
 
-def _solve_fused_fwd(dx, dy, lam1, lam2, launch):
-    return _solve_fused_impl(dx, dy, lam1, lam2, launch), (dx, dy)
+def _solve_fused_fwd(dx, dy, lam1, lam2, launch, scheme="order1",
+                     interior_dtype="float32"):
+    return (_solve_fused_impl(dx, dy, lam1, lam2, launch, scheme,
+                              interior_dtype), (dx, dy))
 
 
 def _delta_pullback(dd, dx, dy):
@@ -158,21 +175,24 @@ def _delta_pullback(dd, dx, dy):
     return ddx.astype(dx.dtype), ddy.astype(dy.dtype)
 
 
-def _solve_fused_bwd(lam1, lam2, launch, res, gbar):
+def _solve_fused_bwd(lam1, lam2, launch, scheme, interior_dtype, res, gbar):
     dx, dy = res
     delta = jnp.einsum("bid,bjd->bij", dx.astype(jnp.float32),
                        dy.astype(jnp.float32))
-    _, cps = solve_with_grid(delta, lam1, lam2, launch)
-    dd = solve_grad(delta, cps, gbar, lam1, lam2, launch)
+    _, cps = solve_with_grid(delta, lam1, lam2, launch, scheme,
+                             interior_dtype)
+    dd = solve_grad(delta, cps, gbar, lam1, lam2, launch, scheme,
+                    interior_dtype)
     return _delta_pullback(dd, dx, dy)
 
 
 solve_fused.defvjp(_solve_fused_fwd, _solve_fused_bwd)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6))
 def _gram_fused_impl(dX: jax.Array, dY: jax.Array, lam1: int,
-                     lam2: int, launch=None) -> jax.Array:
+                     lam2: int, launch=None, scheme: str = "order1",
+                     interior_dtype: str = "float32") -> jax.Array:
     from .kernel import build_gram_fused
     Bx, Lx, d = dX.shape
     By, Ly = dY.shape[0], dY.shape[1]
@@ -182,30 +202,37 @@ def _gram_fused_impl(dX: jax.Array, dY: jax.Array, lam1: int,
     if pad:
         dX = jnp.pad(dX, ((0, 0), (0, pad), (0, 0)))
     call = build_gram_fused(Bx, By, Lx + pad, Ly, d, T=T, lam1=lam1,
-                            lam2=lam2, interpret=_on_cpu())
+                            lam2=lam2, interpret=_on_cpu(), scheme=scheme,
+                            interior_dtype=interior_dtype)
     return call(dX.astype(jnp.float32), dY.astype(jnp.float32))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
 def gram_fused(dX: jax.Array, dY: jax.Array, lam1: int = 0,
-               lam2: int = 0, launch=None) -> jax.Array:
+               lam2: int = 0, launch=None, scheme: str = "order1",
+               interior_dtype: str = "float32") -> jax.Array:
     """Full Gram from increments. dX: (Bx, Lx, d), dY: (By, Ly, d) -> (Bx, By)."""
-    return _gram_fused_impl(dX, dY, lam1, lam2, launch)
+    return _gram_fused_impl(dX, dY, lam1, lam2, launch, scheme,
+                            interior_dtype)
 
 
-def _gram_fused_fwd(dX, dY, lam1, lam2, launch):
-    return _gram_fused_impl(dX, dY, lam1, lam2, launch), (dX, dY)
+def _gram_fused_fwd(dX, dY, lam1, lam2, launch, scheme="order1",
+                    interior_dtype="float32"):
+    return (_gram_fused_impl(dX, dY, lam1, lam2, launch, scheme,
+                             interior_dtype), (dX, dY))
 
 
-def _gram_fused_bwd(lam1, lam2, launch, res, gbar):
+def _gram_fused_bwd(lam1, lam2, launch, scheme, interior_dtype, res, gbar):
     # The reverse sweep materialises the Bx·By pairwise Δ block — bound it by
     # row-blocking the Gram (repro.core.gram), which confines this to one
     # block at a time.
     dX, dY = res
     delta = jnp.einsum("aid,bjd->abij", dX.astype(jnp.float32),
                        dY.astype(jnp.float32))
-    _, cps = solve_with_grid(delta, lam1, lam2, launch)
-    dd = solve_grad(delta, cps, gbar, lam1, lam2, launch)
+    _, cps = solve_with_grid(delta, lam1, lam2, launch, scheme,
+                             interior_dtype)
+    dd = solve_grad(delta, cps, gbar, lam1, lam2, launch, scheme,
+                    interior_dtype)
     ddX = jnp.einsum("abij,bjd->aid", dd, dY.astype(dd.dtype))
     ddY = jnp.einsum("abij,aid->bjd", dd, dX.astype(dd.dtype))
     return ddX.astype(dX.dtype), ddY.astype(dY.dtype)

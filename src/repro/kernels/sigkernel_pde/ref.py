@@ -2,7 +2,9 @@
 
 Delegates to the independently-written row-scan reference in
 ``repro.core.sigkernel`` (which is itself validated against truncated
-signature inner products and autodiff).
+signature inner products and autodiff).  ``scheme`` / ``interior_dtype``
+select the cell-update stencil and interior precision (``stencil.py``) and
+are honoured identically by the Pallas kernels.
 """
 
 from __future__ import annotations
@@ -12,18 +14,27 @@ import jax
 from repro.core.sigkernel import (solve_goursat, solve_goursat_grad)
 
 
-def solve(delta: jax.Array, lam1: int = 0, lam2: int = 0) -> jax.Array:
+def solve(delta: jax.Array, lam1: int = 0, lam2: int = 0,
+          scheme: str = "order1",
+          interior_dtype: str = "float32") -> jax.Array:
     """Final kernel values k̂[nx, ny] for a batch of Δ matrices (..., Lx, Ly)."""
-    return solve_goursat(delta, lam1, lam2)
+    return solve_goursat(delta, lam1, lam2, scheme=scheme,
+                         interior_dtype=interior_dtype)
 
 
-def solve_grid(delta: jax.Array, lam1: int = 0, lam2: int = 0) -> jax.Array:
+def solve_grid(delta: jax.Array, lam1: int = 0, lam2: int = 0,
+               scheme: str = "order1",
+               interior_dtype: str = "float32") -> jax.Array:
     """Full refined PDE grids (..., nx+1, ny+1)."""
-    return solve_goursat(delta, lam1, lam2, return_grid=True)
+    return solve_goursat(delta, lam1, lam2, return_grid=True, scheme=scheme,
+                         interior_dtype=interior_dtype)
 
 
 def solve_grad(delta: jax.Array, gbar: jax.Array, lam1: int = 0,
-               lam2: int = 0) -> jax.Array:
+               lam2: int = 0, scheme: str = "order1",
+               interior_dtype: str = "float32") -> jax.Array:
     """Exact ∂F/∂Δ (Alg 4) given upstream cotangents gbar (...,)."""
-    grid = solve_goursat(delta, lam1, lam2, return_grid=True)
-    return solve_goursat_grad(delta, grid, gbar, lam1, lam2)
+    grid = solve_goursat(delta, lam1, lam2, return_grid=True, scheme=scheme,
+                         interior_dtype=interior_dtype)
+    return solve_goursat_grad(delta, grid, gbar, lam1, lam2, scheme=scheme,
+                              interior_dtype=interior_dtype)

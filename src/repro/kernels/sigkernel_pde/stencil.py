@@ -1,0 +1,238 @@
+"""Pluggable Goursat cell-update stencils (+ mixed-precision rounding).
+
+Every PDE backend (reference row scan, antidiag wavefront, Pallas strip
+kernels and their fused variants) consumes the SAME coefficient set from
+here, so a scheme is implemented once and the backends stay consistent —
+``GridConfig.scheme`` picks the stencil, ``GridConfig.interior_dtype`` the
+interior storage precision, both static.
+
+Schemes
+-------
+
+``order1`` (default — the paper's eq. (1) discretisation, bitwise-identical
+to the historical solvers)::
+
+    k̂_{i+1,j+1} = (k̂_{i+1,j} + k̂_{i,j+1})·A(p) − k̂_{i,j}·B(p)
+    A(p) = 1 + p/2 + p²/12,   B(p) = 1 − p²/12,   p = refined Δ cell.
+
+``order2`` (anti-diagonal curvature correction, after "Numerical Schemes for
+Signature Kernels", arxiv 2502.08470): the order-1 update drops a
+(p/12)·h²(∂²_s + ∂²_t)k truncation term; estimate it from the two
+anti-diagonal neighbours already inside the wavefront's working set,
+
+    h²(k_ss + k_tt) ≈ k̂_{i+1,j−1} + k̂_{i−1,j+1} − 2·k̂_{i,j} + 2p·k̂_{i,j}
+
+(the Taylor sum of the skew neighbours gives h²(k_ss + k_tt − 2k_st), and
+the PDE k_st = Δ·k replaces the mixed term by 2p·k̂), and subtract it::
+
+    k̂_{i+1,j+1} = (k̂_{i+1,j} + k̂_{i,j+1})·A(p) − k̂_{i,j}·B₂(p)
+                  − C(p)·(k̂_{i+1,j−1} + k̂_{i−1,j+1})
+    B₂(p) = 1 − p/6 + p²/12,   C(p) = p/12.
+
+Cells on unrefined data gridlines fall back to order-1.  Δ is
+piecewise-constant per *unrefined* cell (the paths are piecewise linear),
+so k_ss / k_tt carry kinks along every data gridline — including the k ≡ 1
+axes, where the constant extension of the path kinks too.  A writer
+k̂_{i+1,j+1} whose skew reads straddle such a line (``i % 2^λ1 == 0 or
+j % 2^λ2 == 0`` in refined coordinates) would difference across the kink,
+injecting an O(h²) error along O(h⁻¹)-cell strips that drags the whole
+solve back below first order (empirically *worse* than order-1).  Those
+writers use the order-1 coefficients (B₁, no C) instead: O(h⁴) local error
+on the O(h⁻¹) gridline cells keeps the interior order.  The
+``coeff_*_at(p, edge)`` helpers below select per-cell so every backend
+applies the same rule.  Consequences: ``order2`` differs from ``order1``
+only when both λ1 ≥ 1 and λ2 ≥ 1 (at λ = 0 every refined line is a data
+line, and the schemes coincide bitwise — docs/solver_guide.md); end-aligned
+ragged padding ends on a data gridline, so the ragged kink is handled by
+the same rule, and since B₂(0) = B₁(0) = 1 and C(0) = 0, zero-Δ padding
+still leaves the solution bitwise invariant, preserving the ragged /
+strip-padding exactness arguments of the order-1 solvers unchanged.  The
+correction is symmetric in the two skew neighbours and the gridline rule
+swaps with (i, λ1) ↔ (j, λ2), so the antidiag backend's lane-transpose
+(nx > ny) stays valid.
+
+Exact adjoints (one-pass backward, per scheme)
+----------------------------------------------
+
+Differentiating the *recurrence* (not the PDE) gives, with
+g[a,b] = ∂F/∂k̂[a,b] and out-of-grid g ≡ 0:
+
+order1::
+
+    g[a,b] = g[a,b+1]·A(p[a−1,b]) + g[a+1,b]·A(p[a,b−1])
+             − g[a+1,b+1]·B(p[a,b])
+    dΔ[i,j] += g[i+1,j+1]·[(k̂_{i+1,j}+k̂_{i,j+1})·A'(p) − k̂_{i,j}·B'(p)]
+    A'(p) = 1/2 + p/6,   B'(p) = −p/6.
+
+order2 — two extra terms, because cells (a−1, b+1) and (a+1, b−1) also read
+k̂[a,b] (as their k_dl / k_ul skew neighbours, coefficient −C)::
+
+    g[a,b] = g[a,b+1]·A(p[a−1,b]) + g[a+1,b]·A(p[a,b−1])
+             − g[a+1,b+1]·B?(p[a,b])
+             − g[a,b+2]·C?(p[a−1,b+1]) − g[a+2,b]·C?(p[a+1,b−1])
+    dΔ[i,j] += g[i+1,j+1]·[(k̂_{i+1,j}+k̂_{i,j+1})·A'(p) − k̂_{i,j}·B?'(p)
+                            − (k̂_{i+1,j−1}+k̂_{i−1,j+1})·C?'(p)]
+    B₂'(p) = −1/6 + p/6,   C'(p) = 1/12.
+
+``B?``/``C?`` are each *writer's own* per-cell selection (the adjoint of a
+per-cell-selected forward selects per writer), with
+``edge(i, j) = (i % 2^λ1 == 0) | (j % 2^λ2 == 0)`` on cell indices: the
+−B term from writer (a+1, b+1) uses B₁ iff ``edge(a, b)``; the −C term
+from writer (a, b+2) (a cell (a−1, b+1) write) exists iff
+``not edge(a−1, b+1)``, and the one from writer (a+2, b) (a cell
+(a+1, b−1) write) iff ``not edge(a+1, b−1)``; the dΔ row selects on the
+contributing cell (i, j) itself.  Gridline skew reads appear in dΔ with
+exactly the value the forward used — the backward is the exact adjoint of
+the discrete forward map, FD-checked per (scheme, backend) in
+tests/test_schemes.py.
+
+Mixed precision
+---------------
+
+``round_interior(x, "bfloat16")`` rounds interior cell values through bf16
+after every update; all arithmetic, the boundary of ones, carried boundary
+rows and the readout stay f32 (the contract PR 5's f32 time-grid finding
+motivates).  The rounding carries an explicit straight-through gradient
+(``jax.custom_vjp`` identity), so each scheme's one-pass backward above IS
+the exact adjoint of the rounded forward with full-precision cotangents —
+asserted against ``jax.grad`` of the rounded reference solver in
+tests/test_schemes.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: cell-update stencils implemented by every exact PDE backend
+SCHEMES = ("order1", "order2")
+
+#: interior-cell storage precisions (boundary/readout always f32)
+INTERIOR_DTYPES = ("float32", "bfloat16")
+
+
+def check_scheme(scheme: str) -> str:
+    """Validate a scheme name (the kernels' static argument)."""
+    if scheme not in SCHEMES:
+        raise ValueError(
+            f"unknown Goursat scheme {scheme!r}: GridConfig.scheme must be "
+            f"one of {SCHEMES}")
+    return scheme
+
+
+def check_interior_dtype(interior_dtype: str) -> str:
+    """Validate an interior-dtype name (the kernels' static argument)."""
+    if interior_dtype not in INTERIOR_DTYPES:
+        raise ValueError(
+            f"unknown interior dtype {interior_dtype!r}: "
+            f"GridConfig.interior_dtype must be one of {INTERIOR_DTYPES}")
+    return interior_dtype
+
+
+# ---------------------------------------------------------------------------
+# forward coefficients
+# ---------------------------------------------------------------------------
+
+def coeff_A(p):
+    return 1.0 + 0.5 * p + (1.0 / 12.0) * p * p
+
+
+def coeff_B1(p):
+    return 1.0 - (1.0 / 12.0) * p * p
+
+
+def coeff_B2(p):
+    return 1.0 - (1.0 / 6.0) * p + (1.0 / 12.0) * p * p
+
+
+def coeff_C2(p):
+    return (1.0 / 12.0) * p
+
+
+def coeff_B(p, scheme: str = "order1"):
+    """Scheme-dispatched k̂_{i,j} coefficient (B for order1, B₂ for order2)."""
+    return coeff_B2(p) if scheme == "order2" else coeff_B1(p)
+
+
+def coeff_B2_at(p, edge):
+    """Per-cell B for order2: B₁ where ``edge`` (order-1 fallback), else B₂.
+
+    ``edge`` marks cells (i, j) with ``i % 2^λ1 == 0 or j % 2^λ2 == 0`` —
+    writers whose skew reads would straddle a data-gridline kink (module
+    docstring).
+    """
+    return jnp.where(edge, coeff_B1(p), coeff_B2(p))
+
+
+def coeff_C2_at(p, edge):
+    """Per-cell C for order2: 0 where ``edge`` (order-1 fallback), else C."""
+    return jnp.where(edge, jnp.zeros_like(p), coeff_C2(p))
+
+
+# ---------------------------------------------------------------------------
+# adjoint (dΔ) coefficients — derivatives of the above w.r.t. p
+# ---------------------------------------------------------------------------
+
+def coeff_dA(p):
+    return 0.5 + p / 6.0
+
+
+def coeff_dB1(p):
+    return -p / 6.0
+
+
+def coeff_dB2(p):
+    return -1.0 / 6.0 + p / 6.0
+
+
+def coeff_dC2(p):
+    return jnp.full_like(p, 1.0 / 12.0)
+
+
+def coeff_dB(p, scheme: str = "order1"):
+    """Scheme-dispatched B'(p) (B' for order1, B₂' for order2)."""
+    return coeff_dB2(p) if scheme == "order2" else coeff_dB1(p)
+
+
+def coeff_dB2_at(p, edge):
+    """Per-cell B' for order2 dΔ: B₁' where ``edge``, else B₂'."""
+    return jnp.where(edge, coeff_dB1(p), coeff_dB2(p))
+
+
+def coeff_dC2_at(p, edge):
+    """Per-cell C' for order2 dΔ: 0 where ``edge``, else 1/12."""
+    return jnp.where(edge, jnp.zeros_like(p), coeff_dC2(p))
+
+
+# ---------------------------------------------------------------------------
+# mixed-precision rounding
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _round_bf16(x):
+    return x.astype(jnp.bfloat16).astype(x.dtype)
+
+
+def _round_bf16_fwd(x):
+    return _round_bf16(x), None
+
+
+def _round_bf16_bwd(_, ct):
+    return (ct,)
+
+
+_round_bf16.defvjp(_round_bf16_fwd, _round_bf16_bwd)
+
+
+def round_interior(x, interior_dtype: str = "float32"):
+    """Quantise a freshly updated interior cell per the precision contract.
+
+    ``"float32"`` is the identity (bitwise no-op — not even a cast);
+    ``"bfloat16"`` rounds through bf16 while keeping the f32 carried
+    representation.  The gradient is straight-through (exact identity
+    cotangent — the backward never quantises), so ``jax.grad`` of a
+    rounded reference forward matches each scheme's one-pass adjoint.
+    """
+    if interior_dtype == "float32":
+        return x
+    return _round_bf16(x)

@@ -60,11 +60,12 @@ from ..core.signature import _signature_stream_from_increments
 #: inside the jitted bodies, so they advance once per *trace* (shape
 #: bucket), never on warm-cache calls.  Tests and the serving loop read
 #: them to prove bucketing really bounds retracing.
-_TRACE_COUNTS: Dict[str, int] = {"build": 0, "update": 0, "query": 0}
+_TRACE_COUNTS: Dict[str, int] = {"build": 0, "update": 0, "query": 0,
+                                 "evict": 0}
 
 
 def trace_counts() -> Dict[str, int]:
-    """Snapshot of the jit-trace counters (build / update / query)."""
+    """Snapshot of the jit-trace counters (build/update/query/evict)."""
     return dict(_TRACE_COUNTS)
 
 
@@ -220,6 +221,39 @@ def _update_kernel(points: jax.Array, prefix: jax.Array,
     return points, prefix, inv_prefix, length + k
 
 
+@functools.partial(jax.jit, static_argnames=("C", "M", "f", "d", "depth"))
+def _evict_kernel(points: jax.Array, prefix: jax.Array,
+                  inv_prefix: jax.Array, length: jax.Array, e: jax.Array, *,
+                  C: int, M: int, f: int, d: int, depth: int):
+    """Drop the first ``e`` points by a group-inverse splice — no re-scan.
+
+    The evicted prefix ``Q_{f·e}`` is a pivot: every surviving prefix is
+    rebased as ``Q'_k = Q_{f·e}⁻¹ ⊗ Q_{f·e+k}`` (and its inverse as
+    ``Q'⁻¹_k = Q_{f·e+k}⁻¹ ⊗ Q_{f·e}``) — two *batched* Chen combines over
+    the gathered survivor rows, exactly the group identity interval
+    queries use.  No increment is ever re-folded: the only scan-shaped
+    work is the gather.  ``C``/``M`` are the (static) shrunken point /
+    store capacities; gathers clip at the true tip so the tail padding
+    repeats it, matching ``_build_kernel``'s edge-pad semantics.
+    """
+    _TRACE_COUNTS["evict"] += 1
+    e = jnp.asarray(e, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    pidx = jnp.clip(e + jnp.arange(C, dtype=jnp.int32), 0, length - 1)
+    new_points = _gather(points, pidx)
+    t = f * e                                      # transformed pivot step
+    sidx = jnp.clip(t + jnp.arange(M, dtype=jnp.int32), 0,
+                    f * (length - 1) - 1)
+    q = _gather(prefix, sidx)
+    iq = _gather(inv_prefix, sidx)
+    piv_q = jnp.broadcast_to(_gather(prefix, (t - 1)[None]), q.shape)
+    piv_i = jnp.broadcast_to(_gather(inv_prefix, (t - 1)[None]), q.shape)
+    new_prefix = ta.chen(piv_i, q, d, depth)
+    new_inv = ta.chen(iq, piv_q, d, depth)
+    record_combines(2 * M)
+    return new_points, new_prefix, new_inv, length - e
+
+
 # ---------------------------------------------------------------------------
 # configs
 # ---------------------------------------------------------------------------
@@ -273,7 +307,9 @@ class Path:
     ``Q_m = S(x over the first m transformed increments)`` and their group
     inverses, ``length`` the true point count (int32 scalar — all paths in
     a batch share it; buffer content past it is unspecified).  Static
-    metadata: ``depth`` and the (lead-lag-only) ``transforms``.
+    metadata: ``depth``, the (lead-lag-only) ``transforms`` and the
+    optional ``retention`` cap (:meth:`evict` runs automatically inside
+    :meth:`update` whenever the length would exceed it).
     """
 
     points: jax.Array
@@ -282,20 +318,32 @@ class Path:
     length: jax.Array
     depth: int
     transforms: TransformPipeline = TransformPipeline()
+    retention: Optional[int] = None
 
     # -- construction -------------------------------------------------------
 
     @classmethod
     def from_points(cls, points: jax.Array, depth: int, *,
-                    transforms: Optional[TransformPipeline] = None
-                    ) -> "Path":
+                    transforms: Optional[TransformPipeline] = None,
+                    retention: Optional[int] = None) -> "Path":
         """Build the prefix store for ``points`` (..., L, d), L ≥ 2.
 
         One O(L) Horner stream scan (the same scan as
         ``repro.signature(..., stream=True)``), padded up to the
         power-of-two capacity bucket so nearby lengths share a jit trace.
+
+        ``retention=n`` caps the stored history at ``n`` points: every
+        :meth:`update` that would exceed it auto-:meth:`evict`\\ s the
+        oldest points first, so an endless stream runs in O(n) memory with
+        zero re-scans.  The initial points must already fit the cap.
         """
         transforms = _check_pipeline(transforms)
+        if retention is not None and (
+                not isinstance(retention, int) or isinstance(retention, bool)
+                or retention < 2):
+            raise ValueError(
+                f"retention must be None or a Python int >= 2 (a path keeps "
+                f"at least one increment), got {retention!r}")
         points = jnp.asarray(points)
         if points.ndim < 2:
             raise ValueError(
@@ -305,6 +353,10 @@ class Path:
         if L < 2:
             raise ValueError(
                 f"Path needs at least 2 points (one increment), got L={L}")
+        if retention is not None and L > retention:
+            raise ValueError(
+                f"initial points ({L}) exceed retention={retention}; slice "
+                f"the history yourself — eviction applies to updates")
         if not (isinstance(depth, int) and not isinstance(depth, bool)
                 and depth >= 1):
             raise ValueError(f"depth must be a Python int >= 1, got {depth!r}")
@@ -317,7 +369,7 @@ class Path:
                                     lead_lag=transforms.lead_lag)
         return cls(points=points, prefix=prefix, inv_prefix=inv,
                    length=jnp.asarray(L, jnp.int32), depth=depth,
-                   transforms=transforms)
+                   transforms=transforms, retention=retention)
 
     # -- shape facts --------------------------------------------------------
 
@@ -483,6 +535,47 @@ class Path:
             points, prefix, inv_prefix, self.length, new_points,
             jnp.asarray(k, jnp.int32), depth=self.depth,
             lead_lag=self.transforms.lead_lag)
+        out = dataclasses.replace(
+            self, points=points, prefix=prefix, inv_prefix=inv_prefix,
+            length=length)
+        if self.retention is not None and L + k > self.retention:
+            out = out.evict(before=L + k - self.retention)
+        return out
+
+    # -- eviction ------------------------------------------------------------
+
+    def evict(self, *, before: int) -> "Path":
+        """Drop ``points[:before]`` — O(remaining) group splices, no re-scan.
+
+        The surviving prefixes are rebased through the evicted tip's group
+        inverse (``Q'_k = Q_{f·e}⁻¹ ⊗ Q_{f·e+k}``, one *batched* Chen
+        combine for the prefixes and one for their inverses), so not a
+        single increment is re-folded — ``repro.core.dispatch.
+        count_scan_steps`` reads zero across any eviction.  Queries on the
+        new path are in its own coordinates (old point ``before + i`` is
+        new point ``i``) and agree with a fresh build to a few ULPs.
+        Buffers shrink to the new length's power-of-two bucket, releasing
+        memory; at least 2 points (one increment) must survive.  Needs a
+        concrete ``Path``.
+        """
+        if not isinstance(before, int) or isinstance(before, bool) \
+                or before < 0:
+            raise ValueError(
+                f"evict(before=) must be a Python int >= 0, got {before!r}")
+        L = self._concrete_length("evict")
+        if before == 0:
+            return self
+        if before > L - 2:
+            raise ValueError(
+                f"evict(before={before}) would leave fewer than 2 of the "
+                f"{L} points — a path keeps at least one increment")
+        newL = L - before
+        f = self._f
+        C = tf.bucket_length(newL)
+        points, prefix, inv_prefix, length = _evict_kernel(
+            self.points, self.prefix, self.inv_prefix, self.length,
+            jnp.asarray(before, jnp.int32), C=C, M=f * (C - 1), f=f,
+            d=self.transformed_d, depth=self.depth)
         return dataclasses.replace(
             self, points=points, prefix=prefix, inv_prefix=inv_prefix,
             length=length)
@@ -490,7 +583,7 @@ class Path:
 
 _pytree_dataclass(Path,
                   data_fields=("points", "prefix", "inv_prefix", "length"),
-                  meta_fields=("depth", "transforms"))
+                  meta_fields=("depth", "transforms", "retention"))
 
 
 # ---------------------------------------------------------------------------
@@ -560,6 +653,11 @@ def coalesced_update(paths: Sequence[Path],
     points, prefix, inv, length = _update_kernel(
         points, prefix, inv, length, chunk, kvec, depth=p0.depth,
         lead_lag=p0.transforms.lead_lag)
-    return [dataclasses.replace(p, points=points[g], prefix=prefix[g],
-                                inv_prefix=inv[g], length=length[g])
-            for g, p in enumerate(prepared_paths)]
+    out: List[Path] = []
+    for g, p in enumerate(prepared_paths):
+        new = dataclasses.replace(p, points=points[g], prefix=prefix[g],
+                                  inv_prefix=inv[g], length=length[g])
+        if p.retention is not None and int(length[g]) > p.retention:
+            new = new.evict(before=int(length[g]) - p.retention)
+        out.append(new)
+    return out

@@ -256,8 +256,8 @@ def test_guard_survives_shape_coincidences():
 def test_losses_guard_catches_injected_densify(monkeypatch):
     """End-to-end regression: if the reduce path ever silently densifies,
     mmd2(streaming=True) must raise instead of quietly materialising."""
-    def densified(sX, sY, kernel, backend, rb, lam1, lam2, launch):
-        K = gram._gram_rows(sX, sY, kernel, backend, lam1, lam2, None)
+    def densified(sX, sY, kernel, backend, rb, g, launch=None):
+        K = gram._gram_rows(sX, sY, kernel, backend, g, None)
         return K.sum()
 
     monkeypatch.setattr(gram, "_reduce_rows", densified)

@@ -412,3 +412,108 @@ def test_interval_validation():
         p.update(jnp.zeros((0, 2)))
     with pytest.raises(ValueError, match="new points"):
         p.update(jnp.zeros((3, 5)))
+
+
+# ---------------------------------------------------------------------------
+# eviction & retention (ISSUE 10): drop history by group-inverse splices —
+# zero re-scans, O(retained) memory for endless streams
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pipeline", [TransformPipeline(),
+                                      TransformPipeline(lead_lag=True)],
+                         ids=["plain", "lead_lag"])
+def test_evict_matches_fresh_build(pipeline):
+    pts = _pts(90, 21, 3)
+    p = Path.from_points(pts, depth=3, transforms=pipeline).evict(before=7)
+    fresh = Path.from_points(pts[7:], depth=3, transforms=pipeline)
+    assert len(p) == len(fresh) == 14
+    assert p.capacity == fresh.capacity  # buffers shrank to the new bucket
+    for i, j in [(0, None), (0, 5), (2, 9), (4, 14)]:
+        np.testing.assert_allclose(p.signature(i, j), fresh.signature(i, j),
+                                   rtol=2e-5, atol=2e-6)
+    # the evicted path's full signature still matches the reference scan
+    np.testing.assert_allclose(
+        p.signature(),
+        signature(pts[7:][None], 3, transforms=pipeline)[0],
+        rtol=2e-5, atol=2e-6)
+
+
+def test_evict_is_combines_not_scans():
+    # distinctive (d, depth) so the evict kernel traces inside the counters
+    pts = _pts(91, 19, 4)
+    p = Path.from_points(pts, depth=3)
+    with dispatch.count_scan_steps() as scans, \
+            dispatch.count_combines() as combines:
+        pe = p.evict(before=5)
+    assert scans.total == 0          # not one increment re-folded
+    # two batched Chen combines over the shrunken store (C=16 -> M=15)
+    assert combines.total == 2 * (pe.capacity - 1)
+    np.testing.assert_allclose(
+        pe.signature(), signature(pts[5:][None], 3)[0],
+        rtol=2e-5, atol=2e-6)
+
+
+def test_evict_validation():
+    p = Path.from_points(_pts(92, 10, 2), depth=2)
+    assert p.evict(before=0) is p
+    for bad in (-1, 1.5, True):
+        with pytest.raises(ValueError, match="evict"):
+            p.evict(before=bad)
+    with pytest.raises(ValueError, match="at least one increment"):
+        p.evict(before=9)
+    p.evict(before=8)  # leaves exactly 2 points: fine
+
+
+def test_retention_caps_memory_with_zero_rescans():
+    cap = 16
+    p = Path.from_points(_pts(93, 8, 3), depth=2, retention=cap)
+    with dispatch.count_scan_steps() as scans:
+        history = np.asarray(p.points[:len(p)])
+        for step in range(12):
+            chunk = _pts(94 + step, 4, 3)
+            history = np.concatenate([history, np.asarray(chunk)])
+            p = p.update(chunk)
+            assert len(p) <= cap
+            assert p.capacity <= 2 * cap  # O(retention) memory, forever
+    # scans only ever folded chunk buckets, never the retained history
+    assert scans.total <= 2 * 4  # <= traces (2 shapes) x chunk bucket
+    np.testing.assert_allclose(
+        p.signature(), signature(history[-len(p):][None], 2)[0],
+        rtol=5e-5, atol=5e-6)
+
+
+def test_retention_validation():
+    pts = _pts(95, 10, 2)
+    for bad in (1, 0, -3, 2.5, True):
+        with pytest.raises(ValueError, match="retention"):
+            Path.from_points(pts, depth=2, retention=bad)
+    with pytest.raises(ValueError, match="retention"):
+        Path.from_points(pts, depth=2, retention=8)  # 10 points > cap 8
+    Path.from_points(pts, depth=2, retention=10)
+
+
+def test_coalesced_update_honours_retention():
+    ps = [Path.from_points(_pts(96 + i, 12, 2), depth=2, retention=14)
+          for i in range(3)]
+    chunks = [_pts(99 + i, 4, 2) for i in range(3)]
+    got = coalesced_update(ps, chunks)
+    for p, chunk, base in zip(got, chunks, range(3)):
+        assert len(p) == 14
+        full = np.concatenate([np.asarray(_pts(96 + base, 12, 2)),
+                               np.asarray(chunk)])
+        np.testing.assert_allclose(
+            p.signature(), signature(full[-14:][None], 2)[0],
+            rtol=5e-5, atol=5e-6)
+
+
+def test_gradients_flow_through_evict():
+    pts = _pts(97, 12, 2)
+
+    def loss(x):
+        return Path.from_points(x, depth=2).evict(before=4).signature().sum()
+
+    g = jax.grad(loss)(pts)
+    assert np.isfinite(np.asarray(g)).all()
+    # evicted points cancel through the inverse splice (up to f32 round-off)
+    np.testing.assert_allclose(np.asarray(g[:3]), 0.0, atol=1e-5)
+    assert float(jnp.abs(g[5:]).max()) > 0
